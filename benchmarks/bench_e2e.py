@@ -1,0 +1,104 @@
+"""Paper Fig. 7: end-to-end SLO attainment vs request rate on the four traces,
+Arrow vs baselines. Baseline deployments mirror §7.1:
+
+  vllm            PD-colocated, one big TP engine (1 instance × 32 chips,
+                  TP-scaling efficiency penalty)
+  vllm_disagg     static 1 prefill + 1 decode instance (TP=16 each)
+  distserve       static 4P+4D, lower engine efficiency (unmaintained engine)
+  arrow           8 stateless instances × 4 chips, adaptive scheduling
+
+Emits the max sustainable rate at 90% attainment per (trace, system) and the
+full attainment curves to results/e2e.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import Timer, emit, save_json
+from repro.configs import get_config
+from repro.core.slo import SLO
+from repro.sim import InstanceProfile, Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+SYSTEMS = {
+    "arrow": dict(policy="arrow", n_instances=8, n_prefill=4,
+                  profile=InstanceProfile(chips=4)),
+    "vllm": dict(policy="colocated", n_instances=1, n_prefill=1,
+                 profile=InstanceProfile(chips=32, flop_eff=0.4, mem_eff=0.6),
+                 token_budget=32768),
+    "vllm_disagg": dict(policy="minimal_load", n_instances=2, n_prefill=1,
+                        profile=InstanceProfile(chips=16, flop_eff=0.45,
+                                                mem_eff=0.65)),
+    "distserve": dict(policy="minimal_load", n_instances=8, n_prefill=4,
+                      profile=InstanceProfile(chips=4, flop_eff=0.25,
+                                              mem_eff=0.4)),
+}
+
+RATES = [1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 10.0, 12.0, 16.0, 20.0, 24.0, 28.0,
+         32.0, 40.0, 48.0]
+TARGET = 0.9
+
+
+def run_system(trace_name: str, sys_name: str, arch: str, duration: float,
+               rates=RATES):
+    cfg = get_config(arch)
+    p = TRACE_PRESETS[trace_name]
+    slo = SLO(p.slo_ttft, p.slo_tpot)
+    spec = SYSTEMS[sys_name]
+    curve = []
+    for rate in rates:
+        trace = load_trace(trace_name, rate_scale=rate, seed=0,
+                           duration=duration)
+        sim = Simulator(cfg, n_instances=spec["n_instances"],
+                        n_prefill=spec["n_prefill"], policy=spec["policy"],
+                        slo=slo, profile=spec["profile"],
+                        token_budget=spec.get("token_budget", 8192))
+        res = sim.run(trace)
+        curve.append({
+            "rate_scale": rate,
+            "req_s": len(trace) / max(duration, 1e-9),
+            "attainment": res.attainment,
+            "p90_ttft": res.p90("ttft"),
+            "p90_tpot": res.p90("tpot"),
+            "flips": res.flips,
+        })
+    return curve
+
+
+def max_sustainable(curve):
+    best = 0.0
+    for pt in curve:
+        if pt["attainment"] >= TARGET:
+            best = max(best, pt["req_s"])
+    return best
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--traces", nargs="*", default=list(TRACE_PRESETS))
+    args = ap.parse_args(argv)
+
+    out = {}
+    for trace_name in args.traces:
+        out[trace_name] = {}
+        sustain = {}
+        for sys_name in SYSTEMS:
+            with Timer() as t:
+                curve = run_system(trace_name, sys_name, args.arch,
+                                   args.duration)
+            out[trace_name][sys_name] = curve
+            sustain[sys_name] = max_sustainable(curve)
+            emit(f"e2e.{trace_name}.{sys_name}", t.us,
+                 f"max_rate@90%={sustain[sys_name]:.2f}req/s")
+        for base in ("vllm", "vllm_disagg"):
+            if sustain.get(base):
+                ratio = sustain["arrow"] / sustain[base]
+                emit(f"e2e.{trace_name}.arrow_vs_{base}", 0.0,
+                     f"speedup={ratio:.2f}x")
+    save_json("e2e", out)
+
+
+if __name__ == "__main__":
+    main()

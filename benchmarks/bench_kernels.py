@@ -1,0 +1,72 @@
+"""Pallas kernel micro-benchmarks: interpret-mode wall time vs the pure-jnp
+reference on CPU (correctness-weighted; TPU wall-time is out of scope on this
+container — see EXPERIMENTS.md §Roofline for the compiled-cost view)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+
+
+def timeit(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> None:
+    out = {}
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
+    B, H, Hk, S, D = 1, 4, 2, 256, 64
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hk, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hk, S, D), jnp.float32)
+    t_k = timeit(lambda *a: flash_prefill(*a, bq=128, bk=128, interpret=True),
+                 q, k, v)
+    t_r = timeit(jax.jit(flash_prefill_ref), q, k, v)
+    emit("kernel.flash_prefill.interp", t_k, f"ref_us={t_r:.1f}")
+    out["flash_prefill"] = {"interp_us": t_k, "ref_us": t_r}
+
+    from repro.kernels.paged_attention import (paged_attention,
+                                               paged_attention_ref)
+    qd = jax.random.normal(ks[3], (4, 8, 64), jnp.float32)
+    kp = jax.random.normal(ks[4], (64, 16, 2, 64), jnp.float32)
+    vp = jax.random.normal(ks[5], (64, 16, 2, 64), jnp.float32)
+    pt = jax.random.randint(ks[6], (4, 8), 0, 64)
+    ln = jnp.full((4,), 100, jnp.int32)
+    t_k = timeit(lambda *a: paged_attention(*a, interpret=True), qd, kp, vp, pt, ln)
+    t_r = timeit(jax.jit(paged_attention_ref), qd, kp, vp, pt, ln)
+    emit("kernel.paged_attention.interp", t_k, f"ref_us={t_r:.1f}")
+    out["paged_attention"] = {"interp_us": t_k, "ref_us": t_r}
+
+    from repro.kernels.ssd_scan import ssd_scan_op, ssd_scan_ref
+    x = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    la = -jnp.abs(jax.random.normal(ks[1], (1, 256, 4))) * 0.5
+    Bm = jax.random.normal(ks[2], (1, 256, 4, 64)) * 0.3
+    Cm = jax.random.normal(ks[3], (1, 256, 4, 64)) * 0.3
+    t_k = timeit(lambda *a: ssd_scan_op(*a, chunk=64, interpret=True), x, la, Bm, Cm)
+    t_r = timeit(jax.jit(ssd_scan_ref), x, la, Bm, Cm)
+    emit("kernel.ssd_scan.interp", t_k, f"ref_us={t_r:.1f}")
+    out["ssd_scan"] = {"interp_us": t_k, "ref_us": t_r}
+
+    from repro.kernels.rglru_scan import rglru_scan_op, rglru_scan_ref
+    la2 = -jnp.abs(jax.random.normal(ks[4], (2, 256, 512))) * 0.3
+    b2 = jax.random.normal(ks[5], (2, 256, 512))
+    t_k = timeit(lambda *a: rglru_scan_op(*a, bs=128, bw=512, interpret=True),
+                 la2, b2)
+    t_r = timeit(jax.jit(lambda a, b: rglru_scan_ref(a, b)), la2, b2)
+    emit("kernel.rglru_scan.interp", t_k, f"ref_us={t_r:.1f}")
+    out["rglru_scan"] = {"interp_us": t_k, "ref_us": t_r}
+
+    save_json("kernels", out)
+
+
+if __name__ == "__main__":
+    main()

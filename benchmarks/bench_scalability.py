@@ -1,0 +1,41 @@
+"""Paper Fig. 9: SLO attainment of SLO-Aware vs Minimal-Load under varying
+instance counts (scalability)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import Timer, emit, save_json
+from repro.configs import get_config
+from repro.core.slo import SLO
+from repro.sim import InstanceProfile, Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--rate", type=float, default=16.0)
+    args = ap.parse_args(argv)
+    cfg = get_config(args.arch)
+    p = TRACE_PRESETS["azure_code"]
+    trace = load_trace("azure_code", rate_scale=args.rate, seed=0,
+                       duration=args.duration)
+
+    out = {}
+    for n in (2, 4, 8, 16):
+        out[n] = {}
+        for strat in ("arrow", "minimal_load"):
+            with Timer() as t:
+                sim = Simulator(cfg, n_instances=n, n_prefill=max(n // 2, 1),
+                                policy=strat, slo=SLO(p.slo_ttft, p.slo_tpot),
+                                profile=InstanceProfile(chips=4))
+                res = sim.run(trace)
+            out[n][strat] = res.attainment
+            emit(f"scalability.n{n}.{strat}", t.us,
+                 f"attainment={res.attainment:.3f}")
+    save_json("scalability", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: CSV emission per the harness contract
+(``name,us_per_call,derived``) + result persistence."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save_json(name: str, obj) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(obj, indent=1))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.s * 1e6

@@ -1,0 +1,108 @@
+"""Roofline analysis (deliverable g): per (arch × shape × mesh) derive the
+three roofline terms from the dry-run records and identify the dominant
+bottleneck.
+
+  compute term    = HLO_FLOPs_per_device / (peak_FLOP/s per chip)
+  memory term     = HLO_bytes_per_device / HBM_bw per chip
+  collective term = collective_bytes_per_device / ICI link bw
+
+(dry-run cost analysis is per-device — each device is one chip.)
+MODEL_FLOPS: analytic 6·N·D (train) / 2·N_active·D + attention (serving),
+whole-cluster, divided by device count for the per-device useful-flops ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from benchmarks.common import emit, save_json
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun import load_results
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Whole-cluster useful model FLOPs for one step."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * B * S
+    if shape.kind == "prefill":
+        base = 2.0 * n_active * B * S
+        if cfg.family not in ("ssm",):
+            w = cfg.sliding_window
+            ctx = S / 2 if w is None else min(S / 2, w)
+            frac = 1.0
+            if cfg.family == "hybrid":
+                frac = cfg.hybrid.pattern.count("attn") / len(cfg.hybrid.pattern)
+            base += 4.0 * cfg.n_layers * frac * cfg.q_dim * B * S * ctx
+        return base
+    # decode: one token per sequence
+    base = 2.0 * n_active * B
+    if cfg.family not in ("ssm", "encdec"):
+        w = cfg.sliding_window or (cfg.long_context_window
+                                   if shape_name == "long_500k" else None)
+        ctx = S if w is None else min(S, w)
+        frac = 1.0
+        if cfg.family == "hybrid":
+            frac = cfg.hybrid.pattern.count("attn") / len(cfg.hybrid.pattern)
+        base += 4.0 * cfg.n_layers * frac * cfg.q_dim * B * ctx
+    return base
+
+
+def analyse(rec: dict) -> dict:
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    flops = rec["flops"]
+    bytes_ = rec["bytes_accessed"]
+    coll = sum(rec["collective_bytes"].values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    ratio = mf / max(flops * n_dev, 1e-9)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": flops * n_dev,
+        "useful_flops_ratio": ratio,
+        "collective_breakdown": rec["collective_bytes"],
+        "memory_per_device_gb": (rec["memory"]["argument_bytes"]
+                                 + rec["memory"]["temp_bytes"]) / 2**30,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    rows = []
+    for rec in load_results():
+        if rec.get("status") == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "dominant": "skipped"})
+            continue
+        if rec.get("status") != "ok":
+            continue
+        a = analyse(rec)
+        rows.append(a)
+        if rec["mesh"] == args.mesh:
+            emit(f"roofline.{a['arch']}.{a['shape']}",
+                 max(a["compute_s"], a["memory_s"], a["collective_s"]) * 1e6,
+                 f"dominant={a['dominant']};useful={a['useful_flops_ratio']:.2f};"
+                 f"comp={a['compute_s']*1e3:.2f}ms;mem={a['memory_s']*1e3:.2f}ms;"
+                 f"coll={a['collective_s']*1e3:.2f}ms")
+    save_json("roofline", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark driver — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  Fig.1/2  bench_trace_stats       workload diversity of synthesized traces
+  Fig.4    bench_load_difference   prefill load leads decode load
+  Fig.7    bench_e2e               Arrow vs vLLM / vLLM-disagg / DistServe
+  Fig.8    bench_ablation          SLO-aware vs minimal-load vs round-robin
+  Fig.9    bench_scalability       attainment vs instance count
+  (ours)   bench_kernels           Pallas kernels (interpret) vs jnp oracle
+  (ours)   roofline                terms from the dry-run records, if present
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    fast = os.environ.get("BENCH_FAST", "")
+    duration = "60" if fast else "120"
+
+    from benchmarks import (bench_ablation, bench_e2e, bench_flip_latency,
+                            bench_kernels, bench_load_difference,
+                            bench_scalability, bench_trace_stats)
+    print("name,us_per_call,derived")
+    bench_trace_stats.main()
+    bench_load_difference.main()
+    bench_e2e.main(["--duration", duration])
+    bench_ablation.main(["--duration", duration])
+    bench_scalability.main(["--duration", duration])
+    bench_flip_latency.main(["--duration", duration])
+    bench_kernels.main()
+    try:
+        from benchmarks import roofline
+        roofline.main([])
+    except Exception as e:  # noqa: BLE001 — dry-run records may be absent
+        print(f"roofline,0,skipped({type(e).__name__})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

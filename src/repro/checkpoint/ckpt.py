@@ -1,0 +1,58 @@
+"""Minimal msgpack checkpointing for pytrees of jnp arrays (params + opt
+state). Flat path-keyed layout; restores onto host then (re)shards at load."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):                      # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    flat = _flatten(tree)
+    payload = {k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                   "data": v.tobytes()} for k, v in flat.items()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), strict_map_key=False)
+
+    def restore(key_prefix, node):
+        if isinstance(node, dict):
+            return {k: restore(f"{key_prefix}{k}/", v) for k, v in node.items()}
+        if hasattr(node, "_fields"):
+            vals = {k: restore(f"{key_prefix}{k}/", getattr(node, k))
+                    for k in node._fields}
+            return type(node)(**vals)
+        if isinstance(node, (list, tuple)):
+            return type(node)(restore(f"{key_prefix}{i}/", v)
+                              for i, v in enumerate(node))
+        rec = payload[key_prefix[:-1]]
+        arr = np.frombuffer(rec["data"], dtype=rec["dtype"]).reshape(rec["shape"])
+        return jnp.asarray(arr)
+
+    return restore("", like)

@@ -1,0 +1,9 @@
+"""Arrow's core contribution: stateless instances, elastic instance pools and
+SLO-aware adaptive request/instance scheduling (paper §5)."""
+from repro.core.global_scheduler import GlobalScheduler, ScheduleOutcome  # noqa: F401
+from repro.core.local_scheduler import IterationPlan, LocalScheduler  # noqa: F401
+from repro.core.monitor import InstanceMonitor, InstanceStats  # noqa: F401
+from repro.core.pools import InstancePools, Pool  # noqa: F401
+from repro.core.request import Phase, Request, RequestState  # noqa: F401
+from repro.core.slo import SLO, SchedulerConfig  # noqa: F401
+from repro.core.ttft_predictor import TTFTPredictor  # noqa: F401

@@ -1,0 +1,252 @@
+"""Arrow global scheduler — Algorithms 1–4 of the paper plus the §5.5
+SLO-aware instance-scheduling triggers and the overload (decode-priority)
+guard. Engine-agnostic: drives any cluster exposing the ClusterView protocol
+(the discrete-event simulator and the real JAX engine both do).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Protocol
+
+from repro.core.monitor import InstanceMonitor
+from repro.core.pools import InstancePools, Pool
+from repro.core.request import Request
+from repro.core.slo import SLO, SchedulerConfig
+from repro.core.ttft_predictor import TTFTPredictor
+
+
+class ClusterView(Protocol):
+    """What the global scheduler needs to see of the cluster."""
+
+    def has_pending_prefill(self, iid: int) -> bool: ...
+    def has_pending_decode(self, iid: int) -> bool: ...
+
+
+@dataclass
+class ScheduleOutcome:
+    instance: int
+    flipped: Optional[int] = None      # instance moved between pools, if any
+    predicted_ttft: Optional[float] = None
+    via_fallback: bool = False
+
+
+class GlobalScheduler:
+    """SLO-aware request + instance scheduling over elastic pools."""
+
+    def __init__(self, pools: InstancePools, monitor: InstanceMonitor,
+                 predictor: TTFTPredictor, slo: SLO,
+                 cfg: SchedulerConfig, cluster: ClusterView):
+        self.pools = pools
+        self.monitor = monitor
+        self.predictor = predictor
+        self.slo = slo
+        self.cfg = cfg
+        self.cluster = cluster
+        # Eq. (1)/(2) bookkeeping: predicted prefill drain time per instance.
+        # The global scheduler dispatches every prefill, so it can maintain
+        # e_i exactly (Insight 1) instead of waiting for monitor scrapes.
+        self.prefill_ready_at: Dict[int, float] = {
+            iid: 0.0 for iid in pools.all_ids()}
+        # counters for the ablation/e2e reports
+        self.n_d2p_flips = 0
+        self.n_p2d_flips = 0
+        # beyond-paper proactive burst detector state
+        self._arrivals: list = []          # (t, input_len) ring
+        self.n_proactive_flips = 0
+
+    # ------------------------------------------------------------- helpers
+    def _predict(self, iid: int, input_len: int) -> float:
+        """Instance-aware prefill-time prediction (heterogeneous clusters use
+        PerInstancePredictor — paper §8; homogeneous predictors ignore iid)."""
+        p = self.predictor
+        if hasattr(p, "for_instance"):
+            return p.for_instance(iid).predict(input_len)
+        return p.predict(input_len)
+
+    def _prefill_delay(self, iid: int, now: float) -> float:
+        return max(self.prefill_ready_at[iid] - now, 0.0)
+
+    def _min_prefill_delay(self, ids, now):
+        best, best_d = None, None
+        for iid in ids:
+            d = self._prefill_delay(iid, now)
+            if best_d is None or d < best_d:
+                best, best_d = iid, d
+        return best, best_d
+
+    def _min_running_tokens(self, ids):
+        best, best_t = None, None
+        for iid in ids:
+            t = self.monitor.get(iid).running_tokens
+            if best_t is None or t < best_t:
+                best, best_t = iid, t
+        return best, best_t
+
+    def _decode_load_low(self) -> bool:
+        """Overload guard (§5.5): decode has priority; only pull decode
+        instances into prefill when decode load is comfortably low."""
+        ids = self.pools.decode_capable()
+        if not ids:
+            return True
+        for iid in ids:
+            s = self.monitor.get(iid)
+            if s.running_tokens > self.cfg.decode_low_load_frac * self.cfg.max_running_tokens:
+                return False
+            if s.avg_token_interval > self.cfg.tpot_threshold_frac * self.slo.tpot:
+                return False
+        return True
+
+    def account_prefill_dispatch(self, iid: int, now: float,
+                                 prefill_time: float) -> float:
+        """e_i = max(e_{i-1}, a_i) + p_i  (Eq. 2). Returns predicted TTFT."""
+        start = max(self.prefill_ready_at[iid], now)
+        self.prefill_ready_at[iid] = start + prefill_time
+        return self.prefill_ready_at[iid] - now
+
+    # ------------------------------------------------- Algorithm 3 (D → P)
+    def try_move_decode_to_prefill(self) -> Optional[int]:
+        n_decoders = self.pools.count(Pool.DECODE, Pool.P2D)
+        if n_decoders <= max(1, self.cfg.min_decode_instances):
+            return None
+        p2d = self.pools.members(Pool.P2D)
+        pick, _ = self._min_running_tokens(p2d if p2d else
+                                           self.pools.members(Pool.DECODE))
+        if pick is None:
+            return None
+        self.pools.flip_to_prefill(pick, self.cluster.has_pending_decode(pick))
+        self.n_d2p_flips += 1
+        return pick
+
+    # ------------------------------------------------- Algorithm 4 (P → D)
+    def try_move_prefill_to_decode(self, now: float = 0.0) -> Optional[int]:
+        n_prefillers = self.pools.count(Pool.PREFILL, Pool.D2P)
+        if n_prefillers <= max(1, self.cfg.min_prefill_instances):
+            return None
+        d2p = self.pools.members(Pool.D2P)
+        pick, _ = self._min_prefill_delay(
+            d2p if d2p else self.pools.members(Pool.PREFILL), now)
+        if pick is None:
+            return None
+        self.pools.flip_to_decode(pick, self.cluster.has_pending_prefill(pick))
+        self.n_p2d_flips += 1
+        return pick
+
+    # ------------------------------------------------- Algorithm 1 (prefill)
+    def schedule_prefill(self, req: Request, now: float) -> ScheduleOutcome:
+        ttft_budget = self.cfg.ttft_threshold_frac * self.slo.ttft
+        if self.cfg.proactive:
+            self._arrivals.append((now, req.input_len))
+
+        t1, d1 = self._min_prefill_delay(self.pools.members(Pool.PREFILL), now)
+        if t1 is not None and d1 + self._predict(t1, req.input_len) <= ttft_budget:
+            ttft = self.account_prefill_dispatch(
+                t1, now, self._predict(t1, req.input_len))
+            return ScheduleOutcome(t1, predicted_ttft=ttft)
+
+        t2, d2 = self._min_prefill_delay(self.pools.members(Pool.D2P), now)
+        if t2 is not None and d2 + self._predict(t2, req.input_len) <= ttft_budget:
+            ttft = self.account_prefill_dispatch(
+                t2, now, self._predict(t2, req.input_len))
+            return ScheduleOutcome(t2, predicted_ttft=ttft)
+
+        flipped = None
+        if self._decode_load_low():
+            t3 = self.try_move_decode_to_prefill()
+            if t3 is not None:
+                flipped = t3
+                ttft = self.account_prefill_dispatch(
+                    t3, now, self._predict(t3, req.input_len))
+                return ScheduleOutcome(t3, flipped=flipped, predicted_ttft=ttft)
+
+        # fall back to t1 (or t2 / any prefill-capable instance)
+        fb = t1 if t1 is not None else (t2 if t2 is not None else
+                                        self.pools.all_ids()[0])
+        ttft = self.account_prefill_dispatch(
+            fb, now, self._predict(fb, req.input_len))
+        return ScheduleOutcome(fb, predicted_ttft=ttft, via_fallback=True)
+
+    # ------------------------------------------------- Algorithm 2 (decode)
+    def schedule_decode(self, req: Request, now: float) -> ScheduleOutcome:
+        # If the prefill instance has itself been flipped to decode duty,
+        # keep the request there: the KV cache transfer vanishes.
+        pi = req.prefill_instance
+        if pi is not None and self.pools.pool_of(pi) in (Pool.DECODE, Pool.P2D):
+            return ScheduleOutcome(pi)
+
+        max_rt = self.cfg.max_running_tokens
+        tpot_budget = self.cfg.tpot_threshold_frac * self.slo.tpot
+
+        t1, rt1 = self._min_running_tokens(self.pools.members(Pool.DECODE))
+        if t1 is not None and rt1 + req.input_len <= max_rt and \
+                self.monitor.get(t1).avg_token_interval <= tpot_budget:
+            return ScheduleOutcome(t1)
+
+        t2, rt2 = self._min_running_tokens(self.pools.members(Pool.P2D))
+        if t2 is not None and rt2 + req.input_len <= max_rt and \
+                self.monitor.get(t2).avg_token_interval <= tpot_budget:
+            return ScheduleOutcome(t2)
+
+        t3 = self.try_move_prefill_to_decode(now)
+        if t3 is not None:
+            return ScheduleOutcome(t3, flipped=t3)
+
+        # fallback: lighter of t1/t2
+        if t1 is not None and (t2 is None or rt1 <= rt2):
+            return ScheduleOutcome(t1, via_fallback=True)
+        if t2 is not None:
+            return ScheduleOutcome(t2, via_fallback=True)
+        return ScheduleOutcome(self.pools.all_ids()[-1], via_fallback=True)
+
+    # ----------------------------------------- beyond-paper: proactive flip
+    def _proactive_check(self, now: float) -> None:
+        w = self.cfg.proactive_window_s
+        horizon = now - 10 * w
+        self._arrivals = [(t, n) for t, n in self._arrivals if t >= horizon]
+        if len(self._arrivals) < 8:
+            return
+        short = sum(n for t, n in self._arrivals if t >= now - w) / w
+        long = sum(n for t, n in self._arrivals) / (10 * w)
+        if long > 0 and short > self.cfg.proactive_ratio * long and \
+                self._decode_load_low():
+            if self.try_move_decode_to_prefill() is not None:
+                self.n_proactive_flips += 1
+
+    # --------------------------------------------- §5.5 monitor-driven flips
+    def on_monitor_tick(self, now: float) -> None:
+        if self.cfg.proactive:
+            self._proactive_check(now)
+        # (2) sustained TPOT breach on decode side -> add decode capacity.
+        # Only *pure* DECODE-pool instances vote: P→D members still draining
+        # prefill chunks are expected to show long intervals transiently.
+        ids = self.pools.decode_capable()
+        pure = self.pools.members(Pool.DECODE)
+        if pure:
+            breach = [i for i in pure
+                      if self.monitor.get(i).avg_token_interval >
+                      self.cfg.tpot_threshold_frac * self.slo.tpot]
+            if len(breach) * 2 >= len(pure) and breach:
+                self.try_move_prefill_to_decode(now)
+        # (3) idle prefill + busy decode -> free resources toward decode
+        if self.cfg.idle_prefill_flip:
+            busy = any(
+                self.monitor.get(i).running_tokens >
+                self.cfg.decode_low_load_frac * self.cfg.max_running_tokens
+                or self.monitor.get(i).avg_token_interval >
+                0.6 * self.cfg.tpot_threshold_frac * self.slo.tpot
+                for i in pure) if pure else False
+            if busy:
+                for iid in self.pools.members(Pool.PREFILL):
+                    if self.pools.count(Pool.PREFILL, Pool.D2P) <= \
+                            self.cfg.min_prefill_instances:
+                        break
+                    if not self.cluster.has_pending_prefill(iid) and \
+                            self._prefill_delay(iid, now) <= 0.0:
+                        self.pools.flip_to_decode(iid, False)
+                        self.n_p2d_flips += 1
+        # pool-drain transitions (black edges of Fig. 5)
+        for iid in self.pools.members(Pool.P2D):
+            if not self.cluster.has_pending_prefill(iid):
+                self.pools.on_prefill_drained(iid)
+        for iid in self.pools.members(Pool.D2P):
+            if not self.cluster.has_pending_decode(iid):
+                self.pools.on_decode_drained(iid)

@@ -1,0 +1,155 @@
+"""Local (per-instance) scheduler (§5.4): FCFS KV-migration queue + chunked
+prefill continuous batching. Decode requests are packed into the running batch
+first; remaining token budget is filled with prefill chunks, so instances in
+P→D / D→P pools start serving their new role immediately (no drain stall).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class PrefillWork:
+    rid: int
+    input_len: int
+    done: int = 0                 # chunked progress
+
+    @property
+    def remaining(self) -> int:
+        return self.input_len - self.done
+
+
+@dataclass
+class DecodeWork:
+    rid: int
+    context_len: int              # tokens currently in KV (grows by 1/iter)
+    remaining_out: int            # sim ground truth; engine: max-new-tokens
+
+
+@dataclass
+class IterationPlan:
+    decode_rids: List[int] = field(default_factory=list)
+    prefill_chunks: List[Tuple[int, int, int]] = field(default_factory=list)
+    # (rid, chunk_start, chunk_len)
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.decode_rids and not self.prefill_chunks
+
+
+class LocalScheduler:
+    """One per instance."""
+
+    def __init__(self, iid: int, *, token_budget: int = 8192,
+                 max_batch: int = 256, kv_capacity_tokens: int = 1 << 20,
+                 mixed_chunk_budget: int = 2048):
+        self.iid = iid
+        self.token_budget = token_budget       # tokens per iteration batch
+        # Sarathi-style: when decode requests share the batch, cap prefill
+        # chunk tokens so decode token intervals stay near the TPOT target.
+        self.mixed_chunk_budget = mixed_chunk_budget
+        self.max_batch = max_batch
+        self.kv_capacity = kv_capacity_tokens
+        self.migration_queue: deque = deque()  # FCFS: (rid, kv_tokens)
+        self.prefill_queue: "OrderedDict[int, PrefillWork]" = OrderedDict()
+        self.decode_running: "OrderedDict[int, DecodeWork]" = OrderedDict()
+        self.kv_used = 0
+
+    # ------------------------------------------------------------ enqueues
+    def enqueue_prefill(self, rid: int, input_len: int) -> None:
+        self.prefill_queue[rid] = PrefillWork(rid, input_len)
+        self.kv_used += input_len
+
+    def enqueue_migration(self, rid: int, kv_tokens: int, remaining_out: int) -> None:
+        self.migration_queue.append((rid, kv_tokens, remaining_out))
+
+    def admit_migrated(self, rid: int, kv_tokens: int, remaining_out: int) -> None:
+        """Migration finished: request joins the decode set."""
+        self.decode_running[rid] = DecodeWork(rid, kv_tokens, remaining_out)
+        self.kv_used += kv_tokens
+
+    def start_local_decode(self, rid: int, kv_tokens: int, remaining_out: int) -> None:
+        """Decode stays on the prefill instance (no transfer): KV already here."""
+        self.decode_running[rid] = DecodeWork(rid, kv_tokens, remaining_out)
+
+    # ------------------------------------------------------------- queries
+    def has_pending_prefill(self) -> bool:
+        return bool(self.prefill_queue)
+
+    def has_pending_decode(self) -> bool:
+        return bool(self.decode_running) or bool(self.migration_queue)
+
+    @property
+    def running_tokens(self) -> int:
+        return sum(w.context_len for w in self.decode_running.values())
+
+    @property
+    def prefill_backlog_tokens(self) -> int:
+        return sum(w.remaining for w in self.prefill_queue.values())
+
+    def can_accept_migration(self, kv_tokens: int) -> bool:
+        return self.kv_used + kv_tokens <= self.kv_capacity
+
+    # ------------------------------------------------------ iteration plan
+    def next_migration(self) -> Optional[Tuple[int, int, int]]:
+        """FCFS migration admission (§5.4), gated on free KV memory."""
+        if not self.migration_queue:
+            return None
+        rid, kv, rem = self.migration_queue[0]
+        if self.kv_used + kv > self.kv_capacity:
+            return None               # q2: blocked on memory — unpredictable
+        self.migration_queue.popleft()
+        return rid, kv, rem
+
+    def plan_iteration(self) -> IterationPlan:
+        """Chunked-prefill continuous batching: decode first, then prefill
+        chunks up to the token budget (Sarathi-style stall-free batching)."""
+        plan = IterationPlan()
+        budget = self.token_budget
+        slots = self.max_batch
+        for rid in self.decode_running:
+            if slots == 0 or budget == 0:
+                break
+            plan.decode_rids.append(rid)
+            slots -= 1
+            budget -= 1
+        if plan.decode_rids:
+            budget = min(budget, self.mixed_chunk_budget)
+        for rid, w in self.prefill_queue.items():
+            if slots == 0 or budget <= 0:
+                break
+            chunk = min(w.remaining, budget)
+            if chunk <= 0:
+                continue
+            plan.prefill_chunks.append((rid, w.done, chunk))
+            budget -= chunk
+            slots -= 1
+        return plan
+
+    # ------------------------------------------------------ state advance
+    def complete_prefill_chunk(self, rid: int, chunk_len: int) -> bool:
+        """Returns True when the request's prefill is now complete."""
+        w = self.prefill_queue[rid]
+        w.done += chunk_len
+        if w.remaining <= 0:
+            del self.prefill_queue[rid]
+            return True
+        return False
+
+    def complete_decode_iteration(self, rid: int) -> bool:
+        """One token produced. Returns True when the request finished."""
+        w = self.decode_running[rid]
+        w.context_len += 1
+        self.kv_used += 1             # decode grows the KV cache one token/iter
+        w.remaining_out -= 1
+        if w.remaining_out <= 0:
+            self.kv_used -= w.context_len
+            del self.decode_running[rid]
+            return True
+        return False
+
+    def release_prefill_kv(self, rid: int, kv_tokens: int) -> None:
+        """KV handed off to another instance (after migration completes)."""
+        self.kv_used = max(0, self.kv_used - kv_tokens)

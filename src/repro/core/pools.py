@@ -1,0 +1,69 @@
+"""Elastic instance pools (§5.2): PREFILL, DECODE, P→D, D→P with the Fig. 5
+transition diagram. Flipping = pool-membership move, zero wait/restart."""
+from __future__ import annotations
+
+import enum
+from typing import Dict, List, Set
+
+
+class Pool(enum.Enum):
+    PREFILL = "P"
+    DECODE = "D"
+    P2D = "P->D"      # scheduled for decode; still draining prefill work
+    D2P = "D->P"      # scheduled for prefill; still draining decode work
+
+
+class InstancePools:
+    def __init__(self, instance_ids, n_prefill: int):
+        """First ``n_prefill`` ids start in PREFILL, the rest in DECODE."""
+        ids = list(instance_ids)
+        self._pool: Dict[int, Pool] = {}
+        for i, iid in enumerate(ids):
+            self._pool[iid] = Pool.PREFILL if i < n_prefill else Pool.DECODE
+        self.flips = 0               # observability: pool moves performed
+
+    # ------------------------------------------------------------- queries
+    def pool_of(self, iid: int) -> Pool:
+        return self._pool[iid]
+
+    def members(self, pool: Pool) -> List[int]:
+        return [i for i, p in self._pool.items() if p is pool]
+
+    def all_ids(self) -> List[int]:
+        return list(self._pool)
+
+    def prefill_capable(self) -> List[int]:
+        """Instances currently accepting prefill requests: P ∪ D→P."""
+        return [i for i, p in self._pool.items() if p in (Pool.PREFILL, Pool.D2P)]
+
+    def decode_capable(self) -> List[int]:
+        return [i for i, p in self._pool.items() if p in (Pool.DECODE, Pool.P2D)]
+
+    def count(self, *pools: Pool) -> int:
+        return sum(1 for p in self._pool.values() if p in pools)
+
+    # --------------------------------------------------------- transitions
+    def move(self, iid: int, to: Pool) -> None:
+        if self._pool[iid] is not to:
+            self.flips += 1
+        self._pool[iid] = to
+
+    def flip_to_decode(self, iid: int, has_pending_prefill: bool) -> Pool:
+        """PREFILL/D→P instance is reassigned to decode duty."""
+        to = Pool.P2D if has_pending_prefill else Pool.DECODE
+        self.move(iid, to)
+        return to
+
+    def flip_to_prefill(self, iid: int, has_pending_decode: bool) -> Pool:
+        to = Pool.D2P if has_pending_decode else Pool.PREFILL
+        self.move(iid, to)
+        return to
+
+    def on_prefill_drained(self, iid: int) -> None:
+        """Black transition edge: P→D pool member finished its prefill queue."""
+        if self._pool[iid] is Pool.P2D:
+            self.move(iid, Pool.DECODE)
+
+    def on_decode_drained(self, iid: int) -> None:
+        if self._pool[iid] is Pool.D2P:
+            self.move(iid, Pool.PREFILL)

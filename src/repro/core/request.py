@@ -1,0 +1,64 @@
+"""Request model: a request is split into PREFILL and DECODE *sub-requests*
+(the paper's key reframing — phase is a property of the request, §5.2)."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class Phase(enum.Enum):
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    MIGRATING = "migrating"          # waiting for / doing KV-cache transfer
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float                   # seconds
+    input_len: int
+    output_len: int                  # trace ground truth (sim) / max tokens (engine)
+    state: RequestState = RequestState.QUEUED
+
+    # scheduling bookkeeping
+    prefill_instance: Optional[int] = None
+    decode_instance: Optional[int] = None
+
+    # measured outcomes
+    first_token_time: Optional[float] = None      # absolute time of o_1
+    finish_time: Optional[float] = None
+    token_times: list = field(default_factory=list)  # absolute times of o_2..o_m
+
+    # progress
+    prefill_done_tokens: int = 0     # chunked-prefill progress
+    decoded_tokens: int = 0          # output tokens produced so far (incl. o_1)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Eq. (3): decode-phase time / (m-1); 0 when m == 1."""
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if self.output_len <= 1:
+            return 0.0
+        return (self.finish_time - self.first_token_time) / (self.output_len - 1)
+
+    def meets_slo(self, slo) -> bool:
+        t1 = self.ttft
+        t2 = self.tpot
+        if t1 is None or t2 is None:
+            return False
+        return t1 <= slo.ttft and t2 <= slo.tpot

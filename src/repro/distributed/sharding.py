@@ -1,0 +1,161 @@
+"""Sharding rules: params Megatron-style over the ``model`` axis, activations
+batch-sharded over (``pod``,) ``data``. Rules are name+shape based and only
+shard a dimension when it divides the axis size (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")      # pod present only on the multi-pod mesh
+
+
+def batch_axes(mesh: Mesh):
+    ax = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def batch_size_divides(mesh: Mesh, b: int) -> bool:
+    n = 1
+    for a in BATCH_AXES:
+        n *= mesh.shape.get(a, 1)
+    return b % n == 0
+
+
+def _maybe(axis: str, dim: int, size: int) -> Optional[str]:
+    return axis if dim % size == 0 and size > 1 else None
+
+
+def param_spec(path: str, shape, msize: int) -> P:
+    """path: '/'-joined key path, e.g. 'layers/attn/wq'."""
+    leaf = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+    nd = len(shape)
+
+    def tail(spec_tail):
+        """Pad with leading Nones (stacked layer/group dims)."""
+        return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+    if leaf in ("embed",):                       # (V, d): shard vocab
+        return P(_maybe("model", shape[0], msize), None)
+    if leaf in ("unembed",):                     # (d, V)
+        return P(None, _maybe("model", shape[1], msize))
+    if leaf in ("pos",):
+        return P(None, None)
+    if leaf in ("wq", "wk", "wv"):               # (..., d, H*hd): shard out
+        return tail([None, _maybe("model", shape[-1], msize)])
+    if leaf == "wo":                             # (..., H*hd, d): shard in
+        return tail([_maybe("model", shape[-2], msize), None])
+    if leaf in ("w_gate", "w_up", "w_in"):
+        if parent == "moe":                      # (L, E, d, ff): expert-parallel
+            return tail([_maybe("model", shape[-3], msize), None, None])
+        return tail([None, _maybe("model", shape[-1], msize)])
+    if leaf in ("w_down", "w_out"):
+        if parent == "moe":                      # (L, E, ff, d)
+            return tail([_maybe("model", shape[-3], msize), None, None])
+        if parent == "":
+            pass
+        return tail([_maybe("model", shape[-2], msize), None])
+    if leaf == "router":                         # (L, d, E): replicate
+        return tail([None, None])
+    if leaf == "w_in" or leaf == "conv_w" or leaf == "conv_b":
+        return tail([None])
+    # ssm in-proj (L, d, X) handled by w_in above; ssm out-proj by w_out
+    if leaf in ("w_y", "w_x"):                   # (..., d, lw)
+        return tail([None, _maybe("model", shape[-1], msize)])
+    if leaf in ("w_a", "w_i"):                   # (..., lw, lw): shard out
+        return tail([None, _maybe("model", shape[-1], msize)])
+    if leaf == "w_o":                            # (..., lw, d): shard in
+        return tail([_maybe("model", shape[-2], msize), None])
+    return P(*([None] * nd))                     # norms, biases, A_log, ...
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    msize = model_size(mesh)
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        if hasattr(node, "_fields"):
+            return type(node)(**{k: walk(getattr(node, k), f"{prefix}{k}/")
+                                 for k in node._fields})
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, f"{prefix}{i}/")
+                              for i, v in enumerate(node))
+        return NamedSharding(mesh, param_spec(prefix[:-1], node.shape, msize))
+
+    return walk(params_shape)
+
+
+# --------------------------------------------------------------- activations
+
+
+def batch_spec(shape, mesh: Mesh, *, batch_dim: int = 0) -> P:
+    """Shard the batch dimension over (pod, data) when it divides."""
+    nd = len(shape)
+    ax = batch_axes(mesh)
+    if ax is None or not batch_size_divides(mesh, shape[batch_dim]):
+        return P(*([None] * nd))
+    spec = [None] * nd
+    spec[batch_dim] = ax
+    return P(*spec)
+
+
+def cache_spec(path: str, shape, mesh: Mesh, *, seq_shard: bool = False) -> P:
+    """KV/state cache leaves. k/v (L,B,C,Hk,D): batch over data, kv-heads over
+    model when divisible; states (L,B,...) batch over data + widest trailing
+    dim over model when divisible.
+
+    seq_shard (§Perf hillclimb B): when the kv-head count does not divide the
+    model axis, shard the cache *sequence* dim over 'model' instead —
+    flash-decoding-style distributed attention (GSPMD inserts the partial-
+    softmax reductions). Cuts per-device KV residency by model_size."""
+    leaf = path.split("/")[-1]
+    msize = model_size(mesh)
+    ax = batch_axes(mesh)
+    nd = len(shape)
+    bdim = 1 if nd >= 2 else 0
+    spec = [None] * nd
+    if leaf.startswith("pos_map"):
+        if batch_size_divides(mesh, shape[0]):
+            spec[0] = ax
+        return P(*spec)
+    if ax is not None and batch_size_divides(mesh, shape[bdim]):
+        spec[bdim] = ax
+    if leaf.startswith(("k", "v", "ck", "cv")) and nd == 5:
+        spec[3] = _maybe("model", shape[3], msize)
+        if spec[3] is None and seq_shard:
+            spec[2] = _maybe("model", shape[2], msize)
+    elif leaf.startswith("ssm") and nd == 5:     # (L,B,H,P,N)
+        spec[2] = _maybe("model", shape[2], msize)
+    elif leaf.startswith("conv") and nd == 4:    # (L,B,W-1,Ch)
+        spec[3] = _maybe("model", shape[3], msize)
+    elif leaf.startswith("h") and nd >= 3:       # (G,B,lw)
+        spec[-1] = _maybe("model", shape[-1], msize)
+    return P(*spec)
+
+
+def cache_shardings(cache_shape, mesh: Mesh, *, seq_shard: bool = False):
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}{k}/") for k, v in node.items()}
+        return NamedSharding(mesh, cache_spec(prefix[:-1], node.shape, mesh,
+                                              seq_shard=seq_shard))
+    return walk(cache_shape)
+
+
+def act_batch_axes_for(mesh: Mesh, global_batch: int):
+    """Mesh axes to pin activation batch dims to (None when B doesn't divide)."""
+    ax = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    if not ax or global_batch % n != 0:
+        return None
+    return ax

@@ -1,0 +1,217 @@
+"""Distributed step builders + dry-run input specs.
+
+``make_step_and_specs(cfg, shape, mesh)`` returns (fn, in_specs, in_shardings)
+ready for ``jax.jit(fn, in_shardings=...).lower(*in_specs).compile()`` — the
+multi-pod dry-run contract. Shapes never allocate: everything is
+ShapeDtypeStruct (params/caches via jax.eval_shape).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.optim import adamw_init, adamw_update
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _prep_cfg(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if cfg.family == "encdec" and cfg.max_seq_len < shape.seq_len:
+        cfg = cfg.replace(max_seq_len=shape.seq_len)  # stretch learned pos table
+    return cfg
+
+
+def window_for(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    if shape.name == "long_500k":
+        if cfg.long_context_window is None and cfg.family in ("dense", "vlm", "moe"):
+            raise ValueError(f"{cfg.arch_id} cannot run long_500k")
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def supports(cfg: ModelConfig, shape: InputShape) -> bool:
+    """DESIGN.md §4 skips: whisper has no sub-quadratic long-context variant."""
+    if shape.name == "long_500k":
+        if cfg.family == "encdec":
+            return False
+        if cfg.family in ("dense", "vlm", "moe") and cfg.long_context_window is None:
+            return False
+    return True
+
+
+def cache_capacity(cfg: ModelConfig, shape: InputShape) -> int:
+    w = window_for(cfg, shape)
+    cap = shape.seq_len
+    if w is not None:
+        cap = min(cap, w)
+    return cap
+
+
+# ------------------------------------------------------------- batch specs
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {"audio_embeds": _sds((B, cfg.encoder.n_frames, cfg.d_model), dt),
+                    "tokens": _sds((B, S), "int32")}
+        if cfg.family == "vlm":
+            return {"embeds": _sds((B, S, cfg.d_model), dt),
+                    "positions": _sds((B, 3, S), "int32"),
+                    "labels": _sds((B, S), "int32")}
+        return {"tokens": _sds((B, S), "int32")}
+    # decode: one new token against a seq_len-deep cache
+    b = {"token": _sds((B, 1), "int32"), "pos": _sds((B,), "int32")}
+    if cfg.family == "vlm":
+        b["positions"] = _sds((B, 3, 1), "int32")
+    return b
+
+
+def batch_shardings(specs, mesh: Mesh):
+    out = {}
+    for k, v in specs.items():
+        bd = 0
+        out[k] = NamedSharding(mesh, shd.batch_spec(v.shape, mesh, batch_dim=bd))
+    return out
+
+
+# --------------------------------------------------------------- steps
+
+
+def make_train_step(cfg: ModelConfig, shape: InputShape):
+    cfg = _prep_cfg(cfg, shape)
+    model = build_model(cfg)
+    w = cfg.sliding_window
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, window=w, remat=True))(params)
+        params, opt_state = adamw_update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: InputShape):
+    cfg = _prep_cfg(cfg, shape)
+    model = build_model(cfg)
+    w = window_for(cfg, shape)
+    cap = cache_capacity(cfg, shape)
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, cache_capacity=cap,
+                                      window=w)
+        # serving returns last-position logits only (sampler input)
+        return logits[:, -1], cache
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: InputShape):
+    cfg = _prep_cfg(cfg, shape)
+    model = build_model(cfg)
+    w = window_for(cfg, shape)
+
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch, window=w)
+
+    return model, decode_step
+
+
+# ------------------------------------------------------- dry-run assembly
+
+
+def build_dryrun(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 opts: frozenset = frozenset()):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs).
+
+    opts — §Perf hillclimb variants:
+      "act_shard"     pin activation batch dims to the mesh (models call
+                      with_sharding_constraint; fixes GSPMD de-sharding after
+                      the vocab-sharded embedding gather)
+      "kv_seq_shard"  shard decode KV caches over 'model' on the sequence dim
+                      when kv-heads don't divide (flash-decoding style)
+    """
+    cfg = _prep_cfg(cfg, shape)
+    if not supports(cfg, shape):
+        raise ValueError(f"{cfg.arch_id} x {shape.name} skipped (DESIGN.md §4)")
+    if "act_shard" in opts:
+        axes = shd.act_batch_axes_for(mesh, shape.global_batch)
+        if axes:
+            cfg = cfg.replace(act_batch_axes=axes)
+    if "seq_attn" in opts and shape.seq_len % shd.model_size(mesh) == 0:
+        cfg = cfg.replace(attn_seq_axis="model")
+    if "moe_ep" in opts and cfg.moe is not None and \
+            cfg.moe.n_experts % shd.model_size(mesh) == 0:
+        groups = 1
+        ax = shd.act_batch_axes_for(mesh, shape.global_batch)
+        if ax:
+            groups = 1
+            for a in ax:
+                groups *= mesh.shape[a]
+        cfg = cfg.replace(moe_ep_axis="model", moe_groups=groups)
+    seq_shard = "kv_seq_shard" in opts
+    bspecs = batch_specs(cfg, shape)
+    bshard = batch_shardings(bspecs, mesh)
+
+    if shape.kind == "train":
+        model, step = make_train_step(cfg, shape)
+        pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pshard = shd.param_shardings(pshape, mesh)
+        oshape = jax.eval_shape(adamw_init, pshape)
+        oshard = shd.param_shardings(oshape, mesh)
+        fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     donate_argnums=(0, 1))
+        return fn, (pshape, oshape, bspecs)
+
+    if shape.kind == "prefill":
+        model, step = make_prefill_step(cfg, shape)
+        pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pshard = shd.param_shardings(pshape, mesh)
+        fn = jax.jit(step, in_shardings=(pshard, bshard))
+        return fn, (pshape, bspecs)
+
+    # decode: build the cache spec via eval_shape of prefill at full depth
+    model, step = make_decode_step(cfg, shape)
+    pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = shd.param_shardings(pshape, mesh)
+    cap = cache_capacity(cfg, shape)
+    w = window_for(cfg, shape)
+    pf_specs = prefill_like_specs_for_decode(cfg, shape)
+    cshape = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, cache_capacity=cap, window=w)[1],
+        pshape, pf_specs)
+    cshard = shd.cache_shardings(cshape, mesh, seq_shard=seq_shard)
+    fn = jax.jit(step, in_shardings=(pshard, cshard,
+                                     batch_shardings(batch_specs(cfg, shape), mesh)),
+                 donate_argnums=(1,))
+    return fn, (pshape, cshape, batch_specs(cfg, shape))
+
+
+def prefill_like_specs_for_decode(cfg: ModelConfig, shape: InputShape):
+    """A small prefill batch spec used only to eval_shape the cache pytree
+    (cache capacity is what matters, not the prefill length)."""
+    B = shape.global_batch
+    dt = cfg.dtype
+    S = min(shape.seq_len, cache_capacity(cfg, shape))
+    if cfg.family == "ssm":
+        S = max(cfg.ssm.chunk, S - S % cfg.ssm.chunk)
+    if cfg.family == "encdec":
+        return {"audio_embeds": _sds((B, cfg.encoder.n_frames, cfg.d_model), dt),
+                "tokens": _sds((B, S), "int32")}
+    if cfg.family == "vlm":
+        return {"embeds": _sds((B, S, cfg.d_model), dt),
+                "positions": _sds((B, 3, S), "int32"),
+                "labels": _sds((B, S), "int32")}
+    return {"tokens": _sds((B, S), "int32")}

@@ -1,0 +1,3 @@
+from repro.engine.cluster import ArrowEngineCluster, ServeRequest  # noqa: F401
+from repro.engine.instance import EngineInstance  # noqa: F401
+from repro.engine.kv_slots import SlotKVCache  # noqa: F401

@@ -1,0 +1,206 @@
+"""Real-compute Arrow cluster: N EngineInstances (one JAX process, cooperative
+round-robin execution standing in for N accelerators), the Arrow global
+scheduler, instance monitor and KV transfers with actual array movement.
+
+Wall-clock time drives everything: the TTFT predictor is fitted from a real
+profiling pass at launch, token intervals are measured, and the scheduler
+makes the same decisions it would on a hardware cluster. Use small models/CPU.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (SLO, GlobalScheduler, InstanceMonitor, InstancePools,
+                        InstanceStats, Request, RequestState, SchedulerConfig,
+                        TTFTPredictor)
+from repro.engine.instance import EngineInstance
+from repro.models import build_model
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_offset: float = 0.0        # seconds after serve() start
+    # outcomes
+    req: Request = None
+    output_tokens: List[int] = field(default_factory=list)
+
+
+class ArrowEngineCluster:
+    def __init__(self, cfg: ModelConfig, *, n_instances: int = 2,
+                 n_prefill: int = 1, n_slots: int = 8, capacity: int = 256,
+                 slo: SLO = SLO(ttft=2.0, tpot=0.5),
+                 sched_cfg: Optional[SchedulerConfig] = None, seed: int = 0,
+                 params=None, chunk_tokens: Optional[int] = None):
+        import jax
+        self.cfg = cfg
+        if params is None:
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(seed))
+        self.instances: Dict[int, EngineInstance] = {
+            i: EngineInstance(i, cfg, params, n_slots=n_slots,
+                              capacity=capacity, chunk_tokens=chunk_tokens)
+            for i in range(n_instances)}
+        ids = list(self.instances)
+        self.pools = InstancePools(ids, n_prefill=n_prefill)
+        self.monitor = InstanceMonitor(ids)
+        # real profiling pass on instance 0 (instances are homogeneous here)
+        samples = self.instances[0].profile_prefill()
+        self.predictor = TTFTPredictor.fit(samples)
+        self.sched_cfg = sched_cfg or SchedulerConfig(
+            max_running_tokens=n_slots * capacity, monitor_interval=0.05)
+        self.gs = GlobalScheduler(self.pools, self.monitor, self.predictor,
+                                  slo, self.sched_cfg, self)
+        self._pending_migrations: List[tuple] = []   # (rid, src, dst)
+
+    # ------------------------------------------------------- ClusterView
+    def has_pending_prefill(self, iid: int) -> bool:
+        return self.instances[iid].local.has_pending_prefill()
+
+    def has_pending_decode(self, iid: int) -> bool:
+        return self.instances[iid].local.has_pending_decode()
+
+    # ------------------------------------------------------------- serve
+    def serve(self, reqs: List[ServeRequest], *, timeout: float = 300.0
+              ) -> List[ServeRequest]:
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0  # noqa: E731
+        pending = sorted(reqs, key=lambda r: r.arrival_offset)
+        live: Dict[int, ServeRequest] = {}
+        last_tick = 0.0
+        while (pending or live) and now() < timeout:
+            t = now()
+            # arrivals
+            while pending and pending[0].arrival_offset <= t:
+                sr = pending.pop(0)
+                sr.req = Request(sr.rid, arrival=t, input_len=len(sr.prompt),
+                                 output_len=sr.max_new_tokens)
+                out = self.gs.schedule_prefill(sr.req, t)
+                sr.req.prefill_instance = out.instance
+                sr.req.state = RequestState.PREFILLING
+                inst = self.instances[out.instance]
+                inst.local.enqueue_prefill(sr.rid, len(sr.prompt))
+                live[sr.rid] = sr
+            # migrations (instant data move + admission gate)
+            self._run_migrations(live, now)
+            # one iteration per instance (cooperative round-robin)
+            for iid, inst in self.instances.items():
+                self._step_instance(iid, inst, live, now)
+            # monitor tick
+            if now() - last_tick >= self.sched_cfg.monitor_interval:
+                last_tick = now()
+                self._monitor_tick(last_tick)
+            if not live and pending:
+                time.sleep(max(pending[0].arrival_offset - now(), 0.0))
+        return reqs
+
+    # ---------------------------------------------------------- internals
+    def _step_instance(self, iid, inst, live, now) -> None:
+        plan = inst.local.plan_iteration()
+        if plan.is_empty:
+            return
+        t_start = now()
+        # decode batch first
+        done_tokens = inst.run_decode_iteration(plan.decode_rids)
+        t_after = now()
+        for rid, tok in done_tokens.items():
+            sr = live.get(rid)
+            if sr is None:
+                continue
+            sr.output_tokens.append(tok)
+            sr.req.token_times.append(t_after)
+            sr.req.decoded_tokens += 1
+            if inst.local.complete_decode_iteration(rid):
+                sr.req.finish_time = t_after
+                sr.req.state = RequestState.FINISHED
+                inst.drop(rid)
+                live.pop(rid, None)
+        if done_tokens:
+            self.monitor.record_iteration(iid, t_after, len(done_tokens),
+                                          t_after - t_start)
+        # chunked prefill (§5.4): one chunk per iteration, decode-first batch
+        for rid, start, ln in plan.prefill_chunks[:1]:
+            sr = live.get(rid)
+            if sr is None:
+                continue
+            if start == 0 and not inst.kv.free:    # no slot: retry next round
+                continue
+            tok = inst.run_prefill_chunk(rid, sr.prompt[start:start + ln],
+                                         start, sr.req.input_len)
+            t_fin = now()
+            inst.local.complete_prefill_chunk(rid, ln)
+            if tok is None:                        # more chunks to go
+                continue
+            sr.output_tokens.append(tok)
+            sr.req.first_token_time = t_fin
+            # resync Eq.(2) bookkeeping against reality: predicted drain time
+            # of the instance = now + predicted time of the remaining queue
+            backlog = sum(self.predictor.predict(w.input_len)
+                          for w in inst.local.prefill_queue.values())
+            self.gs.prefill_ready_at[iid] = t_fin + backlog
+            if sr.max_new_tokens <= 1:
+                sr.req.finish_time = t_fin
+                sr.req.state = RequestState.FINISHED
+                inst.drop(rid)
+                live.pop(rid, None)
+                continue
+            target = self.gs.schedule_decode(sr.req, t_fin).instance
+            sr.req.decode_instance = target
+            rem = sr.max_new_tokens - 1
+            if target == iid:
+                sr.req.state = RequestState.DECODING
+                inst.local.start_local_decode(rid, sr.req.input_len, rem)
+            else:
+                sr.req.state = RequestState.MIGRATING
+                self.instances[target].local.enqueue_migration(
+                    rid, sr.req.input_len, rem)
+                self._pending_migrations.append((rid, iid, target))
+
+    def _run_migrations(self, live, now) -> None:
+        src_of = {r: (s, d) for (r, s, d) in self._pending_migrations}
+        for dst in self.instances:
+            dloc = self.instances[dst].local
+            while True:
+                item = dloc.next_migration()       # FCFS + memory gate (§5.4)
+                if item is None:
+                    break
+                mrid, kv_tokens, rem = item
+                src = src_of.get(mrid, (None, None))[0]
+                sr = live.get(mrid)
+                if sr is None or src is None:
+                    self._pending_migrations = [
+                        t for t in self._pending_migrations if t[0] != mrid]
+                    continue
+                # real KV movement between instances
+                k, v, L, last, gen = self.instances[src].export_kv(mrid)
+                ok = self.instances[dst].import_kv(mrid, k, v, L, last, gen)
+                if not ok:                          # no free slot: retry later
+                    dloc.migration_queue.appendleft((mrid, kv_tokens, rem))
+                    break
+                self.instances[src].drop(mrid)
+                dloc.admit_migrated(mrid, kv_tokens, rem)
+                sr.req.state = RequestState.DECODING
+                self._pending_migrations = [
+                    t for t in self._pending_migrations if t[0] != mrid]
+
+    def _monitor_tick(self, t: float) -> None:
+        for iid, inst in self.instances.items():
+            loc = inst.local
+            self.monitor.update_stats(InstanceStats(
+                instance_id=iid,
+                prefill_queue_len=len(loc.prefill_queue),
+                prefill_backlog_tokens=loc.prefill_backlog_tokens,
+                prefill_ready_at=self.gs.prefill_ready_at.get(iid, 0.0),
+                running_tokens=loc.running_tokens,
+                n_decode_running=len(loc.decode_running),
+                kv_tokens_used=loc.kv_used,
+                kv_tokens_capacity=loc.kv_capacity,
+            ))
+        self.gs.on_monitor_tick(t)

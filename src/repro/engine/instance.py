@@ -1,0 +1,178 @@
+"""A stateless engine instance: real JAX compute (dense-family models), a
+slot-granular KV cache and the Arrow local scheduler. "Stateless" in the
+paper's sense — the instance carries no prefill/decode role; it executes
+whatever sub-requests the global scheduler hands it."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.local_scheduler import LocalScheduler
+from repro.engine.kv_slots import SlotKVCache
+from repro.models import build_model
+
+
+class EngineInstance:
+    def __init__(self, iid: int, cfg: ModelConfig, params, *,
+                 n_slots: int = 8, capacity: int = 256,
+                 chunk_tokens: Optional[int] = None):
+        assert cfg.family in ("dense",), \
+            "real engine path supports dense-family; other families are " \
+            "served via the simulator cost model (DESIGN.md §2)"
+        self.iid = iid
+        self.cfg = cfg
+        self.params = params
+        self.model = build_model(cfg)
+        self.capacity = capacity
+        self.kv = SlotKVCache(cfg.n_layers, n_slots, capacity,
+                              cfg.n_kv_heads, cfg.head_dim_,
+                              jnp.dtype(cfg.dtype))
+        self.local = LocalScheduler(
+            iid, token_budget=chunk_tokens or capacity,
+            mixed_chunk_budget=chunk_tokens or 2048,
+            kv_capacity_tokens=n_slots * capacity)
+        self._prefill_fn = jax.jit(
+            lambda p, b: self.model.prefill(p, b, cache_capacity=capacity))
+        self._decode_fn = jax.jit(self.model.decode)
+        from repro.models import dense as _dense
+        self._chunk_fn = jax.jit(
+            lambda p, cache, x, off: _dense.prefill_chunk(cfg, p, cache, x, off))
+        # request bookkeeping
+        self.last_token: Dict[int, int] = {}
+        self.generated: Dict[int, List[int]] = {}
+
+    # ----------------------------------------------------------- prefill
+    def run_prefill(self, rid: int, prompt: np.ndarray) -> int:
+        """Whole-prompt prefill; returns the first output token (o_1).
+        Prompts are right-padded to 32-token buckets so jit traces are reused
+        across lengths (causal masking keeps the live positions exact)."""
+        S = len(prompt)
+        S_pad = min(-(-S // 32) * 32, self.capacity)
+        padded = np.zeros((S_pad,), np.int32)
+        padded[:S] = prompt
+        batch = {"tokens": jnp.asarray(padded)[None]}
+        logits, cache = self._prefill_fn(self.params, batch)
+        slot = self.kv.alloc(rid)
+        assert slot is not None, "no free KV slots"
+        self.kv.place(rid, cache["k"][:, 0], cache["v"][:, 0], S)
+        tok = int(jnp.argmax(logits[0, S - 1, :self.cfg.vocab_size]))
+        self.last_token[rid] = tok
+        self.generated[rid] = [tok]
+        return tok
+
+    def run_prefill_chunk(self, rid: int, chunk: np.ndarray, offset: int,
+                          total_len: int) -> Optional[int]:
+        """Chunked prefill (§5.4): process prompt tokens [offset, offset+len)
+        against this request's slot cache. Returns o_1 on the final chunk,
+        else None. Chunk lengths are bucketed to 32 for jit reuse."""
+        from repro.models import dense as _dense
+        if offset == 0:
+            slot = self.kv.alloc(rid)
+            assert slot is not None, "no free KV slots"
+        s = self.kv.slot_of[rid]
+        ln = len(chunk)
+        ln_pad = min(-(-ln // 32) * 32, self.capacity - offset)
+        padded = np.zeros((ln_pad,), np.int32)
+        padded[:ln] = chunk
+        x = _dense.embed_tokens(self.cfg, self.params,
+                                jnp.asarray(padded)[None])
+        sub = {"k": self.kv.k[:, s:s + 1], "v": self.kv.v[:, s:s + 1],
+               "pos_map": self.kv.pos_map[s:s + 1]}
+        logits, sub = self._chunk_fn(self.params, sub, x,
+                                     jnp.int32(offset))
+        # write back; invalidate pad positions in the pos_map
+        pm = np.array(sub["pos_map"][0])          # writable copy
+        pm[offset + ln: offset + ln_pad] = -1
+        self.kv.k = self.kv.k.at[:, s].set(sub["k"][:, 0])
+        self.kv.v = self.kv.v.at[:, s].set(sub["v"][:, 0])
+        self.kv.pos_map = self.kv.pos_map.at[s].set(jnp.asarray(pm))
+        # progress marker (also keeps the batched dummy-write in
+        # run_decode_iteration aimed at the next — about to be overwritten —
+        # position while this request is mid-prefill)
+        self.kv.len_of[rid] = offset + ln
+        if offset + ln >= total_len:
+            self.kv.len_of[rid] = total_len
+            tok = int(jnp.argmax(logits[0, ln - 1, :self.cfg.vocab_size]))
+            self.last_token[rid] = tok
+            self.generated[rid] = [tok]
+            return tok
+        return None
+
+    # ------------------------------------------------------------ decode
+    def run_decode_iteration(self, rids: List[int]) -> Dict[int, int]:
+        """One token for each running request. Returns rid -> token."""
+        if not rids:
+            return {}
+        B = self.kv.n_slots
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        # Inactive-but-occupied slots (e.g. parked awaiting migration) still
+        # get a batched dummy write; aim it at the slot's own next position,
+        # which any real future decode overwrites before attending to it.
+        for rid, s in self.kv.slot_of.items():
+            pos[s] = min(self.kv.len_of.get(rid, 0), self.capacity - 1)
+        for rid in rids:
+            s = self.kv.slot_of[rid]
+            tokens[s, 0] = self.last_token[rid]
+            pos[s] = self.kv.len_of[rid]
+            active[s] = True
+        batch = {"token": jnp.asarray(tokens), "pos": jnp.asarray(pos)}
+        logits, cache = self._decode_fn(self.params,
+                                        self.kv.as_model_cache(), batch)
+        self.kv.update_from_model_cache(cache)
+        out: Dict[int, int] = {}
+        arg = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size], axis=-1))
+        for rid in rids:
+            s = self.kv.slot_of[rid]
+            tok = int(arg[s])
+            self.kv.advance(rid)
+            self.last_token[rid] = tok
+            self.generated[rid].append(tok)
+            out[rid] = tok
+        return out
+
+    # --------------------------------------------------------- transfer
+    def export_kv(self, rid: int):
+        k, v, L = self.kv.extract(rid)
+        return np.asarray(k), np.asarray(v), L, self.last_token[rid], \
+            self.generated[rid]
+
+    def import_kv(self, rid: int, k, v, L: int, last_token: int,
+                  generated: List[int]) -> bool:
+        slot = self.kv.alloc(rid)
+        if slot is None:
+            return False
+        self.kv.place(rid, jnp.asarray(k), jnp.asarray(v), L)
+        self.last_token[rid] = last_token
+        self.generated[rid] = list(generated)
+        return True
+
+    def drop(self, rid: int) -> None:
+        if rid in self.kv.slot_of:
+            self.kv.release(rid)
+        self.last_token.pop(rid, None)
+
+    # -------------------------------------------------------- profiling
+    def profile_prefill(self, lengths=(16, 32, 64, 128)) -> List[Tuple[int, float]]:
+        """Real wall-clock profiling pass for the TTFT predictor (paper §5.3:
+        'profiles each instance's prefill processing capability when the
+        cluster is first launched')."""
+        samples = []
+        for L in lengths:
+            if L > self.capacity:
+                continue
+            prompt = np.ones((L,), np.int32)
+            self.run_prefill(-1, prompt)          # warm-up/compile
+            self.drop(-1)
+            t0 = time.perf_counter()
+            self.run_prefill(-1, prompt)
+            dt = time.perf_counter() - t0
+            self.drop(-1)
+            samples.append((L, dt))
+        return samples

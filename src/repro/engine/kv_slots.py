@@ -1,0 +1,70 @@
+"""Slot-granular batched KV cache for the real engine.
+
+Layout mirrors the model cache ({"k","v": (L, B_slots, C, Hk, D), "pos_map":
+(B_slots, C)}), so ``model.decode`` runs directly on it. Slots are the
+engine's unit of admission (the Pallas paged_attention kernel gives the
+page-granular variant; at engine scale on CPU, slot granularity keeps the
+JAX arrays static-shaped while remaining a faithful continuous-batching
+memory manager)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class SlotKVCache:
+    def __init__(self, n_layers: int, n_slots: int, capacity: int,
+                 n_kv_heads: int, head_dim: int, dtype=jnp.float32):
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.k = jnp.zeros((n_layers, n_slots, capacity, n_kv_heads, head_dim), dtype)
+        self.v = jnp.zeros_like(self.k)
+        self.pos_map = jnp.full((n_slots, capacity), -1, jnp.int32)
+        self.free = list(range(n_slots))
+        self.slot_of: Dict[int, int] = {}       # rid -> slot
+        self.len_of: Dict[int, int] = {}        # rid -> context length
+
+    # ------------------------------------------------------------- alloc
+    def alloc(self, rid: int) -> Optional[int]:
+        if not self.free:
+            return None
+        s = self.free.pop()
+        self.slot_of[rid] = s
+        return s
+
+    def release(self, rid: int) -> None:
+        s = self.slot_of.pop(rid)
+        self.len_of.pop(rid, None)
+        self.pos_map = self.pos_map.at[s].set(-1)
+        self.free.append(s)
+
+    # ------------------------------------------------------------- write
+    def place(self, rid: int, k_seq, v_seq, length: int) -> None:
+        """k_seq/v_seq (L, S, Hk, D) from a prefill cache (len S >= length)."""
+        s = self.slot_of[rid]
+        S = min(length, self.capacity)
+        self.k = self.k.at[:, s, :S].set(k_seq[:, :S])
+        self.v = self.v.at[:, s, :S].set(v_seq[:, :S])
+        pm = np.full(self.capacity, -1, np.int32)
+        pm[:S] = np.arange(S)
+        self.pos_map = self.pos_map.at[s].set(jnp.asarray(pm))
+        self.len_of[rid] = length
+
+    def extract(self, rid: int):
+        """For KV transfer to another instance: (k (L,S,Hk,D), v, length)."""
+        s = self.slot_of[rid]
+        L = self.len_of[rid]
+        return self.k[:, s, :L], self.v[:, s, :L], L
+
+    def as_model_cache(self):
+        return {"k": self.k, "v": self.v, "pos_map": self.pos_map}
+
+    def update_from_model_cache(self, cache) -> None:
+        self.k, self.v, self.pos_map = cache["k"], cache["v"], cache["pos_map"]
+        for rid in self.len_of:
+            self.len_of[rid] += 0  # lengths advance via advance()
+
+    def advance(self, rid: int) -> None:
+        self.len_of[rid] += 1

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving engine's compute hot spots.
+
+Each subpackage: ``<name>.py`` (pl.pallas_call + BlockSpec), ``ops.py`` (jit'd
+wrapper, interpret-mode on CPU), ``ref.py`` (pure-jnp oracle):
+  flash_prefill   — chunked-prefill flash attention (causal + sliding window, GQA)
+  paged_attention — decode attention over a paged KV pool (scalar-prefetch page table)
+  ssd_scan        — Mamba2 SSD chunked scan (VMEM-carried inter-chunk state)
+  rglru_scan      — RG-LRU diagonal linear recurrence (VPU scan, width-tiled)
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.flash_prefill.flash_prefill import flash_prefill  # noqa: F401
+from repro.kernels.flash_prefill.ops import flash_prefill_op  # noqa: F401
+from repro.kernels.flash_prefill.ref import flash_prefill_ref  # noqa: F401

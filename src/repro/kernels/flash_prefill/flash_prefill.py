@@ -1,0 +1,126 @@
+"""Flash attention Pallas TPU kernel for (chunked) prefill.
+
+Design (TPU-native, not a CUDA port):
+  * grid = (B, H, num_q_blocks, num_kv_blocks); last axis "arbitrary"
+    (sequential) so the online-softmax running state lives in VMEM scratch
+    across kv iterations — the TPU grid is executed sequentially per core, so
+    scratch carries state the way a CUDA kernel would carry registers.
+  * BlockSpecs tile q/o as (1, 1, bq, D) and k/v as (1, 1, bk, D); the kv-head
+    index map folds GQA (q head h reads kv head h // (H//Hk)), so no
+    repeat-interleave materialisation of K/V ever happens in HBM.
+  * MXU alignment: bq/bk default 128 and D is a multiple of 128 for all
+    assigned archs except whisper (64) and stablelm (160) — Mosaic pads the
+    lane dim; correctness is unaffected.
+  * Causal + sliding-window masking is positional (q_offset supports chunked
+    prefill against an existing KV prefix); fully-masked kv blocks are skipped
+    via pl.when on block bounds.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, q_offset: int, window: Optional[int],
+            causal: bool, sm_scale: float, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq + q_offset
+    k_start = ik * bk
+
+    # block-level skip: block is live unless causal/window excludes all of it
+    live = True
+    if causal:
+        live = k_start <= q_start + bq - 1
+    if window is not None:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                               # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                          # (bq, 1)
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        acc_scr[...] = acc
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q_offset", "window", "causal", "bq", "bk", "interpret"))
+def flash_prefill(q, k, v, *, q_offset: int = 0, window: Optional[int] = None,
+                  causal: bool = True, bq: int = 128, bk: int = 128,
+                  interpret: bool = False):
+    """q (B,H,Sq,D); k,v (B,Hk,T,D) -> (B,H,Sq,D). See ref.py for semantics."""
+    B, H, Sq, D = q.shape
+    Hk, T = k.shape[1], k.shape[2]
+    bq = min(bq, Sq)
+    bk = min(bk, T)
+    assert Sq % bq == 0 and T % bk == 0, (Sq, bq, T, bk)
+    grid = (B, H, Sq // bq, T // bk)
+    G = H // Hk
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, q_offset=q_offset, window=window, causal=causal,
+        sm_scale=1.0 / math.sqrt(D), num_kv_blocks=T // bk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (col 0 used)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denom
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

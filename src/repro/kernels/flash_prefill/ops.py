@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the flash prefill kernel.
+
+``flash_prefill_op`` takes model-layout tensors (B, S, H, D) and handles the
+(B, H, S, D) kernel layout, GQA head mapping and interpret-mode selection
+(CPU: interpret=True; TPU: compiled Mosaic kernel).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_prefill.flash_prefill import flash_prefill
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_prefill_op(q, k, v, *, q_offset: int = 0,
+                     window: Optional[int] = None, causal: bool = True,
+                     bq: int = 128, bk: int = 128,
+                     interpret: Optional[bool] = None):
+    """q (B,S,H,D); k,v (B,T,Hk,D) -> (B,S,H,D)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_prefill(qt, kt, vt, q_offset=q_offset, window=window,
+                      causal=causal, bq=bq, bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

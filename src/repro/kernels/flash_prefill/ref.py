@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash (chunked-)prefill attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, *, q_offset: int = 0,
+                      window: Optional[int] = None, causal: bool = True):
+    """q (B,H,Sq,D); k,v (B,Hk,T,D). Query row i has absolute position
+    q_offset+i; kv column j has absolute position j (chunked prefill: the
+    query chunk starts at q_offset into the already-filled KV).
+
+    Returns (B,H,Sq,D) in q.dtype.
+    """
+    B, H, Sq, D = q.shape
+    Hk = k.shape[1]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    ok = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

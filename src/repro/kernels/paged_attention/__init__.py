@@ -1,0 +1,3 @@
+from repro.kernels.paged_attention.ops import paged_attention_op  # noqa: F401
+from repro.kernels.paged_attention.paged_attention import paged_attention  # noqa: F401
+from repro.kernels.paged_attention.ref import paged_attention_ref  # noqa: F401

@@ -1,0 +1,16 @@
+"""Jit'd wrapper: interpret on CPU, Mosaic on TPU."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+
+
+def paged_attention_op(q, k_pages, v_pages, page_table, lengths, *,
+                       interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return paged_attention(q, k_pages, v_pages, page_table, lengths,
+                           interpret=interpret)

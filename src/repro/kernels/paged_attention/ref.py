@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """q (B,H,D); k_pages/v_pages (P, page, Hk, D); page_table (B, MP) int32;
+    lengths (B,) int32. Returns (B,H,D)."""
+    B, H, D = q.shape
+    page = k_pages.shape[1]
+    Hk = k_pages.shape[2]
+    MP = page_table.shape[1]
+    G = H // Hk
+    # gather into dense (B, MP*page, Hk, D)
+    k = k_pages[page_table].reshape(B, MP * page, Hk, D)
+    v = v_pages[page_table].reshape(B, MP * page, Hk, D)
+    qg = q.reshape(B, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) / math.sqrt(D)
+    pos = jnp.arange(MP * page)[None]
+    s = jnp.where((pos < lengths[:, None])[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.rglru_scan.ops import rglru_scan_op  # noqa: F401
+from repro.kernels.rglru_scan.ref import rglru_scan_ref  # noqa: F401
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan  # noqa: F401

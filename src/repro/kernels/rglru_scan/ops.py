@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the RG-LRU scan kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan
+
+
+def rglru_scan_op(log_a, gated, h0=None, *, bs: int = 128, bw: int = 512,
+                  interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    if h0 is None:
+        h0 = jnp.zeros(log_a.shape[::2], jnp.float32)  # (B, W)
+    return rglru_scan(log_a.astype(jnp.float32), gated.astype(jnp.float32),
+                      h0, bs=bs, bw=bw, interpret=interpret)

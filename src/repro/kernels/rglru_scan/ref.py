@@ -1,0 +1,22 @@
+"""Oracle for the RG-LRU linear recurrence (associative-scan based — a
+different algorithm from the kernel's sequential in-VMEM scan)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(log_a, gated, h0=None):
+    """log_a, gated (B,S,W) f32. h_t = exp(log_a_t) h_{t-1} + gated_t.
+    Returns (h (B,S,W), h_final (B,W))."""
+    a = jnp.exp(log_a)
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    acc_a, h = lax.associative_scan(comb, (a, gated), axis=1)
+    if h0 is not None:
+        h = h + acc_a * h0[:, None, :]
+    return h, h[:, -1]

@@ -1,0 +1,79 @@
+"""RG-LRU (Griffin/RecurrentGemma) diagonal linear recurrence — Pallas TPU kernel.
+
+TPU adaptation: the recurrence h_t = a_t ⊙ h_{t-1} + b_t is elementwise over
+the LRU width, so it maps to the VPU, not the MXU. The kernel tiles the width
+across a parallel grid axis (lane dimension, 128-aligned) and walks the
+sequence axis sequentially, carrying h in VMEM scratch — one HBM read per
+input element and one write per output element, i.e. the memory-bound roofline
+for a scan. (The gate projections that *produce* log_a/gated are plain matmuls
+and stay in XLA.)
+
+grid = (B, W // bw, S // bs)  (sequence axis innermost/sequential)
+  log_a, gated (B, S, W)   blocks (1, bs, bw)
+  h0 (B, W)                block (1, bw)
+outputs: h (B, S, W) blocks (1, bs, bw); h_final (B, W) block (1, bw)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(la_ref, b_ref, h0_ref, y_ref, hout_ref, h_scr, *, bs: int,
+            num_sblocks: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    def step(i, h):
+        a = jnp.exp(la_ref[0, i, :].astype(jnp.float32))
+        b = b_ref[0, i, :].astype(jnp.float32)
+        h = a * h[0] + b
+        y_ref[0, i, :] = h.astype(y_ref.dtype)
+        return h[None]
+
+    h = lax.fori_loop(0, bs, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(s == num_sblocks - 1)
+    def _final():
+        hout_ref[...] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bw", "interpret"))
+def rglru_scan(log_a, gated, h0, *, bs: int = 128, bw: int = 512,
+               interpret: bool = False):
+    """log_a, gated (B,S,W); h0 (B,W). Returns (h (B,S,W), h_final (B,W))."""
+    B, S, W = log_a.shape
+    bs = min(bs, S)
+    bw = min(bw, W)
+    assert S % bs == 0 and W % bw == 0, (S, bs, W, bw)
+    grid = (B, W // bw, S // bs)
+    kernel = functools.partial(_kernel, bs=bs, num_sblocks=S // bs)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b, iw, i_s: (b, i_s, iw)),
+            pl.BlockSpec((1, bs, bw), lambda b, iw, i_s: (b, i_s, iw)),
+            pl.BlockSpec((1, bw), lambda b, iw, i_s: (b, iw)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bw), lambda b, iw, i_s: (b, i_s, iw)),
+            pl.BlockSpec((1, bw), lambda b, iw, i_s: (b, iw)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(log_a, gated, h0)
+    return y, hout

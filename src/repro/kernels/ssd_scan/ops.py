@@ -1,0 +1,30 @@
+"""Jit'd wrapper: model layout (B,S,H,P) -> kernel layout (B,H,nc,Q,P)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+def ssd_scan_op(x, la, Bm, Cm, chunk: int, *, interpret: Optional[bool] = None):
+    """x (B,S,H,P) already dt-scaled; la (B,S,H); Bm/Cm (B,S,H,N) per-head.
+    Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, S, H, P = x.shape
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def blk(a):
+        # (B,S,H,...) -> (B,H,nc,Q,...)
+        a = jnp.moveaxis(a, 2, 1)
+        return a.reshape((B, H, nc, chunk) + a.shape[3:])
+
+    y, h = ssd_scan(blk(x).astype(jnp.float32), blk(la).astype(jnp.float32),
+                    blk(Bm).astype(jnp.float32), blk(Cm).astype(jnp.float32),
+                    interpret=interpret)
+    y = jnp.moveaxis(y.reshape(B, H, S, P), 1, 2)
+    return y, h

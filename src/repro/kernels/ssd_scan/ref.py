@@ -1,0 +1,32 @@
+"""Oracle for the SSD chunked scan: a *sequential* (non-chunked) state-space
+recurrence — an independent algorithm from the kernel's chunked form, so the
+comparison validates the chunking algebra itself.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(x, la, Bm, Cm, h0=None):
+    """x (B,S,H,P): inputs already scaled by dt; la (B,S,H): log decay
+    (dt * A, negative); Bm/Cm (B,S,H,N) per-head (pre-expanded).
+
+    h_t = exp(la_t) * h_{t-1} + B_t ⊗ x_t ;  y_t = C_t · h_t
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, xs):
+        xt, lat, bt, ct = xs                       # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        h = jnp.exp(lat)[..., None, None] * h + xt[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(la, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,97 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): the original CUDA
+kernel tiles over thread blocks with warp-level matmuls; here each grid step
+processes one (batch, head, chunk) with the chunk-local quadratic term on the
+MXU and the inter-chunk recurrent state carried in VMEM scratch across the
+sequential chunk axis — the state never round-trips to HBM between chunks.
+
+grid = (B, H, num_chunks)   (last axis sequential)
+  x  (B,H,nc,Q,P)  inputs pre-scaled by dt      block (1,1,1,Q,P)
+  la (B,H,nc,Q,1)  log decay per step           block (1,1,1,Q,1)
+  Bm (B,H,nc,Q,N)  input projection             block (1,1,1,Q,N)
+  Cm (B,H,nc,Q,N)  output projection            block (1,1,1,Q,N)
+outputs:
+  y  (B,H,nc,Q,P), h_final (B,H,P,N) (written on the last chunk)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, la_ref, b_ref, c_ref, y_ref, hout_ref, state_scr, *,
+            num_chunks: int, Q: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    la = la_ref[0, 0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    cum = jnp.cumsum(la)                               # (Q,)
+    x = x_ref[0, 0, 0].astype(jnp.float32)             # (Q,P)
+    bm = b_ref[0, 0, 0].astype(jnp.float32)            # (Q,N)
+    cm = c_ref[0, 0, 0].astype(jnp.float32)            # (Q,N)
+
+    # intra-chunk: (C B^T ⊙ decay) @ x   — MXU matmuls
+    seg = cum[:, None] - cum[None, :]                  # (Q,Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.exp(jnp.where(tri, seg, -jnp.inf))
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,Q)
+    y = jax.lax.dot_general(cb * decay, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q,P)
+
+    # inter-chunk: exp(cum) * C @ state^T
+    state = state_scr[...]                             # (P,N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update: h <- exp(Σla) h + Σ_q exp(cum_Q - cum_q) x_q ⊗ B_q
+    tail = jnp.exp(cum[-1] - cum)                      # (Q,)
+    new_state = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        x * tail[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (P,N)
+    state_scr[...] = new_state
+
+    @pl.when(c == num_chunks - 1)
+    def _final():
+        hout_ref[0, 0] = new_state.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, la, Bm, Cm, *, interpret: bool = False):
+    """x (B,H,nc,Q,P); la (B,H,nc,Q); Bm/Cm (B,H,nc,Q,N).
+    Returns (y (B,H,nc,Q,P), h_final (B,H,P,N))."""
+    B, H, nc, Q, P = x.shape
+    N = Bm.shape[-1]
+    grid = (B, H, nc)
+    kernel = functools.partial(_kernel, num_chunks=nc, Q=Q)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, 1), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nc, Q, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, la[..., None], Bm, Cm)
+    return y, hout

@@ -1,0 +1,16 @@
+"""Production mesh construction. A FUNCTION (not module-level) so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh for smoke/bench paths (axis names match production)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,87 @@
+"""Serving launcher — the real-compute Arrow cluster on CPU with a reduced
+model, or the cluster-scale simulator for full configs.
+
+  PYTHONPATH=src python -m repro.launch.serve --mode engine --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --mode sim --arch gemma-2b \
+      --trace azure_code --rate 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.slo import SLO
+
+
+def run_engine(args) -> None:
+    from repro.engine import ArrowEngineCluster, ServeRequest
+    cfg = get_smoke_config(args.arch)
+    if cfg.family != "dense":
+        raise SystemExit("--mode engine supports dense-family archs; use "
+                         "--mode sim for the rest (DESIGN.md §2)")
+    cluster = ArrowEngineCluster(cfg, n_instances=args.instances,
+                                 n_prefill=max(args.instances // 2, 1),
+                                 n_slots=8, capacity=256,
+                                 slo=SLO(args.ttft, args.tpot))
+    rng = np.random.default_rng(0)
+    reqs = [ServeRequest(
+        rid=i,
+        prompt=rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(8, 64))).astype(np.int32),
+        max_new_tokens=int(rng.integers(2, 16)),
+        arrival_offset=float(i) * args.gap)
+        for i in range(args.requests)]
+    out = cluster.serve(reqs, timeout=args.timeout)
+    done = [r for r in out if r.req and r.req.finish_time is not None]
+    ttfts = sorted(r.req.ttft for r in done)
+    tpots = sorted(r.req.tpot for r in done)
+    ok = sum(1 for r in done if r.req.meets_slo(SLO(args.ttft, args.tpot)))
+    print(f"[serve] finished {len(done)}/{len(out)} "
+          f"p50_ttft={ttfts[len(ttfts)//2]*1e3:.1f}ms "
+          f"p90_tpot={tpots[int(len(tpots)*0.9)]*1e3:.1f}ms "
+          f"slo_attainment={ok/max(len(done),1):.2f} "
+          f"pool_flips={cluster.pools.flips}")
+
+
+def run_sim(args) -> None:
+    from repro.sim import Simulator
+    from repro.traces import TRACE_PRESETS, load_trace
+    cfg = get_config(args.arch)
+    p = TRACE_PRESETS[args.trace]
+    trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
+                       duration=args.duration)
+    sim = Simulator(cfg, n_instances=args.instances,
+                    n_prefill=max(args.instances // 2, 1),
+                    policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot))
+    res = sim.run(trace)
+    print(f"[serve-sim] {args.arch} {args.trace} x{args.rate} "
+          f"policy={args.policy}: n={len(trace)} "
+          f"attainment={res.attainment:.3f} p90_ttft={res.p90('ttft'):.3f}s "
+          f"p90_tpot={res.p90('tpot')*1e3:.1f}ms flips={res.flips}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("engine", "sim"), default="engine")
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--gap", type=float, default=0.05)
+    ap.add_argument("--ttft", type=float, default=5.0)
+    ap.add_argument("--tpot", type=float, default=2.0)
+    ap.add_argument("--timeout", type=float, default=300.0)
+    ap.add_argument("--trace", default="azure_code")
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--policy", default="arrow")
+    args = ap.parse_args(argv)
+    if args.mode == "engine":
+        run_engine(args)
+    else:
+        run_sim(args)
+
+
+if __name__ == "__main__":
+    main()

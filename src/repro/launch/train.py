@@ -1,0 +1,99 @@
+"""Training launcher: real steps on the local device mesh (CPU-friendly with
+reduced configs; the full configs are exercised via dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ck.msgpack
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data import SyntheticTokenPipeline
+from repro.models import build_model
+from repro.optim import adamw_init, adamw_update
+
+
+def make_batch_for(cfg, tokens):
+    """LM batch -> family batch (stub embeddings for vlm/whisper)."""
+    B, S = tokens.shape
+    if cfg.family == "vlm":
+        key = jax.random.PRNGKey(0)
+        return {
+            "embeds": jax.random.normal(key, (B, S, cfg.d_model),
+                                        jnp.dtype(cfg.dtype)) * 0.02,
+            "positions": jnp.broadcast_to(jnp.arange(S)[None, None], (B, 3, S)),
+            "labels": jnp.asarray(tokens),
+        }
+    if cfg.family == "encdec":
+        key = jax.random.PRNGKey(0)
+        F = cfg.encoder.n_frames
+        return {
+            "audio_embeds": jax.random.normal(key, (B, F, cfg.d_model),
+                                              jnp.dtype(cfg.dtype)) * 0.02,
+            "tokens": jnp.asarray(tokens),
+        }
+    return {"tokens": jnp.asarray(tokens)}
+
+
+def main(argv=None, cfg_override=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = cfg_override or (get_smoke_config(args.arch) if args.smoke
+                           else get_config(args.arch))
+    if cfg.family == "ssm":
+        args.seq = max(args.seq - args.seq % cfg.ssm.chunk, cfg.ssm.chunk)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.arch_id} ({'smoke' if args.smoke else 'full'}) "
+          f"params={n_params/1e6:.1f}M seq={args.seq} batch={args.batch}")
+
+    pipe = iter(SyntheticTokenPipeline(cfg.vocab_size, args.seq, args.batch,
+                                       seed=1))
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch))(params)
+        params, opt = adamw_update(params, grads, opt, lr=args.lr)
+        return params, opt, loss
+
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        batch = make_batch_for(cfg, next(pipe)["tokens"])
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.perf_counter() - t0
+            tok_s = (i + 1) * args.batch * args.seq / dt
+            print(f"  step {i:4d} loss={losses[-1]:.4f} ({tok_s:.0f} tok/s)")
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    print(f"[train] loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    if args.ckpt:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt, {"params": params})
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

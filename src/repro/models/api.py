@@ -1,0 +1,133 @@
+"""Unified model API over all families.
+
+``build_model(cfg)`` returns a :class:`Model` with a uniform functional
+interface used by the training step builders, the serving engine and the
+dry-run launcher:
+
+  params = model.init(key)
+  loss   = model.loss(params, batch)                  # batch per family, below
+  logits, cache = model.prefill(params, batch, cache_capacity)
+  logits, cache = model.decode(params, cache, batch)  # one token per request
+
+Batch formats (all positions int32):
+  dense/moe/ssm/hybrid : train/prefill {"tokens": (B,S)}
+                         decode        {"token": (B,1), "pos": (B,)}
+  vlm                  : train/prefill {"embeds": (B,S,d), "positions": (B,3,S),
+                                        "labels": (B,S)}
+                         decode        {"token": (B,1), "positions": (B,3,1),
+                                        "pos": (B,)}
+  encdec (whisper)     : train/prefill {"audio_embeds": (B,F,d), "tokens": (B,S)}
+                         decode        {"token": (B,1), "pos": (B,)}
+
+``window`` semantics: models with cfg.sliding_window always mask locally; for
+the long-context variant shapes, pass ``window=cfg.long_context_window`` (the
+step builders do this for the ``long_500k`` shape).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import dense, encdec, hybrid, moe, ssm
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def _shift_loss(cfg, logits, tokens):
+    from repro.models import common as cm
+    return cm.lm_loss(cfg, logits[:, :-1], tokens[:, 1:])
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        mod = dense
+    elif fam == "moe":
+        mod = moe
+    elif fam == "ssm":
+        mod = ssm
+    elif fam == "hybrid":
+        mod = hybrid
+    elif fam == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(fam)
+
+    # ----------------------------------------------------------- enc-dec
+    if fam == "encdec":
+        def loss(params, batch, *, window=None, remat=False):
+            logits, _ = encdec.forward_seq(cfg, params, batch["tokens"],
+                                           batch["audio_embeds"], remat=remat)
+            return _shift_loss(cfg, logits, batch["tokens"])
+
+        def prefill(params, batch, cache_capacity, *, window=None, remat=False):
+            return encdec.forward_seq(cfg, params, batch["tokens"],
+                                      batch["audio_embeds"],
+                                      cache_capacity=cache_capacity, remat=remat)
+
+        def decode(params, cache, batch, *, window=None):
+            return encdec.decode_step(cfg, params, cache, batch["token"],
+                                      batch["pos"])
+
+        return Model(cfg, lambda k: encdec.init_params(cfg, k), loss, prefill, decode)
+
+    # --------------------------------------------------------------- vlm
+    if fam == "vlm":
+        def loss(params, batch, *, window=None, remat=False):
+            S = batch["embeds"].shape[1]
+            logits, _ = dense.forward_seq(
+                cfg, params, batch["embeds"], jnp.arange(S),
+                mrope_positions=batch["positions"], window=window, remat=remat)
+            from repro.models import common as cm
+            return cm.lm_loss(cfg, logits[:, :-1], batch["labels"][:, 1:])
+
+        def prefill(params, batch, cache_capacity, *, window=None, remat=False):
+            S = batch["embeds"].shape[1]
+            return dense.forward_seq(
+                cfg, params, batch["embeds"], jnp.arange(S),
+                mrope_positions=batch["positions"], window=window,
+                cache_capacity=cache_capacity, remat=remat)
+
+        def decode(params, cache, batch, *, window=None):
+            x = dense.embed_tokens(cfg, params, batch["token"])
+            return dense.decode_step(cfg, params, cache, x, batch["pos"],
+                                     mrope_positions=batch["positions"],
+                                     window=window)
+
+        return Model(cfg, lambda k: dense.init_params(cfg, k), loss, prefill, decode)
+
+    # ------------------------------------------------- dense / moe / ssm / hybrid
+    def loss(params, batch, *, window=None, remat=False):
+        tokens = batch["tokens"]
+        x = mod.embed_tokens(cfg, params, tokens)
+        out = mod.forward_seq(cfg, params, x, jnp.arange(tokens.shape[1]),
+                              window=window, remat=remat)
+        logits = out[0]
+        base = _shift_loss(cfg, logits, tokens)
+        if fam == "moe":
+            base = base + 0.01 * out[2]
+        return base
+
+    def prefill(params, batch, cache_capacity, *, window=None, remat=False):
+        tokens = batch["tokens"]
+        x = mod.embed_tokens(cfg, params, tokens)
+        out = mod.forward_seq(cfg, params, x, jnp.arange(tokens.shape[1]),
+                              window=window, cache_capacity=cache_capacity,
+                              remat=remat)
+        return out[0], out[1]
+
+    def decode(params, cache, batch, *, window=None):
+        x = mod.embed_tokens(cfg, params, batch["token"])
+        return mod.decode_step(cfg, params, cache, x, batch["pos"], window=window)
+
+    return Model(cfg, lambda k: mod.init_params(cfg, k), loss, prefill, decode)

@@ -1,0 +1,317 @@
+"""Shared building blocks for the model zoo: norms, RoPE variants, GQA attention
+(pure-jnp reference path — Pallas kernels live in repro.kernels and are used by
+the serving engine), MLPs and initialisation helpers.
+
+All models are functional: params are nested dicts of jnp arrays, stacked with a
+leading layer dimension and consumed via ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------- init utils
+
+
+def ninit(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def zinit(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def oinit(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Deterministic per-leaf key generator."""
+
+    def __init__(self, key):
+        self._key = key
+        self._i = 0
+
+    def __call__(self):
+        self._i += 1
+        return jax.random.fold_in(self._key, self._i)
+
+
+# ---------------------------------------------------------------------- norm
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(cfg: ModelConfig, shape_prefix, d, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"scale": zinit(shape_prefix + (d,), dtype)}
+    return {"scale": oinit(shape_prefix + (d,), dtype),
+            "bias": zinit(shape_prefix + (d,), dtype)}
+
+
+# ---------------------------------------------------------------------- rope
+
+
+def rope_angles(positions, rope_dim: int, theta: float):
+    """positions (..., S) -> cos,sin (..., S, rope_dim//2)."""
+    half = rope_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions, rope_dim: int, theta: float, sections):
+    """qwen2-vl M-RoPE. positions (B, 3, S) (t/h/w); sections sum to rope_dim//2.
+
+    Frequency channel j takes its position from the section it belongs to.
+    """
+    half = rope_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    pos = positions.astype(jnp.float32)[:, sec_ids, :]             # (B, half, S)
+    ang = jnp.moveaxis(pos, 1, -1) * inv           # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rope_dim: int):
+    """x (B, S, H, D); cos/sin broadcastable to (B, S, 1, rope_dim//2)."""
+    half = rope_dim // 2
+    xr, xp = x[..., :rope_dim], x[..., rope_dim:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    cos = cos.astype(jnp.float32)
+    sin = sin.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = x1f * cos - x2f * sin
+    r2 = x2f * cos + x1f * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), xp], axis=-1)
+
+
+def rope_for(cfg: ModelConfig, positions, mrope_positions=None):
+    """Returns (cos, sin, rope_dim) ready for apply_rope, or (None, None, 0)."""
+    hd = cfg.head_dim_
+    if cfg.rope in ("none", "learned"):
+        return None, None, 0
+    if cfg.rope == "mrope":
+        rope_dim = hd
+        cos, sin = mrope_angles(mrope_positions, rope_dim, cfg.rope_theta,
+                                cfg.mrope_sections)
+        return cos[:, :, None, :], sin[:, :, None, :], rope_dim
+    rope_dim = hd if cfg.rope == "standard" else int(hd * cfg.rope_fraction)
+    rope_dim -= rope_dim % 2
+    cos, sin = rope_angles(positions, rope_dim, cfg.rope_theta)
+    # positions (S,) -> (1,S,1,half); (B,S) -> (B,S,1,half)
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    return cos[:, :, None, :], sin[:, :, None, :], rope_dim
+
+
+# ----------------------------------------------------------------- attention
+
+
+def sdpa(q, k, v, mask, logit_softcap: Optional[float] = None):
+    """Reference GQA attention. q (B,S,H,D); k,v (B,T,Hk,D); mask additive,
+    broadcastable to (B,Hk,G,S,T). Returns (B,S,H*D) (heads flattened, ready
+    for the output projection)."""
+    B, S, H, D = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, S, Hk, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * (1.0 / math.sqrt(D))
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+    scores = scores + mask
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H * D).astype(q.dtype)
+
+
+NEG_INF = -1e30
+
+
+def causal_mask(S: int, T: int, q_offset=0, window: Optional[int] = None):
+    """(1,1,1,S,T) additive mask; query i has absolute position q_offset+i,
+    kv j has absolute position j."""
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    ok = kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)[None, None, None].astype(jnp.float32)
+
+
+def decode_mask(kv_positions, pos, window: Optional[int] = None):
+    """kv_positions (B,T) absolute position per cache slot (-1 empty);
+    pos (B,) current query position. -> (B,1,1,1,T)."""
+    ok = (kv_positions >= 0) & (kv_positions <= pos[:, None])
+    if window is not None:
+        ok &= kv_positions > (pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, None, None].astype(jnp.float32)
+
+
+def chunk_mask(kv_positions, q_positions, window: Optional[int] = None):
+    """Chunked-prefill mask: queries at absolute positions q_positions (Sq,)
+    attend to cache slots whose pos_map (B,T) entry is valid and causal.
+    -> (B,1,1,Sq,T)."""
+    kv = kv_positions[:, None, :]                  # (B,1,T)
+    q = q_positions[None, :, None]                 # (1,Sq,1)
+    ok = (kv >= 0) & (kv <= q)
+    if window is not None:
+        ok &= kv > (q - window)
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, None].astype(jnp.float32)
+
+
+# ----------------------------------------------------------- attention block
+
+
+def init_attention(cfg: ModelConfig, kg: KeyGen, prefix, dtype, d_model=None):
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim_
+    p = {
+        "wq": ninit(kg(), prefix + (d, cfg.n_heads * hd), dtype),
+        "wk": ninit(kg(), prefix + (d, cfg.n_kv_heads * hd), dtype),
+        "wv": ninit(kg(), prefix + (d, cfg.n_kv_heads * hd), dtype),
+        "wo": ninit(kg(), prefix + (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = zinit(prefix + (hd,), dtype)
+        p["k_norm"] = zinit(prefix + (hd,), dtype)
+    return p
+
+
+def attention_qkv(cfg: ModelConfig, p, x, cos, sin, rope_dim):
+    """Project + rope. x (B,S,d) -> q (B,S,H,D), k,v (B,S,Hk,D)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_dim:
+        q = apply_rope(q, cos, sin, rope_dim)
+        k = apply_rope(k, cos, sin, rope_dim)
+    return q, k, v
+
+
+# ----------------------------------------------------------------------- mlp
+
+
+def init_mlp(cfg: ModelConfig, kg: KeyGen, prefix, dtype, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": ninit(kg(), prefix + (d, ff), dtype),
+            "w_up": ninit(kg(), prefix + (d, ff), dtype),
+            "w_down": ninit(kg(), prefix + (ff, d), dtype),
+        }
+    return {
+        "w_in": ninit(kg(), prefix + (d, ff), dtype),
+        "w_out": ninit(kg(), prefix + (ff, d), dtype),
+    }
+
+
+def mlp(cfg: ModelConfig, p, x):
+    if cfg.activation == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if cfg.activation == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+
+
+# ----------------------------------------------------------------- embedding
+
+
+def init_embedding(cfg: ModelConfig, kg: KeyGen, dtype):
+    p = {"embed": ninit(kg(), (cfg.padded_vocab, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ninit(kg(), (cfg.d_model, cfg.padded_vocab), dtype)
+    return p
+
+
+def embed(cfg: ModelConfig, p, tokens):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        return x @ p["embed"].T
+    return x @ p["unembed"]
+
+
+def lm_loss(cfg: ModelConfig, logits, labels, ignore=-1):
+    """Cross-entropy over padded vocab; labels (B,S) int32; logits (B,S,V)."""
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    ok = labels != ignore
+    return jnp.sum(nll * ok) / jnp.maximum(jnp.sum(ok), 1)
+
+
+def constrain_seq_attention(cfg: ModelConfig, q, k, v):
+    """Sequence-parallel attention constraints (full-seq prefill/train only):
+    q blocks shard the seq dim over cfg.attn_seq_axis; K/V replicate along it
+    (MQA/GQA K/V are small). Scores then stay block-local."""
+    if not cfg.attn_seq_axis:
+        return q, k, v
+    from jax.sharding import PartitionSpec as P
+    ax = cfg.act_batch_axes
+    b = (ax if ax and len(ax) > 1 else (ax[0] if ax else None))
+    s = cfg.attn_seq_axis
+    q = jax.lax.with_sharding_constraint(q, P(b, s, None, None))
+    k = jax.lax.with_sharding_constraint(k, P(b, None, None, None))
+    v = jax.lax.with_sharding_constraint(v, P(b, None, None, None))
+    return q, k, v
+
+
+def constrain_batch(cfg: ModelConfig, x):
+    """Pin the leading (batch) dim of an activation to the configured mesh
+    axes (no-op when cfg.act_batch_axes is unset — CPU/engine paths)."""
+    if not cfg.act_batch_axes:
+        return x
+    ax = tuple(cfg.act_batch_axes)
+    spec = (ax if len(ax) > 1 else ax[0],) + (None,) * (x.ndim - 1)
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,172 @@
+"""Dense decoder-only transformer (also serves the VLM backbone: the vision
+frontend is a stub, so prefill/train consume precomputed embeddings + M-RoPE
+positions; decode embeds new text tokens via the embedding table).
+
+Cache layout (per model):
+  {"k","v": (L, B, C, Hk, D), "pos_map": (B, C) int32 abs position per slot (-1 empty)}
+
+``C`` (capacity) may be >= seq (full cache) or a sliding window (ring buffer,
+slot = pos % C) — the pos_map-driven mask makes both behave identically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    kg = cm.KeyGen(key)
+    L = (cfg.n_layers,)
+    layers = {
+        "ln1": cm.init_norm(cfg, L, cfg.d_model, dtype),
+        "attn": cm.init_attention(cfg, kg, L, dtype),
+        "ln2": cm.init_norm(cfg, L, cfg.d_model, dtype),
+        "mlp": cm.init_mlp(cfg, kg, L, dtype),
+    }
+    return {
+        "tok": cm.init_embedding(cfg, kg, dtype),
+        "layers": layers,
+        "final_norm": cm.init_norm(cfg, (), cfg.d_model, dtype),
+    }
+
+
+def _block(cfg: ModelConfig, p, x, cos, sin, rope_dim, mask, kv_cache=None,
+           slot=None):
+    """One transformer block. Returns (x, (k, v)) where k/v are either the
+    full-seq kv (prefill/train) or the updated cache slabs (decode)."""
+    h = cm.apply_norm(cfg, p["ln1"], x)
+    q, k, v = cm.attention_qkv(cfg, p["attn"], h, cos, sin, rope_dim)
+    if kv_cache is None:
+        q, k, v = cm.constrain_seq_attention(cfg, q, k, v)
+        o = cm.sdpa(q, k, v, mask, cfg.logit_softcap)
+        out_kv = (k, v)
+    else:
+        ck, cv = kv_cache
+        B = x.shape[0]
+        bidx = jnp.arange(B)
+        ck = ck.at[bidx, slot].set(k[:, 0])
+        cv = cv.at[bidx, slot].set(v[:, 0])
+        o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
+        out_kv = (ck, cv)
+    x = x + o @ p["attn"]["wo"]
+    h = cm.apply_norm(cfg, p["ln2"], x)
+    x = x + cm.mlp(cfg, p["mlp"], h)
+    return x, out_kv
+
+
+def forward_seq(cfg: ModelConfig, params, x, positions, *, mrope_positions=None,
+                window: Optional[int] = None, cache_capacity: Optional[int] = None,
+                remat: bool = False):
+    """Full-sequence forward. x (B,S,d) embeddings. Returns (logits, cache|None)."""
+    B, S, _ = x.shape
+    x = cm.constrain_batch(cfg, x)
+    cos, sin, rope_dim = cm.rope_for(cfg, positions, mrope_positions)
+    mask = cm.causal_mask(S, S, window=window)
+
+    def body(x, lp):
+        x, kv = _block(cfg, lp, x, cos, sin, rope_dim, mask)
+        return cm.constrain_batch(cfg, x), kv
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+
+    cache = None
+    if cache_capacity is not None:
+        C = cache_capacity
+        if C >= S:
+            pad = [(0, 0), (0, 0), (0, C - S), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+            pos_map = jnp.where(jnp.arange(C)[None] < S,
+                                jnp.arange(C)[None], -1)
+            pos_map = jnp.broadcast_to(pos_map, (B, C)).astype(jnp.int32)
+        else:
+            # keep the last C positions, placed at their ring slots
+            keep_pos = jnp.arange(S - C, S)                       # absolute
+            slots = keep_pos % C
+            ks_l, vs_l = ks[:, :, S - C:], vs[:, :, S - C:]
+            ks = jnp.zeros_like(ks_l).at[:, :, slots].set(ks_l)
+            vs = jnp.zeros_like(vs_l).at[:, :, slots].set(vs_l)
+            pos_map = jnp.zeros((C,), jnp.int32).at[slots].set(keep_pos)
+            pos_map = jnp.broadcast_to(pos_map[None], (B, C)).astype(jnp.int32)
+        cache = {"k": ks, "v": vs, "pos_map": pos_map}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, x, pos, *, mrope_positions=None,
+                window: Optional[int] = None):
+    """x (B,1,d) new-token embeddings; pos (B,) absolute positions.
+    Returns (logits (B,1,V), new_cache)."""
+    B = x.shape[0]
+    x = cm.constrain_batch(cfg, x)
+    C = cache["k"].shape[2]
+    slot = (pos % C).astype(jnp.int32)
+    pos_map = cache["pos_map"].at[jnp.arange(B), slot].set(pos.astype(jnp.int32))
+    mask = cm.decode_mask(pos_map, pos, window=window)
+    cos, sin, rope_dim = cm.rope_for(cfg, pos[:, None], mrope_positions)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, (ck, cv) = _block(cfg, lp, x, cos, sin, rope_dim, mask,
+                             kv_cache=(ck, cv), slot=slot)
+        return x, (ck, cv)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                           unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, {"k": ks, "v": vs, "pos_map": pos_map}
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache, x, offset, *,
+                  mrope_positions=None, window=None):
+    """Chunked prefill (paper §5.4): run a chunk x (B,Sq,d) whose tokens sit
+    at absolute positions [offset, offset+Sq) against an existing cache
+    (same layout as decode). Assumes a non-ring cache (capacity >= prompt
+    length — the serving engine's slot caches satisfy this) and a shared
+    integer ``offset`` across the batch rows being filled.
+
+    Returns (logits (B,Sq,V), new_cache).
+    """
+    B, Sq, _ = x.shape
+    x = cm.constrain_batch(cfg, x)
+    positions = offset + jnp.arange(Sq)
+    pos_map = lax.dynamic_update_slice(
+        cache["pos_map"],
+        jnp.broadcast_to(positions[None], (B, Sq)).astype(jnp.int32),
+        (0, offset))
+    mask = cm.chunk_mask(pos_map, positions, window=window)
+    cos, sin, rope_dim = cm.rope_for(cfg, positions, mrope_positions)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h = cm.apply_norm(cfg, lp["ln1"], x)
+        q, k, v = cm.attention_qkv(cfg, lp["attn"], h, cos, sin, rope_dim)
+        ck = lax.dynamic_update_slice(ck, k, (0, offset, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v, (0, offset, 0, 0))
+        o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
+        x = x + o @ lp["attn"]["wo"]
+        x = x + cm.mlp(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x))
+        return x, (ck, cv)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                           unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, {"k": ks, "v": vs, "pos_map": pos_map}
+
+
+# ------------------------------------------------------------------ wrappers
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    return cm.embed(cfg, params["tok"], tokens)

@@ -1,0 +1,174 @@
+"""Whisper-style encoder–decoder (arXiv:2212.04356). The mel-spectrogram +
+conv frontend is a STUB per the assignment: inputs are precomputed frame
+embeddings (B, n_frames, d_model). We implement the transformer backbone:
+bidirectional encoder (sinusoidal positions) + causal decoder (learned
+positions, cross-attention).
+
+Cache:
+  {"k","v": (L,B,C,H,D) decoder self-attn (ring-capable),
+   "ck","cv": (L,B,F,H,D) cross-attn (computed once at prefill),
+   "pos_map": (B,C)}
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    kg = cm.KeyGen(key)
+    Le = (cfg.encoder.n_layers,)
+    Ld = (cfg.n_layers,)
+    enc_layers = {
+        "ln1": cm.init_norm(cfg, Le, cfg.d_model, dtype),
+        "attn": cm.init_attention(cfg, kg, Le, dtype),
+        "ln2": cm.init_norm(cfg, Le, cfg.d_model, dtype),
+        "mlp": cm.init_mlp(cfg, kg, Le, dtype),
+    }
+    dec_layers = {
+        "ln1": cm.init_norm(cfg, Ld, cfg.d_model, dtype),
+        "self_attn": cm.init_attention(cfg, kg, Ld, dtype),
+        "ln_x": cm.init_norm(cfg, Ld, cfg.d_model, dtype),
+        "cross_attn": cm.init_attention(cfg, kg, Ld, dtype),
+        "ln2": cm.init_norm(cfg, Ld, cfg.d_model, dtype),
+        "mlp": cm.init_mlp(cfg, kg, Ld, dtype),
+    }
+    return {
+        "tok": cm.init_embedding(cfg, kg, dtype),
+        "pos": cm.ninit(kg(), (cfg.max_seq_len, cfg.d_model), dtype),
+        "enc_layers": enc_layers,
+        "enc_norm": cm.init_norm(cfg, (), cfg.d_model, dtype),
+        "dec_layers": dec_layers,
+        "final_norm": cm.init_norm(cfg, (), cfg.d_model, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, audio_embeds, remat: bool = False):
+    """audio_embeds (B, F, d) — stub frontend output. Returns (B, F, d)."""
+    x = audio_embeds + cm.sinusoidal_positions(
+        audio_embeds.shape[1], cfg.d_model).astype(audio_embeds.dtype)[None]
+    x = cm.constrain_batch(cfg, x)
+    zero_mask = jnp.zeros((1, 1, 1, 1, 1), jnp.float32)
+
+    def body(x, lp):
+        h = cm.apply_norm(cfg, lp["ln1"], x)
+        q, k, v = cm.attention_qkv(cfg, lp["attn"], h, None, None, 0)
+        x = x + cm.sdpa(q, k, v, zero_mask) @ lp["attn"]["wo"]
+        x = x + cm.mlp(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x))
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["enc_layers"], unroll=cfg.scan_unroll)
+    return cm.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(cfg, lp, x, mask, cross_kv, self_kv=None, slot=None):
+    h = cm.apply_norm(cfg, lp["ln1"], x)
+    q, k, v = cm.attention_qkv(cfg, lp["self_attn"], h, None, None, 0)
+    if self_kv is None:
+        o = cm.sdpa(q, k, v, mask)
+        out_kv = (k, v)
+    else:
+        ck_, cv_ = self_kv
+        bidx = jnp.arange(x.shape[0])
+        ck_ = ck_.at[bidx, slot].set(k[:, 0])
+        cv_ = cv_.at[bidx, slot].set(v[:, 0])
+        o = cm.sdpa(q, ck_, cv_, mask)
+        out_kv = (ck_, cv_)
+    x = x + o @ lp["self_attn"]["wo"]
+    # cross attention (kv precomputed from encoder output)
+    h = cm.apply_norm(cfg, lp["ln_x"], x)
+    B, S, _ = h.shape
+    hd = cfg.head_dim_
+    qx = (h @ lp["cross_attn"]["wq"]).reshape(B, S, cfg.n_heads, hd)
+    ckv, cvv = cross_kv
+    ox = cm.sdpa(qx, ckv, cvv, jnp.zeros((1, 1, 1, 1, 1), jnp.float32))
+    x = x + ox @ lp["cross_attn"]["wo"]
+    x = x + cm.mlp(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x))
+    return x, out_kv
+
+
+def cross_kv_all(cfg: ModelConfig, params, enc_out):
+    """Precompute cross-attention K/V for every decoder layer: (L,B,F,H,D)."""
+    B, F, _ = enc_out.shape
+    hd = cfg.head_dim_
+
+    def f(_, lp):
+        k = (enc_out @ lp["cross_attn"]["wk"]).reshape(B, F, cfg.n_kv_heads, hd)
+        v = (enc_out @ lp["cross_attn"]["wv"]).reshape(B, F, cfg.n_kv_heads, hd)
+        return None, (k, v)
+
+    _, (ck, cv) = lax.scan(f, None, params["dec_layers"], unroll=cfg.scan_unroll)
+    return ck, cv
+
+
+def forward_seq(cfg: ModelConfig, params, tokens, audio_embeds, *,
+                cache_capacity: Optional[int] = None, remat: bool = False,
+                enc_out=None):
+    """Teacher-forced decoder pass (train/prefill). Returns (logits, cache)."""
+    if enc_out is None:
+        enc_out = encode(cfg, params, audio_embeds, remat=remat)
+    B, S = tokens.shape
+    x = cm.embed(cfg, params["tok"], tokens)
+    x = x + params["pos"][:S][None]
+    x = cm.constrain_batch(cfg, x)
+    mask = cm.causal_mask(S, S)
+    ck, cv = cross_kv_all(cfg, params, enc_out)
+
+    def body(x, xs):
+        lp, ckl, cvl = xs
+        x, kv = _dec_block(cfg, lp, x, mask, (ckl, cvl))
+        return x, kv
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = lax.scan(body, x, (params["dec_layers"], ck, cv),
+                           unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+
+    cache = None
+    if cache_capacity is not None:
+        C = cache_capacity
+        assert C >= S, "whisper decoder cache must hold the full prefix"
+        pad = [(0, 0), (0, 0), (0, C - S), (0, 0), (0, 0)]
+        ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+        pos_map = jnp.where(jnp.arange(C)[None] < S, jnp.arange(C)[None], -1)
+        pos_map = jnp.broadcast_to(pos_map, (B, C)).astype(jnp.int32)
+        cache = {"k": ks, "v": vs, "ck": ck, "cv": cv, "pos_map": pos_map}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """token (B,1) int32; pos (B,)."""
+    B = token.shape[0]
+    C = cache["k"].shape[2]
+    slot = (pos % C).astype(jnp.int32)
+    pos_map = cache["pos_map"].at[jnp.arange(B), slot].set(pos.astype(jnp.int32))
+    mask = cm.decode_mask(pos_map, pos)
+    x = cm.embed(cfg, params["tok"], token)
+    x = x + jnp.take(params["pos"], jnp.minimum(pos, cfg.max_seq_len - 1),
+                     axis=0)[:, None]
+    x = cm.constrain_batch(cfg, x)
+
+    def body(x, xs):
+        lp, ck_, cv_, ckl, cvl = xs
+        x, (ck_, cv_) = _dec_block(cfg, lp, x, mask, (ckl, cvl),
+                                   self_kv=(ck_, cv_), slot=slot)
+        return x, (ck_, cv_)
+
+    x, (ks, vs) = lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]), unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                    "pos_map": pos_map}

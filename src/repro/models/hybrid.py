@@ -1,0 +1,305 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): repeating
+(RG-LRU, RG-LRU, local-attention) blocks, GeGLU MLPs, MQA local attention.
+
+Layer pattern: ``len(pattern)`` layers per scanned group; a trailing partial
+group (n_layers % len(pattern) leading entries of the pattern) is handled as a
+separately-scanned "tail" stack (38 = 12×3 + 2 for recurrentgemma-9b).
+
+Cache:
+  groups: {"conv{i}": (G,B,W-1,lw), "h{i}": (G,B,lw) per rglru slot,
+           "k","v": (G,B,C,Hk,D)}  with C = local attention window (ring)
+  tail:   {"conv{i}", "h{i}"}
+  pos_map: (B, C)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+_RGLRU_C = 8.0
+
+
+def _pattern(cfg: ModelConfig):
+    pat = cfg.hybrid.pattern
+    n_groups = cfg.n_layers // len(pat)
+    tail = cfg.n_layers % len(pat)
+    return pat, n_groups, tail
+
+
+def _lru_width(cfg):
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+# ------------------------------------------------------------------- params
+
+
+def _init_rglru(cfg, kg, prefix, dtype):
+    d, lw = cfg.d_model, _lru_width(cfg)
+    cw = cfg.hybrid.conv_width
+    return {
+        "w_y": cm.ninit(kg(), prefix + (d, lw), dtype),
+        "w_x": cm.ninit(kg(), prefix + (d, lw), dtype),
+        "conv_w": cm.ninit(kg(), prefix + (cw, lw), dtype, scale=0.2),
+        "conv_b": cm.zinit(prefix + (lw,), dtype),
+        "w_a": cm.ninit(kg(), prefix + (lw, lw), dtype),
+        "b_a": cm.zinit(prefix + (lw,), jnp.float32),
+        "w_i": cm.ninit(kg(), prefix + (lw, lw), dtype),
+        "b_i": cm.zinit(prefix + (lw,), jnp.float32),
+        "lam": jnp.broadcast_to(jnp.linspace(0.5, 4.0, lw, dtype=jnp.float32),
+                                prefix + (lw,)),
+        "w_o": cm.ninit(kg(), prefix + (lw, d), dtype),
+    }
+
+
+def _init_sub(cfg, kg, kind, prefix, dtype):
+    p = {"ln1": cm.init_norm(cfg, prefix, cfg.d_model, dtype),
+         "ln2": cm.init_norm(cfg, prefix, cfg.d_model, dtype),
+         "mlp": cm.init_mlp(cfg, kg, prefix, dtype)}
+    if kind == "attn":
+        p["attn"] = cm.init_attention(cfg, kg, prefix, dtype)
+    else:
+        p["rglru"] = _init_rglru(cfg, kg, prefix, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    kg = cm.KeyGen(key)
+    pat, n_groups, tail = _pattern(cfg)
+    groups = {f"sub{i}_{kind}": _init_sub(cfg, kg, kind, (n_groups,), dtype)
+              for i, kind in enumerate(pat)}
+    params = {
+        "tok": cm.init_embedding(cfg, kg, dtype),
+        "groups": groups,
+        "final_norm": cm.init_norm(cfg, (), cfg.d_model, dtype),
+    }
+    # Tail = n_layers % len(pattern) extra layers; they take the leading kinds
+    # of the pattern, which must be homogeneous to scan as one stack.
+    if tail and any(k != pat[0] for k in pat[:tail]):
+        raise NotImplementedError("heterogeneous tail not supported")
+    if tail:
+        params["tail"] = {f"sub0_{pat[0]}": _init_sub(cfg, kg, pat[0], (tail,), dtype)}
+    return params
+
+
+# -------------------------------------------------------------------- rglru
+
+
+def _rglru_gates(p, u, x_in):
+    """u: conv output (B,S,lw); x_in: pre-conv branch input for gates (B,S,lw).
+    Returns log_a (f32), gated input (f32)."""
+    r = jax.nn.sigmoid((x_in @ p["w_a"]).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid((x_in @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * i * u.astype(jnp.float32)
+    return log_a, gated
+
+
+def _rglru_scan(log_a, gated, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t along axis 1."""
+    a = jnp.exp(log_a)
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    acc_a, h = lax.associative_scan(comb, (a, gated), axis=1)
+    if h0 is not None:
+        h = h + acc_a * h0[:, None, :]
+    return h
+
+
+def _rglru_seq(cfg, p, x, conv_state=None, h0=None):
+    """Full recurrent mixer block. x (B,S,d) normed input."""
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    cw = cfg.hybrid.conv_width
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], cw - 1, u.shape[-1]), u.dtype)
+    full = jnp.concatenate([conv_state, u], axis=1)
+    conv = sum(full[:, i:i + u.shape[1]] * p["conv_w"][i] for i in range(cw))
+    conv = conv + p["conv_b"]
+    new_conv = full[:, full.shape[1] - (cw - 1):]
+    log_a, gated = _rglru_gates(p, conv, u)
+    h = _rglru_scan(log_a, gated, h0)
+    out = (y.astype(jnp.float32) * h).astype(x.dtype) @ p["w_o"]
+    return out, new_conv, h[:, -1]
+
+
+def _rglru_step(cfg, p, x, conv_state, h):
+    """Single token. x (B,1,d); h (B,lw) f32."""
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    full = jnp.concatenate([conv_state, u], axis=1)            # (B,cw,lw)
+    conv = jnp.einsum("bwc,wc->bc", full, p["conv_w"]) + p["conv_b"]
+    new_conv = full[:, 1:]
+    log_a, gated = _rglru_gates(p, conv[:, None], u)
+    h = jnp.exp(log_a[:, 0]) * h + gated[:, 0]
+    out = (y[:, 0].astype(jnp.float32) * h).astype(x.dtype) @ p["w_o"]
+    return out[:, None], new_conv, h
+
+
+# ------------------------------------------------------------------- blocks
+
+
+def _sub_seq(cfg, kind, p, x, cos, sin, rope_dim, mask, conv=None, h0=None):
+    h_in = cm.apply_norm(cfg, p["ln1"], x)
+    if kind == "attn":
+        q, k, v = cm.attention_qkv(cfg, p["attn"], h_in, cos, sin, rope_dim)
+        o = cm.sdpa(q, k, v, mask, cfg.logit_softcap)
+        x = x + o @ p["attn"]["wo"]
+        extra = (k, v)
+    else:
+        o, new_conv, h_last = _rglru_seq(cfg, p["rglru"], h_in, conv, h0)
+        x = x + o
+        extra = (new_conv, h_last)
+    x = x + cm.mlp(cfg, p["mlp"], cm.apply_norm(cfg, p["ln2"], x))
+    return x, extra
+
+
+def _sub_step(cfg, kind, p, x, cos, sin, rope_dim, mask, state):
+    h_in = cm.apply_norm(cfg, p["ln1"], x)
+    if kind == "attn":
+        ck, cv, slot = state
+        q, k, v = cm.attention_qkv(cfg, p["attn"], h_in, cos, sin, rope_dim)
+        bidx = jnp.arange(x.shape[0])
+        ck = ck.at[bidx, slot].set(k[:, 0])
+        cv = cv.at[bidx, slot].set(v[:, 0])
+        o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
+        x = x + o @ p["attn"]["wo"]
+        extra = (ck, cv)
+    else:
+        conv, h = state
+        o, conv, h = _rglru_step(cfg, p["rglru"], h_in, conv, h)
+        x = x + o
+        extra = (conv, h)
+    x = x + cm.mlp(cfg, p["mlp"], cm.apply_norm(cfg, p["ln2"], x))
+    return x, extra
+
+
+# ------------------------------------------------------------------ forward
+
+
+def forward_seq(cfg: ModelConfig, params, x, positions, *, window=None,
+                cache_capacity: Optional[int] = None, remat: bool = False):
+    B, S, _ = x.shape
+    x = cm.constrain_batch(cfg, x)
+    pat, n_groups, tail = _pattern(cfg)
+    W = cfg.sliding_window or cfg.hybrid.local_window
+    cos, sin, rope_dim = cm.rope_for(cfg, positions)
+    mask = cm.causal_mask(S, S, window=W)
+
+    def body(x, gp):
+        extras = []
+        for i, kind in enumerate(pat):
+            x, extra = _sub_seq(cfg, kind, gp[f"sub{i}_{kind}"], x, cos, sin,
+                                rope_dim, mask)
+            extras.append(extra)
+        return cm.constrain_batch(cfg, x), tuple(extras)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, extras = lax.scan(body, x, params["groups"], unroll=cfg.scan_unroll)
+
+    tail_extras = None
+    if tail:
+        def tbody(x, tp):
+            x, extra = _sub_seq(cfg, pat[0], tp[f"sub0_{pat[0]}"], x, cos, sin,
+                                rope_dim, mask)
+            return x, extra
+        if remat:
+            tbody = jax.checkpoint(tbody)
+        x, tail_extras = lax.scan(tbody, x, params["tail"], unroll=cfg.scan_unroll)
+
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+
+    cache = None
+    if cache_capacity is not None:
+        C = min(cache_capacity, W)
+        g = {}
+        for i, kind in enumerate(pat):
+            if kind == "attn":
+                k, v = extras[i]                               # (G,B,S,Hk,D)
+                if C >= S:
+                    pad = [(0, 0), (0, 0), (0, C - S), (0, 0), (0, 0)]
+                    k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+                    pos_map = jnp.where(jnp.arange(C)[None] < S,
+                                        jnp.arange(C)[None], -1)
+                else:
+                    keep = jnp.arange(S - C, S)
+                    slots = keep % C
+                    k = jnp.zeros_like(k[:, :, :C]).at[:, :, slots].set(k[:, :, S - C:])
+                    v = jnp.zeros_like(v[:, :, :C]).at[:, :, slots].set(v[:, :, S - C:])
+                    pos_map = jnp.zeros((C,), jnp.int32).at[slots].set(keep)[None]
+                g[f"k{i}"], g[f"v{i}"] = k, v
+                cache_pos = jnp.broadcast_to(pos_map, (B, C)).astype(jnp.int32)
+            else:
+                conv, h_last = extras[i]
+                g[f"conv{i}"], g[f"h{i}"] = conv, h_last
+        cache = {"groups": g, "pos_map": cache_pos}
+        if tail:
+            conv, h_last = tail_extras
+            cache["tail"] = {"conv0": conv, "h0": h_last}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, x, pos, *, window=None):
+    B = x.shape[0]
+    x = cm.constrain_batch(cfg, x)
+    pat, n_groups, tail = _pattern(cfg)
+    W = cfg.sliding_window or cfg.hybrid.local_window
+    attn_idx = [i for i, k in enumerate(pat) if k == "attn"]
+    C = cache["groups"][f"k{attn_idx[0]}"].shape[2]
+    slot = (pos % C).astype(jnp.int32)
+    pos_map = cache["pos_map"].at[jnp.arange(B), slot].set(pos.astype(jnp.int32))
+    mask = cm.decode_mask(pos_map, pos, window=W)
+    cos, sin, rope_dim = cm.rope_for(cfg, pos[:, None])
+
+    g = cache["groups"]
+
+    def body(x, xs):
+        gp = xs[0]
+        states = xs[1]
+        new_states = {}
+        for i, kind in enumerate(pat):
+            if kind == "attn":
+                st = (states[f"k{i}"], states[f"v{i}"], slot)
+            else:
+                st = (states[f"conv{i}"], states[f"h{i}"])
+            x, extra = _sub_step(cfg, kind, gp[f"sub{i}_{kind}"], x, cos, sin,
+                                 rope_dim, mask, st)
+            if kind == "attn":
+                new_states[f"k{i}"], new_states[f"v{i}"] = extra
+            else:
+                new_states[f"conv{i}"], new_states[f"h{i}"] = extra
+        return x, new_states
+
+    x, new_g = lax.scan(body, x, (params["groups"], g), unroll=cfg.scan_unroll)
+
+    new_cache = {"groups": new_g, "pos_map": pos_map}
+    if tail:
+        def tbody(x, xs):
+            tp, st = xs
+            x, extra = _sub_step(cfg, pat[0], tp[f"sub0_{pat[0]}"], x, cos, sin,
+                                 rope_dim, mask, (st["conv0"], st["h0"]))
+            return x, {"conv0": extra[0], "h0": extra[1]}
+        x, new_tail = lax.scan(tbody, x, (params["tail"], cache["tail"]),
+                                unroll=cfg.scan_unroll)
+        new_cache["tail"] = new_tail
+
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, new_cache
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    return cm.embed(cfg, params["tok"], tokens)

@@ -1,0 +1,209 @@
+"""Mixture-of-Experts decoder (dbrx, olmoe). Attention identical to dense; the
+FFN is a top-k routed expert bank with **sort-based dispatch** (argsort by
+expert id + capacity-clipped scatter), so compiled FLOPs count *active* experts
+only — no one-hot dispatch einsum.
+
+With experts sharded over the ``model`` mesh axis this is expert parallelism;
+the dispatch scatter/gather lowers to all-to-all-style collectives.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import dense
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    kg = cm.KeyGen(key)
+    L = (cfg.n_layers,)
+    m = cfg.moe
+    E, ff, d = m.n_experts, m.d_ff_expert, cfg.d_model
+    layers = {
+        "ln1": cm.init_norm(cfg, L, d, dtype),
+        "attn": cm.init_attention(cfg, kg, L, dtype),
+        "ln2": cm.init_norm(cfg, L, d, dtype),
+        "moe": {
+            "router": cm.ninit(kg(), L + (d, E), dtype),
+            "w_gate": cm.ninit(kg(), L + (E, d, ff), dtype),
+            "w_up": cm.ninit(kg(), L + (E, d, ff), dtype),
+            "w_down": cm.ninit(kg(), L + (E, ff, d), dtype),
+        },
+    }
+    return {
+        "tok": cm.init_embedding(cfg, kg, dtype),
+        "layers": layers,
+        "final_norm": cm.init_norm(cfg, (), d, dtype),
+    }
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x (B,S,d) -> (B,S,d), plus aux load-balance loss term (scalar).
+
+    Sort-based dispatch, optionally grouped (cfg.moe_groups > 1): each group
+    packs its own (E, C_g, d) buffer with group-local indices, so the only
+    cross-device movement is the group<->expert reshard of the buffer
+    (all-to-all under GSPMD). G=1 reproduces the global sort.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    N = B * S
+    G = cfg.moe_groups if cfg.moe_groups and N % max(cfg.moe_groups, 1) == 0 \
+        else 1
+    Ng = N // G
+    xg = x.reshape(G, Ng, d)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)            # (G, Ng, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, K)                         # (G, Ng, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- aux loss (Switch-style load balance) ----
+    density = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, E), axis=2), axis=(0, 1))
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density / K * router_mean)
+
+    C = int(max(8, -(-Ng * K // E) * m.capacity_factor))       # per-group cap
+    C = -(-int(C) // 8) * 8
+
+    def dispatch(xf, flat_e):
+        """Group-local sort-based pack. xf (Ng,d); flat_e (Ng*K,)."""
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        sorted_tok = (order // K).astype(jnp.int32)
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(Ng * K) - starts[sorted_e]
+        keep = rank < C
+        dest = jnp.where(keep, sorted_e * C + rank, E * C)     # E*C = drop row
+        buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(xf[sorted_tok])
+        return buf[: E * C].reshape(E, C, d), order, dest
+
+    buf, order, dest = jax.vmap(dispatch)(xg, top_e.reshape(G, Ng * K))
+
+    from jax.sharding import PartitionSpec as P
+    ax = cfg.act_batch_axes
+    bax = (ax if ax and len(ax) > 1 else (ax[0] if ax else None))
+    if cfg.moe_ep_axis:
+        # group-sharded -> expert-sharded reshard == all-to-all under GSPMD
+        buf = jax.lax.with_sharding_constraint(
+            buf, P(bax, cfg.moe_ep_axis, None, None))
+
+    # ---- expert FFN (batched over experts; groups fold into capacity) ----
+    h = jnp.swapaxes(buf, 0, 1).reshape(E, G * C, d)           # (E, G*C, d)
+    if cfg.activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        g_ = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+        u_ = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+        h = jnp.einsum("ecf,efd->ecd", act(g_) * u_, p["w_down"])
+    else:
+        h = jnp.einsum("ecf,efd->ecd",
+                       jax.nn.gelu(jnp.einsum("ecd,edf->ecf", h, p["w_gate"])),
+                       p["w_down"])
+    hbuf = jnp.swapaxes(h.reshape(E, G, C, d), 0, 1)           # (G, E, C, d)
+    if cfg.moe_ep_axis:
+        # expert-sharded -> group-sharded (all-to-all back)
+        hbuf = jax.lax.with_sharding_constraint(
+            hbuf, P(bax, None, None, None))
+
+    def combine(hflat, order, dest):
+        got = jnp.concatenate([hflat.reshape(E * C, d),
+                               jnp.zeros((1, d), hflat.dtype)])[dest]
+        y = jnp.zeros((Ng * K, d), hflat.dtype).at[order].set(got)
+        return y
+
+    y = jax.vmap(combine)(hbuf, order, dest)                   # (G, Ng*K, d)
+    y = y.reshape(G, Ng, K, d)
+    y = jnp.sum(y * top_p[..., None].astype(y.dtype), axis=2)
+    return y.reshape(B, S, d), aux
+
+
+def _block(cfg: ModelConfig, p, x, cos, sin, rope_dim, mask, kv_cache=None,
+           slot=None):
+    h = cm.apply_norm(cfg, p["ln1"], x)
+    q, k, v = cm.attention_qkv(cfg, p["attn"], h, cos, sin, rope_dim)
+    if kv_cache is None:
+        q, k, v = cm.constrain_seq_attention(cfg, q, k, v)
+        o = cm.sdpa(q, k, v, mask, cfg.logit_softcap)
+        out_kv = (k, v)
+    else:
+        ck, cv = kv_cache
+        bidx = jnp.arange(x.shape[0])
+        ck = ck.at[bidx, slot].set(k[:, 0])
+        cv = cv.at[bidx, slot].set(v[:, 0])
+        o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
+        out_kv = (ck, cv)
+    x = x + o @ p["attn"]["wo"]
+    h = cm.apply_norm(cfg, p["ln2"], x)
+    y, aux = moe_ffn(cfg, p["moe"], h)
+    return x + y, out_kv, aux
+
+
+def forward_seq(cfg: ModelConfig, params, x, positions, *, window=None,
+                cache_capacity: Optional[int] = None, remat: bool = False):
+    B, S, _ = x.shape
+    x = cm.constrain_batch(cfg, x)
+    cos, sin, rope_dim = cm.rope_for(cfg, positions)
+    mask = cm.causal_mask(S, S, window=window)
+
+    def body(x, lp):
+        x, kv, aux = _block(cfg, lp, x, cos, sin, rope_dim, mask)
+        return cm.constrain_batch(cfg, x), (kv, aux)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, ((ks, vs), auxs) = lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+
+    cache = None
+    if cache_capacity is not None:
+        C = cache_capacity
+        if C >= S:
+            pad = [(0, 0), (0, 0), (0, C - S), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+            pos_map = jnp.where(jnp.arange(C)[None] < S, jnp.arange(C)[None], -1)
+            pos_map = jnp.broadcast_to(pos_map, (B, C)).astype(jnp.int32)
+        else:
+            keep_pos = jnp.arange(S - C, S)
+            slots = keep_pos % C
+            ks_l, vs_l = ks[:, :, S - C:], vs[:, :, S - C:]
+            ks = jnp.zeros_like(ks_l).at[:, :, slots].set(ks_l)
+            vs = jnp.zeros_like(vs_l).at[:, :, slots].set(vs_l)
+            pos_map = jnp.zeros((C,), jnp.int32).at[slots].set(keep_pos)
+            pos_map = jnp.broadcast_to(pos_map[None], (B, C)).astype(jnp.int32)
+        cache = {"k": ks, "v": vs, "pos_map": pos_map}
+    return logits, cache, jnp.mean(auxs)
+
+
+def decode_step(cfg: ModelConfig, params, cache, x, pos, *, window=None):
+    B = x.shape[0]
+    x = cm.constrain_batch(cfg, x)
+    C = cache["k"].shape[2]
+    slot = (pos % C).astype(jnp.int32)
+    pos_map = cache["pos_map"].at[jnp.arange(B), slot].set(pos.astype(jnp.int32))
+    mask = cm.decode_mask(pos_map, pos, window=window)
+    cos, sin, rope_dim = cm.rope_for(cfg, pos[:, None])
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        x, (ck, cv), _aux = _block(cfg, lp, x, cos, sin, rope_dim, mask,
+                                   kv_cache=(ck, cv), slot=slot)
+        return x, (ck, cv)
+
+    x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
+                           unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, {"k": ks, "v": vs, "pos_map": pos_map}
+
+
+embed_tokens = dense.embed_tokens

@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060). Attention-free.
+
+Block: in_proj -> [z | xBC | dt]; causal conv1d + silu over xBC; SSD scan;
+gated RMSNorm; out_proj. The chunked SSD here is the pure-jnp reference — the
+Pallas TPU kernel (repro/kernels/ssd_scan) implements the same chunk recurrence
+with VMEM-resident state.
+
+State cache (per model):
+  {"conv": (L, B, W-1, d_conv_ch), "ssm": (L, B, H, P, N)}  — O(1) in seq len.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    return s, di, H, s.head_dim, s.n_groups, s.d_state
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    kg = cm.KeyGen(key)
+    s, di, H, P, G, N = _dims(cfg)
+    conv_ch = di + 2 * G * N
+    L = (cfg.n_layers,)
+    layers = {
+        "ln": cm.init_norm(cfg, L, cfg.d_model, dtype),
+        "w_in": cm.ninit(kg(), L + (cfg.d_model, 2 * di + 2 * G * N + H), dtype),
+        "conv_w": cm.ninit(kg(), L + (s.d_conv, conv_ch), dtype, scale=0.2),
+        "conv_b": cm.zinit(L + (conv_ch,), dtype),
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)), L + (H,)
+        ).astype(jnp.float32),
+        "D": cm.oinit(L + (H,), jnp.float32),
+        "dt_bias": cm.zinit(L + (H,), jnp.float32),
+        "out_norm": cm.init_norm(cfg, L, di, dtype),
+        "w_out": cm.ninit(kg(), L + (di, cfg.d_model), dtype),
+    }
+    return {
+        "tok": cm.init_embedding(cfg, kg, dtype),
+        "layers": layers,
+        "final_norm": cm.init_norm(cfg, (), cfg.d_model, dtype),
+    }
+
+
+def _split_in(cfg, zxbcdt):
+    _, di, H, P, G, N = _dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """xBC (B,S,Ch); w (W,Ch) depthwise. state (B,W-1,Ch) prepended if given.
+    Returns (out (B,S,Ch), new_state (B,W-1,Ch))."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    full = jnp.concatenate([state, xBC], axis=1)              # (B, S+W-1, Ch)
+    out = sum(full[:, i:i + xBC.shape[1]] * w[i] for i in range(W)) + b
+    new_state = full[:, full.shape[1] - (W - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk, h0=None):
+    """Reference chunked SSD.
+
+    x (B,S,H,P) f32; dt (B,S,H) f32 (already softplus'ed); A (H,) negative;
+    Bm, Cm (B,S,G,N); D (H,). h0 optional (B,H,P,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    # expand groups to heads
+    Bh = jnp.repeat(Bm, rep, axis=2)                          # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    la = dt * A                                               # (B,S,H) log decay
+    la = la.reshape(Bsz, nc, Q, H)
+    cum = jnp.cumsum(la, axis=2)                              # within-chunk cumsum
+    xq = (x * dt[..., None]).reshape(Bsz, nc, Q, H, P)        # input with dt
+    Bq = Bh.reshape(Bsz, nc, Q, H, N)
+    Cq = Ch.reshape(Bsz, nc, Q, H, N)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask *inside* the exp: exp of masked-out (positive) entries would be inf
+    # and poison gradients through the where.
+    decay = jnp.exp(jnp.where(mask, seg, -jnp.inf))
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Cq, Bq)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", cb * decay, xq)
+
+    # --- chunk states ---
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", tail, Bq, xq)
+    chunk_decay = jnp.exp(jnp.sum(la, axis=2))                # (B,nc,H)
+
+    # --- inter-chunk scan ---
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, xs):
+        st, dec = xs                                          # (B,H,P,N), (B,H)
+        h_prev = h
+        h = dec[:, :, None, None] * h + st
+        return h, h_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                     # (nc,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                 # (nc,B,H)
+    h_final, h_prevs = lax.scan(step, h0, (states_t, decay_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(cum), Cq, h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P) + D[None, None, :, None] * x
+    return y, h_final
+
+
+def _block_seq(cfg, lp, u, conv_state=None, h0=None):
+    """Full-seq Mamba2 block. u (B,S,d). Returns (out, conv_state, h_final)."""
+    s, di, H, P, G, N = _dims(cfg)
+    B, S, _ = u.shape
+    x_in = cm.apply_norm(cfg, lp["ln"], u)
+    zxbcdt = x_in @ lp["w_in"]
+    z, xBC, dt = _split_in(cfg, zxbcdt)
+    xBC, conv_state = _causal_conv(xBC, lp["conv_w"], lp["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, S, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, S, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, lp["D"], cfg.ssm.chunk, h0)
+    y = y.reshape(B, S, di).astype(u.dtype)
+    y = cm.apply_norm(cfg, lp["out_norm"], y * jax.nn.silu(z))
+    return u + y @ lp["w_out"], conv_state, h_final
+
+
+def _block_step(cfg, lp, u, conv_state, h):
+    """Single-token step. u (B,1,d); conv_state (B,W-1,Ch); h (B,H,P,N)."""
+    s, di, H, P, G, N = _dims(cfg)
+    B = u.shape[0]
+    x_in = cm.apply_norm(cfg, lp["ln"], u)
+    zxbcdt = x_in @ lp["w_in"]
+    z, xBC, dt = _split_in(cfg, zxbcdt)
+    # conv over state + current input
+    full = jnp.concatenate([conv_state, xBC], axis=1)          # (B,W,Ch)
+    w = lp["conv_w"]
+    out = jnp.einsum("bwc,wc->bc", full, w) + lp["conv_b"]
+    xBC = jax.nn.silu(out)[:, None]                            # (B,1,Ch)
+    new_conv = full[:, 1:]
+    xs, Bm, Cm = jnp.split(xBC[:, 0], [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, H, P).astype(jnp.float32)
+    Bm = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])  # (B,H)
+    A = -jnp.exp(lp["A_log"])
+    a = jnp.exp(dt * A)                                        # (B,H)
+    h = a[:, :, None, None] * h + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bm, xs)
+    y = jnp.einsum("bhn,bhpn->bhp", Cm, h) + lp["D"][None, :, None] * xs
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    y = cm.apply_norm(cfg, lp["out_norm"], y * jax.nn.silu(z))
+    return u + y @ lp["w_out"], new_conv, h
+
+
+def forward_seq(cfg: ModelConfig, params, x, positions=None, *, window=None,
+                cache_capacity=None, remat: bool = False):
+    """x (B,S,d). Returns (logits, cache|None)."""
+    del positions, window
+    want_cache = cache_capacity is not None
+    x = cm.constrain_batch(cfg, x)
+
+    def body(xc, lp):
+        x = xc
+        x, conv_state, h = _block_seq(cfg, lp, x)
+        return cm.constrain_batch(cfg, x), (conv_state, h)
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (convs, hs) = lax.scan(body, x, params["layers"], unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    cache = {"conv": convs, "ssm": hs} if want_cache else None
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, x, pos=None, *, window=None):
+    del pos, window
+    x = cm.constrain_batch(cfg, x)
+
+    def body(xc, xs):
+        lp, conv, h = xs
+        x = xc
+        x, conv, h = _block_step(cfg, lp, x, conv, h)
+        return x, (conv, h)
+
+    x, (convs, hs) = lax.scan(body, x, (params["layers"], cache["conv"], cache["ssm"]),
+                            unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, {"conv": convs, "ssm": hs}
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    return cm.embed(cfg, params["tok"], tokens)

@@ -1,0 +1,45 @@
+"""AdamW in pure JAX (pytree-generic); optimizer state shards like params."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(f32, params),
+                      nu=jax.tree.map(f32, params))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr=3e-4, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.01):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda x: x[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda x: x[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda x: x[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,159 @@
+"""Analytic instance cost model (TPU adaptation — DESIGN.md §3).
+
+The paper profiles H800 GPUs; we derive iteration costs from TPU v5e
+constants and the architecture config. Structure matches the paper's §4
+analysis: prefill compute is quadratic in input length (attention) + linear
+(MLP); decode iterations are linear in batch tokens and typically
+memory-bandwidth bound (weights + KV reads).
+
+The TTFT predictor does NOT read these constants — it fits its quadratic from
+profiled samples produced by this model (sim) or wall-clock timing (engine),
+exactly as the paper's profiler does.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+HBM_BYTES = 16 * 2**30
+ICI_BW = 50e9                # bytes/s/link
+
+
+@dataclass(frozen=True)
+class InstanceProfile:
+    """One serving instance = a TP slice of `chips` chips."""
+    chips: int = 4
+    flop_eff: float = 0.5    # achievable fraction of peak (MFU ceiling)
+    mem_eff: float = 0.7
+    overhead: float = 0.004  # fixed per-iteration dispatch/sync seconds
+
+    @property
+    def flops(self) -> float:
+        return self.chips * PEAK_FLOPS * self.flop_eff
+
+    @property
+    def bw(self) -> float:
+        return self.chips * HBM_BW * self.mem_eff
+
+    @property
+    def hbm(self) -> float:
+        return self.chips * HBM_BYTES
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, prof: InstanceProfile = InstanceProfile()):
+        self.cfg = cfg
+        self.prof = prof
+        self.n_active = cfg.param_count(active_only=True)
+        self.param_bytes = cfg.param_count() * 2          # bf16
+        c = cfg
+        if c.family == "ssm":
+            s = c.ssm
+            self.kv_bytes_per_token = 0.0
+            self.state_bytes_per_seq = c.n_layers * (
+                s.n_heads(c.d_model) * s.head_dim * s.d_state * 4
+                + (s.d_conv - 1) * (s.d_inner(c.d_model) + 2 * s.n_groups * s.d_state) * 2)
+        elif c.family == "hybrid":
+            pat = c.hybrid.pattern
+            frac_attn = pat.count("attn") / len(pat)
+            self.kv_bytes_per_token = c.n_layers * frac_attn * 2 * c.kv_dim * 2
+            lw = c.hybrid.lru_width or c.d_model
+            self.state_bytes_per_seq = c.n_layers * (1 - frac_attn) * lw * 4
+            self.attn_window = c.hybrid.local_window
+        else:
+            self.kv_bytes_per_token = c.n_layers * 2 * c.kv_dim * 2
+            self.state_bytes_per_seq = 0.0
+        self.attn_window = getattr(self, "attn_window", None) or c.sliding_window
+
+    # ------------------------------------------------------------- pieces
+    def _attn_flops(self, new_tokens: float, ctx: float) -> float:
+        """score+value flops for new_tokens attending to ctx positions."""
+        c = self.cfg
+        if c.family == "ssm":
+            s = c.ssm
+            # SSD: O(1) state ops per token
+            return 2 * new_tokens * c.n_layers * s.n_heads(c.d_model) * \
+                s.head_dim * s.d_state * 2
+        if self.attn_window:
+            ctx = min(ctx, self.attn_window)
+        frac = 1.0
+        if c.family == "hybrid":
+            pat = c.hybrid.pattern
+            frac = pat.count("attn") / len(pat)
+        return 4 * c.n_layers * frac * c.q_dim * new_tokens * ctx
+
+    def prefill_chunk(self, start: int, length: int) -> Tuple[float, float]:
+        """(flops, bytes) for prefilling chunk [start, start+length)."""
+        flops = 2 * self.n_active * length + \
+            self._attn_flops(length, start + length / 2)
+        bytes_ = self.kv_bytes_per_token * length
+        return flops, bytes_
+
+    def decode_tokens(self, context_lens: Sequence[int]) -> Tuple[float, float]:
+        """(flops, bytes) for one decode iteration over the given requests."""
+        b = len(context_lens)
+        flops = 2 * self.n_active * b
+        bytes_ = 0.0
+        for ctx in context_lens:
+            flops += self._attn_flops(1, ctx)
+            eff_ctx = min(ctx, self.attn_window) if self.attn_window else ctx
+            bytes_ += self.kv_bytes_per_token * eff_ctx + self.state_bytes_per_seq
+        return flops, bytes_
+
+    # ---------------------------------------------------------- iteration
+    def iteration_time(self, prefill_chunks: List[Tuple[int, int]],
+                       decode_ctx: Sequence[int]) -> float:
+        """Mixed (chunked-prefill) batch iteration: chunks = [(start, len)]."""
+        flops, bytes_ = 0.0, 0.0
+        if decode_ctx:
+            f, m = self.decode_tokens(decode_ctx)
+            flops += f
+            bytes_ += m
+        for start, length in prefill_chunks:
+            f, m = self.prefill_chunk(start, length)
+            flops += f
+            bytes_ += m
+        if flops == 0 and bytes_ == 0:
+            return 0.0
+        bytes_ += self.param_bytes                      # weights read once/iter
+        return max(flops / self.prof.flops, bytes_ / self.prof.bw) + \
+            self.prof.overhead
+
+    def prefill_time(self, input_len: int) -> float:
+        """Whole-prompt prefill (used for profiling the TTFT predictor)."""
+        return self.iteration_time([(0, input_len)], [])
+
+    # ------------------------------------------------------------ capacity
+    def kv_capacity_tokens(self) -> int:
+        free = self.prof.hbm * 0.85 - self.param_bytes
+        per = max(self.kv_bytes_per_token, 1.0)
+        if self.cfg.family == "ssm":
+            per = 64.0  # nominal bookkeeping unit; state is per-seq not per-token
+        return max(int(free / per), 1024)
+
+    def transfer_time(self, kv_tokens: int, ici_links: int = 1) -> float:
+        bytes_ = self.kv_bytes_per_token * kv_tokens + self.state_bytes_per_seq
+        return 50e-6 + bytes_ / (ICI_BW * ici_links)
+
+    def max_running_tokens(self, tpot: float, batch_hint: int = 64) -> int:
+        """Profile Max Running Tokens (§5.3): largest total context such that
+        a decode iteration stays within the TPOT budget."""
+        lo, hi = 1024, 64 * 1024 * 1024
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            ctx = [mid // batch_hint] * batch_hint
+            if self.iteration_time([], ctx) <= tpot:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+    def profile_ttft_samples(self) -> List[Tuple[int, float]]:
+        """Startup profiling sweep for the TTFT predictor fit."""
+        return [(L, self.prefill_time(L))
+                for L in (64, 256, 1024, 2048, 4096, 8192, 16384, 32768, 65536)]

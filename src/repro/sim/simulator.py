@@ -1,0 +1,263 @@
+"""Discrete-event cluster simulator: replays a trace against N stateless
+instances driven by a scheduling policy, with the analytic TPU cost model
+supplying iteration/transfer times. Reproduces the paper's evaluation loop
+(Fig. 7/8/9) at cluster scale on a laptop.
+
+Event kinds: request arrival, iteration completion, migration completion,
+monitor tick. Instances run iterations back-to-back while they have work
+(continuous batching); chunked prefill mixes phases inside one iteration.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.local_scheduler import LocalScheduler
+from repro.core.monitor import InstanceMonitor, InstanceStats
+from repro.core.pools import InstancePools
+from repro.core.request import Request, RequestState
+from repro.core.slo import SLO, SchedulerConfig
+from repro.core.ttft_predictor import TTFTPredictor
+from repro.sim.cost_model import CostModel, InstanceProfile
+from repro.sim.policies import POLICIES
+
+
+@dataclass
+class SimResult:
+    requests: List[Request]
+    slo: SLO
+    flips: int = 0
+    sim_time: float = 0.0
+
+    @property
+    def attainment(self) -> float:
+        if not self.requests:
+            return 1.0
+        ok = sum(1 for r in self.requests if r.meets_slo(self.slo))
+        return ok / len(self.requests)
+
+    def p90(self, metric: str) -> float:
+        vals = sorted(getattr(r, metric) for r in self.requests
+                      if getattr(r, metric) is not None)
+        if not vals:
+            return float("inf")
+        return vals[min(int(0.9 * len(vals)), len(vals) - 1)]
+
+
+class Simulator:
+    def __init__(self, cfg: ModelConfig, *, n_instances: int = 8,
+                 n_prefill: int = 4, policy: str = "arrow",
+                 slo: SLO = SLO(3.0, 0.1),
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 profile: InstanceProfile = InstanceProfile(),
+                 profiles: Optional[Dict[int, InstanceProfile]] = None,
+                 token_budget: int = 8192, flip_latency: float = 0.0):
+        """``profiles`` (iid -> InstanceProfile) enables heterogeneous
+        clusters (paper §8): per-instance cost models + a per-instance-fitted
+        TTFT predictor; ``profile`` is the homogeneous default."""
+        self.cfg = cfg
+        ids_all = list(range(n_instances))
+        self.costs: Dict[int, CostModel] = {
+            i: CostModel(cfg, (profiles or {}).get(i, profile))
+            for i in ids_all}
+        self.cost = self.costs[0]
+        self.slo = slo
+        if profiles:
+            from repro.core.ttft_predictor import PerInstancePredictor
+            self.predictor = PerInstancePredictor.fit_per_instance(
+                {i: self.costs[i].profile_ttft_samples() for i in ids_all})
+        else:
+            self.predictor = TTFTPredictor.fit(self.cost.profile_ttft_samples())
+        # conservative Max Running Tokens: profiled on the weakest instance
+        mrt = min(
+            c.max_running_tokens(
+                (sched_cfg or SchedulerConfig()).tpot_threshold_frac * slo.tpot)
+            for c in self.costs.values())
+        base = sched_cfg or SchedulerConfig()
+        overrides = {"max_running_tokens": mrt}
+        if policy == "arrow_proactive":
+            overrides["proactive"] = True
+        self.sched_cfg = SchedulerConfig(**{**base.__dict__, **overrides})
+
+        ids = list(range(n_instances))
+        if policy == "colocated":
+            n_prefill = n_instances       # pools unused; all serve both
+        self.pools = InstancePools(ids, n_prefill=n_prefill)
+        self.monitor = InstanceMonitor(ids, window=self.sched_cfg.token_interval_window)
+        self.locals: Dict[int, LocalScheduler] = {
+            i: LocalScheduler(i, token_budget=token_budget,
+                              kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
+            for i in ids}
+        self.policy = POLICIES[policy](self.pools, self.monitor, self.predictor,
+                                       slo, self.sched_cfg, self)
+        self._colocated = policy == "colocated"
+
+        self.requests: Dict[int, Request] = {}
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._busy: Dict[int, bool] = {i: False for i in ids}
+        self._now = 0.0
+
+        # Motivation experiment (§3.2 "lagging instance scheduling"): legacy
+        # systems pay a reload/drain penalty per flip. Arrow's stateless
+        # instances make it 0; flip_latency>0 simulates DistServe/Splitwise-
+        # style role changes to quantify what statelessness buys.
+        self._flip_latency = flip_latency
+        self._flip_block: Dict[int, float] = {i: 0.0 for i in ids}
+        if flip_latency > 0:
+            orig_move = self.pools.move
+
+            def move(iid, to):
+                if self.pools.pool_of(iid) is not to:
+                    self._flip_block[iid] = self._now + flip_latency
+                orig_move(iid, to)
+
+            self.pools.move = move
+
+    # ------------------------------------------------------- ClusterView
+    def has_pending_prefill(self, iid: int) -> bool:
+        return self.locals[iid].has_pending_prefill()
+
+    def has_pending_decode(self, iid: int) -> bool:
+        return self.locals[iid].has_pending_decode()
+
+    # ------------------------------------------------------------ events
+    def _push(self, t: float, fn, *args) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def run(self, trace: List[Request], *, max_time: float = 1e9) -> SimResult:
+        for r in trace:
+            self.requests[r.rid] = r
+            self._push(r.arrival, self._on_arrival, r.rid)
+        self._push(self.sched_cfg.monitor_interval, self._on_monitor_tick)
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            if t > max_time:
+                break
+            self._now = t
+            fn(*args)
+        return SimResult(list(self.requests.values()), self.slo,
+                         flips=self.pools.flips, sim_time=self._now)
+
+    # -------------------------------------------------------- handlers
+    def _on_arrival(self, rid: int) -> None:
+        req = self.requests[rid]
+        iid = self.policy.schedule_prefill_req(req, self._now)
+        req.prefill_instance = iid
+        req.state = RequestState.PREFILLING
+        self.locals[iid].enqueue_prefill(rid, req.input_len)
+        self._kick(iid)
+
+    def _kick(self, iid: int) -> None:
+        """Start an iteration if the instance is idle and has work."""
+        if self._busy[iid]:
+            return
+        if self._flip_block[iid] > self._now:          # draining/reloading
+            self._push(self._flip_block[iid], self._kick, iid)
+            return
+        loc = self.locals[iid]
+        self._try_admit_migrations(iid)
+        plan = loc.plan_iteration()
+        if plan.is_empty:
+            return
+        chunks = [(start, ln) for _, start, ln in plan.prefill_chunks]
+        ctx = [loc.decode_running[r].context_len for r in plan.decode_rids]
+        dur = self.costs[iid].iteration_time(chunks, ctx)
+        self._busy[iid] = True
+        self._push(self._now + dur, self._on_iteration_done, iid, plan, dur)
+
+    def _on_iteration_done(self, iid: int, plan, dur: float) -> None:
+        loc = self.locals[iid]
+        now = self._now
+        # decode tokens out
+        emitted = 0
+        for rid in plan.decode_rids:
+            if rid not in loc.decode_running:
+                continue
+            req = self.requests[rid]
+            req.token_times.append(now)
+            req.decoded_tokens += 1
+            emitted += 1
+            if loc.complete_decode_iteration(rid):
+                req.finish_time = now
+                req.state = RequestState.FINISHED
+        self.monitor.record_iteration(iid, now, emitted, dur)
+        # prefill chunks
+        for rid, start, ln in plan.prefill_chunks:
+            if rid not in loc.prefill_queue:
+                continue
+            req = self.requests[rid]
+            req.prefill_done_tokens = start + ln
+            if loc.complete_prefill_chunk(rid, ln):
+                self._on_prefill_complete(iid, req)
+        self._busy[iid] = False
+        self._kick(iid)
+
+    def _on_prefill_complete(self, iid: int, req: Request) -> None:
+        now = self._now
+        req.first_token_time = now                      # o_1 returned to user
+        if req.output_len <= 1:
+            req.finish_time = now
+            req.state = RequestState.FINISHED
+            self.locals[iid].release_prefill_kv(req.rid, req.input_len)
+            return
+        target = self.policy.schedule_decode_req(req, now)
+        req.decode_instance = target
+        remaining = req.output_len - 1
+        if target == iid or self._colocated:
+            req.state = RequestState.DECODING
+            self.locals[iid].start_local_decode(req.rid, req.input_len, remaining)
+            self._kick(iid)
+        else:
+            req.state = RequestState.MIGRATING
+            self.locals[target].enqueue_migration(req.rid, req.input_len, remaining)
+            self._try_admit_migrations(target)
+
+    def _try_admit_migrations(self, iid: int) -> None:
+        """FCFS, memory-gated admission; transfer is async DMA (instance can
+        keep computing)."""
+        loc = self.locals[iid]
+        while True:
+            item = loc.next_migration()
+            if item is None:
+                return
+            rid, kv, rem = item
+            # reserve memory now; data lands after the transfer delay
+            loc.kv_used += kv
+            dur = self.costs[iid].transfer_time(kv)
+            self._push(self._now + dur, self._on_migration_done, iid, rid, kv, rem)
+
+    def _on_migration_done(self, iid: int, rid: int, kv: int, rem: int) -> None:
+        req = self.requests[rid]
+        src = req.prefill_instance
+        if src is not None and src != iid:
+            self.locals[src].release_prefill_kv(rid, kv)
+            self._kick(src)
+        loc = self.locals[iid]
+        loc.kv_used -= kv                 # admit_migrated re-adds
+        loc.admit_migrated(rid, kv, rem)
+        req.state = RequestState.DECODING
+        self._kick(iid)
+
+    def _on_monitor_tick(self) -> None:
+        now = self._now
+        for iid, loc in self.locals.items():
+            ready = getattr(self.policy, "prefill_ready_at", {}).get(iid, 0.0)
+            s = InstanceStats(
+                instance_id=iid,
+                prefill_queue_len=len(loc.prefill_queue),
+                prefill_backlog_tokens=loc.prefill_backlog_tokens,
+                prefill_ready_at=ready,
+                running_tokens=loc.running_tokens,
+                n_decode_running=len(loc.decode_running),
+                kv_tokens_used=loc.kv_used,
+                kv_tokens_capacity=loc.kv_capacity,
+            )
+            self.monitor.update_stats(s)
+        self.policy.on_monitor_tick(now)
+        if self._heap:                     # keep ticking while events remain
+            self._push(now + self.sched_cfg.monitor_interval,
+                       self._on_monitor_tick)

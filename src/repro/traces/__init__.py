@@ -1,0 +1,1 @@
+from repro.traces.synth import TRACE_PRESETS, load_trace, trace_stats  # noqa: F401

@@ -1,0 +1,75 @@
+"""Benchmark harness integration: each module runs and emits the CSV contract
+(name,us_per_call,derived); roofline consumes real dry-run records."""
+import contextlib
+import io
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # benchmarks package lives at repo root
+
+
+def capture(fn, *args):
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        fn(*args)
+    return buf.getvalue().strip().splitlines()
+
+
+def test_trace_stats_emits_csv():
+    from benchmarks import bench_trace_stats
+    lines = capture(bench_trace_stats.main)
+    assert len(lines) == 4
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        assert name.startswith("trace_stats.")
+        assert float(us) >= 0
+
+
+def test_load_difference_prefill_leads():
+    from benchmarks import bench_load_difference
+    lines = capture(bench_load_difference.main)
+    derived = lines[0].split(",", 2)[2]
+    lead = float(derived.split("lead=")[1].rstrip("s"))
+    assert lead > 0
+
+
+def test_scalability_quick():
+    from benchmarks import bench_scalability
+    lines = capture(bench_scalability.main, ["--duration", "30", "--rate", "8"])
+    assert len(lines) == 8
+    att = {}
+    for line in lines:
+        name, _, derived = line.split(",", 2)
+        att[name] = float(derived.split("=")[1])
+    assert att["scalability.n16.arrow"] >= att["scalability.n2.arrow"]
+
+
+def test_roofline_from_records():
+    from repro.launch.dryrun import RESULTS_DIR
+    if not RESULTS_DIR.exists() or not list(RESULTS_DIR.glob("*.json")):
+        pytest.skip("dry-run records not generated yet")
+    from benchmarks import roofline
+    lines = capture(roofline.main, [])
+    assert len(lines) >= 10
+    doms = set()
+    for line in lines:
+        derived = line.split(",", 2)[2]
+        doms.add(derived.split(";")[0].split("=")[1])
+    assert doms <= {"compute", "memory", "collective"}
+    # decode must be memory- or collective-bound, never compute-bound (the
+    # paper's core asymmetry, quantified)
+    for line in lines:
+        if ".decode_32k" in line or ".long_500k" in line:
+            assert "dominant=compute" not in line
+
+
+def test_model_flops_analytics_positive():
+    from benchmarks.roofline import model_flops
+    from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+    from repro.distributed.steps import supports
+    for arch in ARCH_IDS:
+        for sname, shape in INPUT_SHAPES.items():
+            if not supports(get_config(arch), shape):
+                continue
+            assert model_flops(arch, sname) > 0, (arch, sname)

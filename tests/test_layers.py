@@ -1,0 +1,114 @@
+"""Unit tests for model-zoo primitives: RoPE variants, M-RoPE, masks, norms,
+MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.models import common as cm
+
+
+def test_rope_preserves_norm_and_relativity():
+    """Rotations preserve vector norm, and q·k depends only on the position
+    difference (the property RoPE exists for)."""
+    D = 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+
+    def dot_at(pq, pk):
+        cos_q, sin_q = cm.rope_angles(jnp.array([[pq]]), D, 10000.0)
+        cos_k, sin_k = cm.rope_angles(jnp.array([[pk]]), D, 10000.0)
+        qr = cm.apply_rope(q, cos_q[:, :, None], sin_q[:, :, None], D)
+        kr = cm.apply_rope(k, cos_k[:, :, None], sin_k[:, :, None], D)
+        return float(jnp.sum(qr * kr))
+
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(q)),
+        float(jnp.linalg.norm(cm.apply_rope(
+            q, *[a[:, :, None] for a in cm.rope_angles(jnp.array([[7]]), D, 1e4)], D))),
+        rtol=1e-5)
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+def test_partial_rope_rotates_prefix_only():
+    D, frac = 64, 0.5
+    rope_dim = int(D * frac)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, D))
+    cos, sin = cm.rope_angles(jnp.array([[9]]), rope_dim, 10000.0)
+    out = cm.apply_rope(x, cos[:, :, None], sin[:, :, None], rope_dim)
+    np.testing.assert_array_equal(np.asarray(out[..., rope_dim:]),
+                                  np.asarray(x[..., rope_dim:]))
+    assert not np.allclose(np.asarray(out[..., :rope_dim]),
+                           np.asarray(x[..., :rope_dim]))
+
+
+def test_mrope_equals_standard_rope_for_text():
+    """For pure text, all three M-RoPE position streams are equal and the
+    result must match standard RoPE."""
+    D = 64
+    S = 8
+    pos = jnp.arange(S)
+    mpos = jnp.broadcast_to(pos[None, None], (1, 3, S))
+    sections = (8, 12, 12)
+    cos_m, sin_m = cm.mrope_angles(mpos, D, 10000.0, sections)
+    cos_s, sin_s = cm.rope_angles(pos, D, 10000.0)
+    np.testing.assert_allclose(np.asarray(cos_m[0]), np.asarray(cos_s),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sin_m[0]), np.asarray(sin_s),
+                               rtol=1e-6)
+
+
+def test_causal_and_window_masks():
+    m = np.asarray(cm.causal_mask(4, 4))[0, 0, 0]
+    assert (m[0, 1:] < -1e20).all() and m[3, :].max() == 0
+    mw = np.asarray(cm.causal_mask(4, 4, window=2))[0, 0, 0]
+    assert mw[3, 0] < -1e20 and mw[3, 2] == 0          # window cuts old keys
+    # chunked-prefill mask == causal mask when the cache holds [0..T)
+    pos_map = jnp.broadcast_to(jnp.arange(6)[None], (1, 6))
+    q_pos = jnp.arange(2) + 4
+    mc = np.asarray(cm.chunk_mask(pos_map, q_pos))[0, 0, 0]
+    full = np.asarray(cm.causal_mask(2, 6, q_offset=4))[0, 0, 0]
+    np.testing.assert_array_equal(mc, full)
+
+
+def test_decode_mask_ring_semantics():
+    pos_map = jnp.asarray([[8, 5, 6, 7]])   # ring buffer, slot0 newest
+    m = np.asarray(cm.decode_mask(pos_map, jnp.asarray([8]), window=3))[0, 0, 0, 0]
+    assert m[0] == 0          # pos 8 == query
+    assert m[1] < -1e20       # pos 5 evicted by window 3 (8-3=5 excluded)
+    assert m[2] == 0 and m[3] == 0
+
+
+def test_norms_match_reference():
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 16))
+    w = jax.random.normal(jax.random.PRNGKey(4), (16,)) * 0.1
+    got = np.asarray(cm.rms_norm(x, w))
+    ref = np.asarray(x) / np.sqrt(
+        (np.asarray(x) ** 2).mean(-1, keepdims=True) + 1e-6) * (1 + np.asarray(w))
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(0, 100))
+def test_moe_dispatch_conservation(e_log, k, seed):
+    """Every kept token-expert assignment contributes exactly its routed
+    weight; grouped (G=2) and global (G=1) dispatch agree with ample
+    capacity."""
+    from repro.configs import get_smoke_config
+    from repro.models import moe as moe_mod
+    E = 2 ** e_log
+    cfg = get_smoke_config("olmoe-1b-7b")
+    cfg = cfg.replace(moe=cfg.moe.__class__(
+        n_experts=E, top_k=min(k, E), d_ff_expert=32, capacity_factor=float(E)))
+    key = jax.random.PRNGKey(seed)
+    params = moe_mod.init_params(cfg.replace(n_layers=1), key)
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    x = jax.random.normal(key, (2, 8, cfg.d_model)) * 0.5
+    y1, aux1 = moe_mod.moe_ffn(cfg, lp["moe"], x)
+    y2, aux2 = moe_mod.moe_ffn(cfg.replace(moe_groups=2), lp["moe"], x)
+    assert np.isfinite(np.asarray(y1)).all()
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,255 @@
+"""Unit + property tests for Arrow's core scheduling (pools, Algorithms 1-4,
+TTFT predictor, local scheduler, monitor semantics)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (SLO, GlobalScheduler, InstanceMonitor, InstancePools,
+                        InstanceStats, LocalScheduler, Pool, Request,
+                        SchedulerConfig, TTFTPredictor)
+
+
+class FakeCluster:
+    def __init__(self):
+        self.pending_prefill = set()
+        self.pending_decode = set()
+
+    def has_pending_prefill(self, iid):
+        return iid in self.pending_prefill
+
+    def has_pending_decode(self, iid):
+        return iid in self.pending_decode
+
+
+def make_sched(n=4, n_prefill=2, slo=SLO(1.0, 0.1), **cfg_kw):
+    pools = InstancePools(range(n), n_prefill=n_prefill)
+    mon = InstanceMonitor(range(n))
+    for i in range(n):
+        mon.update_stats(InstanceStats(instance_id=i))
+    pred = TTFTPredictor.fit([(0, 0.0), (1000, 0.1), (2000, 0.3), (4000, 1.0)])
+    cluster = FakeCluster()
+    cfg = SchedulerConfig(max_running_tokens=10000, **cfg_kw)
+    gs = GlobalScheduler(pools, mon, pred, slo, cfg, cluster)
+    return gs, pools, mon, cluster
+
+
+# -------------------------------------------------------------------- pools
+
+
+def test_pool_transitions():
+    pools = InstancePools(range(4), n_prefill=2)
+    assert set(pools.members(Pool.PREFILL)) == {0, 1}
+    pools.flip_to_decode(0, has_pending_prefill=True)
+    assert pools.pool_of(0) is Pool.P2D
+    assert 0 in pools.decode_capable()
+    pools.on_prefill_drained(0)
+    assert pools.pool_of(0) is Pool.DECODE
+    pools.flip_to_prefill(0, has_pending_decode=False)
+    assert pools.pool_of(0) is Pool.PREFILL
+    assert pools.flips == 3
+
+
+def test_zero_wait_flip_is_instant():
+    """Stateless-instance property: a flip is a pool move, nothing else."""
+    pools = InstancePools(range(2), n_prefill=1)
+    before = pools.decode_capable()
+    pools.flip_to_decode(0, has_pending_prefill=False)
+    assert 0 in pools.decode_capable() and 0 not in pools.prefill_capable()
+    assert set(before) | {0} == set(pools.decode_capable())
+
+
+# ---------------------------------------------------------------- predictor
+
+
+def test_predictor_fits_quadratic():
+    pred = TTFTPredictor.fit([(L, 1e-7 * L * L + 1e-4 * L + 0.01)
+                              for L in (100, 500, 1000, 5000, 10000)])
+    assert pred.predict(2000) == pytest.approx(1e-7 * 4e6 + 0.2 + 0.01, rel=1e-3)
+    # chunk additivity: chunk predictions telescope to the whole-prompt
+    # prediction minus the fixed per-request constant
+    whole = pred.predict(8192)
+    parts = pred.predict_chunk(0, 4096) + pred.predict_chunk(4096, 4096)
+    assert parts == pytest.approx(whole - pred.predict(0), rel=1e-6)
+
+
+def test_predictor_linear_workload_degrades_gracefully():
+    """SSM-style linear prefill: quadratic coefficient fits ~0."""
+    pred = TTFTPredictor.fit([(L, 2e-5 * L + 0.01)
+                              for L in (100, 1000, 4000, 16000)])
+    a, b, c = pred.coeffs
+    assert abs(a) < 1e-10
+    assert pred.predict(8000) == pytest.approx(0.17, rel=1e-2)
+
+
+# -------------------------------------------------------------- algorithm 1
+
+
+def test_prefill_scheduling_picks_min_delay():
+    gs, pools, mon, cluster = make_sched()
+    r = Request(rid=1, arrival=0.0, input_len=1000, output_len=10)
+    out1 = gs.schedule_prefill(r, now=0.0)
+    r2 = Request(rid=2, arrival=0.0, input_len=1000, output_len=10)
+    out2 = gs.schedule_prefill(r2, now=0.0)
+    assert out1.instance != out2.instance          # second goes to the idle one
+    assert {out1.instance, out2.instance} == {0, 1}
+
+
+def test_prefill_flips_decode_instance_on_predicted_violation():
+    gs, pools, mon, cluster = make_sched(slo=SLO(0.5, 0.1))
+    # saturate both prefill instances past the TTFT budget
+    for i in (0, 1):
+        gs.prefill_ready_at[i] = 10.0
+    r = Request(rid=1, arrival=0.0, input_len=4000, output_len=10)
+    out = gs.schedule_prefill(r, now=0.0)
+    assert out.flipped is not None
+    assert out.instance == out.flipped
+    assert pools.pool_of(out.instance) in (Pool.PREFILL, Pool.D2P)
+
+
+def test_prefill_overload_guard_respects_decode_priority():
+    """§5.5: if decode load is high, do NOT steal decode instances."""
+    gs, pools, mon, cluster = make_sched(slo=SLO(0.5, 0.1))
+    for i in (0, 1):
+        gs.prefill_ready_at[i] = 10.0
+    for i in (2, 3):
+        mon.update_stats(InstanceStats(instance_id=i, running_tokens=9000,
+                                       n_decode_running=50))
+    r = Request(rid=1, arrival=0.0, input_len=4000, output_len=10)
+    out = gs.schedule_prefill(r, now=0.0)
+    assert out.flipped is None and out.via_fallback
+    assert pools.count(Pool.DECODE) == 2
+
+
+# -------------------------------------------------------------- algorithm 2
+
+
+def test_decode_stays_on_flipped_prefill_instance():
+    """If the prefill instance now serves decode, keep the request there
+    (KV transfer elided)."""
+    gs, pools, mon, cluster = make_sched()
+    r = Request(rid=1, arrival=0.0, input_len=1000, output_len=10)
+    r.prefill_instance = 0
+    pools.flip_to_decode(0, has_pending_prefill=False)
+    out = gs.schedule_decode(r, now=0.0)
+    assert out.instance == 0
+
+
+def test_decode_min_running_tokens():
+    gs, pools, mon, cluster = make_sched()
+    mon.update_stats(InstanceStats(instance_id=2, running_tokens=5000))
+    mon.update_stats(InstanceStats(instance_id=3, running_tokens=100))
+    r = Request(rid=1, arrival=0.0, input_len=1000, output_len=10)
+    r.prefill_instance = 0
+    assert gs.schedule_decode(r, now=0.0).instance == 3
+
+
+def test_decode_flips_prefill_when_overloaded():
+    gs, pools, mon, cluster = make_sched(slo=SLO(1.0, 0.05))
+    for i in (2, 3):
+        mon.update_stats(InstanceStats(instance_id=i, running_tokens=9990,
+                                       n_decode_running=10))
+    r = Request(rid=1, arrival=0.0, input_len=1000, output_len=10)
+    r.prefill_instance = 0
+    out = gs.schedule_decode(r, now=0.0)
+    assert out.flipped is not None
+    assert pools.pool_of(out.instance) in (Pool.DECODE, Pool.P2D)
+
+
+# ---------------------------------------------------------- algorithms 3/4
+
+
+def test_never_drains_last_decode_instance():
+    gs, pools, mon, cluster = make_sched(n=2, n_prefill=1)
+    assert gs.try_move_decode_to_prefill() is None
+
+
+def test_never_drains_last_prefill_instance():
+    gs, pools, mon, cluster = make_sched(n=2, n_prefill=1)
+    assert gs.try_move_prefill_to_decode(0.0) is None
+
+
+def test_flip_prefers_p2d_pool():
+    gs, pools, mon, cluster = make_sched(n=4, n_prefill=1)
+    pools.move(1, Pool.P2D)
+    mon.update_stats(InstanceStats(instance_id=1, running_tokens=50))
+    got = gs.try_move_decode_to_prefill()
+    assert got == 1                                 # P→D member chosen first
+
+
+# ------------------------------------------------------------ local sched
+
+
+def test_local_chunked_prefill_decode_first():
+    loc = LocalScheduler(0, token_budget=512, mixed_chunk_budget=128)
+    loc.enqueue_prefill(1, 1000)
+    loc.start_local_decode(2, 300, 5)
+    plan = loc.plan_iteration()
+    assert plan.decode_rids == [2]
+    assert plan.prefill_chunks == [(1, 0, 128)]     # capped by mixed budget
+    done = loc.complete_prefill_chunk(1, 128)
+    assert not done
+    plan2 = loc.plan_iteration()
+    assert plan2.prefill_chunks == [(1, 128, 128)]
+
+
+def test_local_migration_memory_gate():
+    loc = LocalScheduler(0, kv_capacity_tokens=1000)
+    loc.enqueue_migration(1, 800, 10)
+    loc.enqueue_migration(2, 800, 10)
+    got = loc.next_migration()
+    assert got == (1, 800, 10)
+    loc.admit_migrated(*got)
+    assert loc.next_migration() is None             # 800+800 > 1000: q2 blocks
+    # finish request 1 -> memory frees -> request 2 admissible
+    for _ in range(10):
+        fin = loc.complete_decode_iteration(1)
+    assert fin
+    assert loc.next_migration() == (2, 800, 10)
+
+
+# ----------------------------------------------------------- properties
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(16, 8192), st.booleans()),
+                min_size=1, max_size=40))
+def test_pool_invariants_under_arbitrary_schedules(ops):
+    """Whatever the request stream does: pools partition instances, at least
+    one instance stays prefill-capable and one decode-capable."""
+    gs, pools, mon, cluster = make_sched(n=4, n_prefill=2, slo=SLO(0.3, 0.05))
+    now = 0.0
+    for i, (ln, is_prefill) in enumerate(ops):
+        now += 0.01
+        r = Request(rid=i, arrival=now, input_len=ln, output_len=8)
+        if is_prefill:
+            out = gs.schedule_prefill(r, now)
+        else:
+            r.prefill_instance = i % 4
+            out = gs.schedule_decode(r, now)
+        assert out.instance in range(4)
+        ids = sorted(pools.all_ids())
+        assert ids == [0, 1, 2, 3]
+        assert pools.prefill_capable() or pools.decode_capable()
+        assert pools.count(Pool.DECODE, Pool.P2D) >= 1 or \
+            pools.count(Pool.PREFILL, Pool.D2P) == 4
+        gs.on_monitor_tick(now)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 2000), min_size=1, max_size=30),
+       st.integers(64, 2048))
+def test_local_scheduler_conserves_work(lengths, budget):
+    """Every enqueued prefill token is eventually planned exactly once."""
+    loc = LocalScheduler(0, token_budget=budget, mixed_chunk_budget=budget)
+    for i, ln in enumerate(lengths):
+        loc.enqueue_prefill(i, ln)
+    planned = {i: 0 for i in range(len(lengths))}
+    for _ in range(100000):
+        plan = loc.plan_iteration()
+        if plan.is_empty:
+            break
+        for rid, start, ln in plan.prefill_chunks:
+            assert start == planned[rid]            # in-order chunks
+            planned[rid] += ln
+            loc.complete_prefill_chunk(rid, ln)
+    assert planned == {i: ln for i, ln in enumerate(lengths)}

@@ -1,0 +1,102 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, cost model."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.data import SyntheticTokenPipeline
+from repro.optim import adamw_init, adamw_update
+from repro.sim.cost_model import CostModel, InstanceProfile
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(
+            lambda q: jnp.sum(jnp.square(q["w"])))(p)
+        p, o = adamw_update(p, g, o, lr=0.1, weight_decay=0.0)
+        return p, o, loss
+
+    losses = []
+    for _ in range(50):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_pipeline_deterministic_and_in_range():
+    a = list(zip(range(3), SyntheticTokenPipeline(1000, 32, 2, seed=5)))
+    b = list(zip(range(3), SyntheticTokenPipeline(1000, 32, 2, seed=5)))
+    for (_, x), (_, y) in zip(a, b):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+        assert x["tokens"].min() >= 0 and x["tokens"].max() < 1000
+
+
+def test_checkpoint_roundtrip():
+    from repro.models import build_model
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    opt = adamw_init(params)
+    tree = {"params": params, "opt": opt}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.msgpack")
+        save_checkpoint(path, tree)
+        got = load_checkpoint(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- cost model
+
+
+def test_prefill_cost_superlinear_for_attention_linear_for_ssm():
+    dense = CostModel(get_config("gemma-2b"))
+    ssm = CostModel(get_config("mamba2-370m"))
+    # attention: doubling length more than doubles time at long lengths
+    t1, t2 = dense.prefill_time(32768), dense.prefill_time(65536)
+    assert t2 > 2.05 * t1
+    # ssm: close to linear
+    s1, s2 = ssm.prefill_time(32768), ssm.prefill_time(65536)
+    assert s2 < 2.2 * s1
+
+
+def test_decode_cost_linear_in_batch_tokens():
+    cm = CostModel(get_config("gemma-2b"))
+    t1 = cm.iteration_time([], [1024] * 16)
+    t2 = cm.iteration_time([], [1024] * 32)
+    assert t2 >= t1
+
+
+def test_ssm_transfer_constant_in_seq_len():
+    """DESIGN.md §4: SSM state transfer is O(1) in sequence length."""
+    cm = CostModel(get_config("mamba2-370m"))
+    assert cm.transfer_time(1024) == pytest.approx(cm.transfer_time(131072))
+    dense = CostModel(get_config("gemma-2b"))
+    assert dense.transfer_time(131072) > 10 * dense.transfer_time(1024)
+
+
+def test_max_running_tokens_monotone_in_tpot():
+    cm = CostModel(get_config("gemma-2b"))
+    assert cm.max_running_tokens(0.2) >= cm.max_running_tokens(0.05)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(ARCH_IDS), st.integers(4, 15))
+def test_cost_model_positive_everywhere(arch, log_len):
+    cm = CostModel(get_config(arch), InstanceProfile(chips=4))
+    L = 1 << log_len
+    assert cm.prefill_time(L) > 0
+    assert cm.iteration_time([(0, L)], [L, L // 2]) > 0
+    assert cm.kv_capacity_tokens() > 0
