@@ -16,6 +16,7 @@ import argparse
 
 from benchmarks.common import Timer, emit, save_json
 from repro.configs import get_config
+from repro.core.serving import replay_trace
 from repro.core.slo import SLO
 from repro.sim import InstanceProfile, Simulator
 from repro.traces import TRACE_PRESETS, load_trace
@@ -53,14 +54,17 @@ def run_system(trace_name: str, sys_name: str, arch: str, duration: float,
                         n_prefill=spec["n_prefill"], policy=spec["policy"],
                         slo=slo, profile=spec["profile"],
                         token_budget=spec.get("token_budget", 8192))
-        res = sim.run(trace)
+        # unified ServingSystem path: same replay/report code as the engine
+        replay_trace(sim, trace)
+        report = sim.drain()
+        p90 = lambda m: report.percentile(m, 0.9)  # noqa: E731
         curve.append({
             "rate_scale": rate,
             "req_s": len(trace) / max(duration, 1e-9),
-            "attainment": res.attainment,
-            "p90_ttft": res.p90("ttft"),
-            "p90_tpot": res.p90("tpot"),
-            "flips": res.flips,
+            "attainment": report.attainment,
+            "p90_ttft": p90("ttft") if p90("ttft") is not None else float("inf"),
+            "p90_tpot": p90("tpot") if p90("tpot") is not None else float("inf"),
+            "flips": report.flips,
         })
     return curve
 

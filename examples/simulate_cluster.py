@@ -1,11 +1,14 @@
 """Cluster-scale what-if: replay a production-style trace against an 8-instance
 TPU v5e cluster under every scheduling policy and print the Fig.7-style table.
+Uses the unified ServingSystem API (replay_trace + drain), i.e. exactly the
+same request/trace/reporting path as the real-compute engine.
 
 Run:  PYTHONPATH=src python examples/simulate_cluster.py --trace azure_code
 """
 import argparse
 
 from repro.configs import get_config
+from repro.core.serving import replay_trace
 from repro.core.slo import SLO
 from repro.sim import Simulator
 from repro.traces import TRACE_PRESETS, load_trace
@@ -33,8 +36,9 @@ for rate in args.rates:
     row = f"x{rate:<5} {len(trace)/args.duration:7.2f} "
     for pol in policies:
         sim = Simulator(cfg, n_instances=8, n_prefill=4, policy=pol, slo=slo)
-        res = sim.run(trace)
-        row += f" {res.attainment:12.3f}"
+        replay_trace(sim, trace)
+        report = sim.drain()
+        row += f" {report.attainment:12.3f}"
     print(row)
 print("\n(attainment >= 0.90 = inside SLO target; arrow column should stay "
       "high the longest)")

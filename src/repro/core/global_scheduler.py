@@ -195,7 +195,12 @@ class GlobalScheduler:
             return ScheduleOutcome(t1, via_fallback=True)
         if t2 is not None:
             return ScheduleOutcome(t2, via_fallback=True)
-        return ScheduleOutcome(self.pools.all_ids()[-1], via_fallback=True)
+        # last resort: both decode pools empty and no flip allowed. Pick the
+        # least-loaded decode-capable instance — never an arbitrary id, which
+        # could be a pure-PREFILL instance with no decode duty at all.
+        ids = self.pools.decode_capable() or self.pools.all_ids()
+        pick, _ = self._min_running_tokens(ids)
+        return ScheduleOutcome(pick, via_fallback=True)
 
     # ----------------------------------------- beyond-paper: proactive flip
     def _proactive_check(self, now: float) -> None:

@@ -1,0 +1,134 @@
+"""Scheduling policies: Arrow (the paper) + the evaluation baselines
+(§7: vLLM-colocated, static PD-disaggregation, and the §7.3 ablations
+Minimal-Load and Round-Robin).
+
+Backend-agnostic: policies see only pools/monitor/predictor/ClusterView, so
+the same ``POLICIES`` registry drives the discrete-event simulator and the
+real JAX engine through the shared runtime (core/runtime.py).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.global_scheduler import GlobalScheduler, ScheduleOutcome  # noqa: F401
+from repro.core.monitor import InstanceMonitor
+from repro.core.pools import InstancePools, Pool
+from repro.core.request import Request
+from repro.core.slo import SLO, SchedulerConfig
+from repro.core.ttft_predictor import TTFTPredictor
+
+
+class BasePolicy:
+    """Shared Eq.(1)/(2) prefill-queue bookkeeping."""
+
+    name = "base"
+    adaptive = False
+
+    def __init__(self, pools: InstancePools, monitor: InstanceMonitor,
+                 predictor: TTFTPredictor, slo: SLO, cfg: SchedulerConfig,
+                 cluster):
+        self.pools = pools
+        self.monitor = monitor
+        self.predictor = predictor
+        self.slo = slo
+        self.cfg = cfg
+        self.cluster = cluster
+        self.prefill_ready_at: Dict[int, float] = {
+            i: 0.0 for i in pools.all_ids()}
+
+    def _account(self, iid: int, now: float, input_len: int) -> None:
+        start = max(self.prefill_ready_at[iid], now)
+        self.prefill_ready_at[iid] = start + self.predictor.predict(input_len)
+
+    def _min_ready(self, ids, now):
+        return min(ids, key=lambda i: max(self.prefill_ready_at[i] - now, 0.0))
+
+    def _min_tokens(self, ids):
+        return min(ids, key=lambda i: self.monitor.get(i).running_tokens)
+
+    def on_monitor_tick(self, now: float) -> None:
+        pass
+
+
+class ArrowPolicy(GlobalScheduler):
+    """The paper's SLO-aware adaptive policy (GlobalScheduler as-is)."""
+
+    name = "arrow"
+    adaptive = True
+
+    def schedule_prefill_req(self, req: Request, now: float) -> int:
+        return self.schedule_prefill(req, now).instance
+
+    def schedule_decode_req(self, req: Request, now: float) -> int:
+        return self.schedule_decode(req, now).instance
+
+
+class MinimalLoadPolicy(BasePolicy):
+    """§7.3 'Minimal Load': min-load request scheduling, static pools.
+    Also stands in for vLLM-disaggregated / DistServe-style static PD
+    deployments (configure the PD ratio via InstancePools)."""
+
+    name = "minimal_load"
+
+    def schedule_prefill_req(self, req: Request, now: float) -> int:
+        iid = self._min_ready(self.pools.members(Pool.PREFILL), now)
+        self._account(iid, now, req.input_len)
+        return iid
+
+    def schedule_decode_req(self, req: Request, now: float) -> int:
+        return self._min_tokens(self.pools.members(Pool.DECODE))
+
+
+class RoundRobinPolicy(BasePolicy):
+    """§7.3 'Round Robin'."""
+
+    name = "round_robin"
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._p_idx = 0
+        self._d_idx = 0
+
+    def schedule_prefill_req(self, req: Request, now: float) -> int:
+        ids = sorted(self.pools.members(Pool.PREFILL))
+        iid = ids[self._p_idx % len(ids)]
+        self._p_idx += 1
+        self._account(iid, now, req.input_len)
+        return iid
+
+    def schedule_decode_req(self, req: Request, now: float) -> int:
+        ids = sorted(self.pools.members(Pool.DECODE))
+        iid = ids[self._d_idx % len(ids)]
+        self._d_idx += 1
+        return iid
+
+
+class ColocatedPolicy(BasePolicy):
+    """vLLM-style PD-colocated serving: every instance runs chunked prefill +
+    decode-prioritized continuous batching; a request decodes where it
+    prefilled (no KV transfer ever)."""
+
+    name = "colocated"
+
+    def schedule_prefill_req(self, req: Request, now: float) -> int:
+        ids = self.pools.all_ids()
+        # least-loaded by combined queue: predicted prefill drain + decode load
+        def load(i):
+            s = self.monitor.get(i)
+            return (max(self.prefill_ready_at[i] - now, 0.0)
+                    + s.running_tokens * self.slo.tpot / 4096.0)
+        iid = min(ids, key=load)
+        self._account(iid, now, req.input_len)
+        return iid
+
+    def schedule_decode_req(self, req: Request, now: float) -> int:
+        return req.prefill_instance
+
+
+POLICIES = {
+    "arrow": ArrowPolicy,
+    "arrow_proactive": ArrowPolicy,    # + SchedulerConfig.proactive=True
+    "minimal_load": MinimalLoadPolicy,
+    "round_robin": RoundRobinPolicy,
+    "colocated": ColocatedPolicy,
+}

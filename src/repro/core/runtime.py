@@ -1,0 +1,228 @@
+"""Shared serving runtime both ``ServingSystem`` backends are rebuilt on.
+
+Everything the discrete-event simulator and the real JAX engine used to
+duplicate lives here once:
+
+  * policy wiring — pools / monitor / ``POLICIES`` registry / flip counters,
+    including the colocated-deployment convention (all instances serve both
+    phases, so the prefill pool spans the cluster);
+  * request lifecycle glue — prefill dispatch (Algorithm 1), the post-prefill
+    decode-placement decision (Algorithm 2) with its local-decode vs
+    KV-migration outcome, streaming token delivery, finish accounting;
+  * the migration manager — FCFS, memory-gated admission at the destination
+    (§5.4), source-side KV release once the transfer lands;
+  * monitor-tick stat collection — one ``InstanceStats`` snapshot per
+    instance per tick, then the policy's instance-scheduling triggers.
+
+Backends supply the physical substrate through four hooks: ``local_of``
+(their per-instance ``LocalScheduler``), ``_begin_transfer`` (async DMA with
+a modeled delay in the sim; real array export/import on the engine),
+``_release_source_kv`` and ``_decode_started`` (post-migration nudges).
+"""
+from __future__ import annotations
+
+import enum
+from typing import Dict, Optional, Tuple
+
+from repro.core.clock import Clock
+from repro.core.local_scheduler import LocalScheduler
+from repro.core.monitor import InstanceMonitor, InstanceStats
+from repro.core.policies import POLICIES
+from repro.core.pools import InstancePools
+from repro.core.request import Request, RequestState
+from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
+                                ServingSystem, TIERS, TokenCallback)
+from repro.core.slo import SLO, SchedulerConfig
+from repro.core.ttft_predictor import TTFTPredictor
+
+
+class DecodePlacement(enum.Enum):
+    FINISHED = "finished"      # output_len <= 1: request ends at o_1
+    LOCAL = "local"            # decode continues on the prefill instance
+    MIGRATE = "migrate"        # KV must move to another instance
+
+
+class RuntimeCore(ServingSystem):
+    """Scheduling machinery shared by the simulator and the engine cluster."""
+
+    # ------------------------------------------------------------- wiring
+    def _init_runtime(self, ids, *, n_prefill: int, policy: str, slo: SLO,
+                      sched_cfg: SchedulerConfig, predictor: TTFTPredictor,
+                      clock: Clock) -> None:
+        ids = list(ids)
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {sorted(POLICIES)}")
+        if policy == "colocated":
+            n_prefill = len(ids)           # pools unused; all serve both
+        self.slo = slo
+        self.sched_cfg = sched_cfg
+        self.predictor = predictor
+        self.clock = clock
+        self.pools = InstancePools(ids, n_prefill=n_prefill)
+        self.monitor = InstanceMonitor(
+            ids, window=sched_cfg.token_interval_window)
+        self.policy = POLICIES[policy](self.pools, self.monitor, predictor,
+                                       slo, sched_cfg, self)
+        self.policy_name = policy
+        self.handles: Dict[int, RequestHandle] = {}
+        # decision counters: deterministic across backends for a given trace
+        # (one prefill dispatch per request, one decode dispatch per request
+        # with output_len > 1); migrations additionally depend on timing.
+        self.decisions: Dict[str, int] = {
+            "prefill": 0, "decode": 0, "migrations": 0}
+
+    # ------------------------------------------------------ backend hooks
+    def local_of(self, iid: int) -> LocalScheduler:
+        raise NotImplementedError
+
+    def _begin_transfer(self, rid: int, dst: int, kv: int, rem: int) -> bool:
+        """Start moving ``rid``'s KV to ``dst``. Return False when the
+        destination cannot take it right now (the item is requeued at the
+        front and admission stops — FCFS order is preserved)."""
+        raise NotImplementedError
+
+    def _release_source_kv(self, src: int, rid: int, kv: int) -> None:
+        raise NotImplementedError
+
+    def _decode_started(self, iid: int) -> None:
+        """A request joined ``iid``'s decode set (event-driven backends kick
+        the instance; polling backends need nothing)."""
+
+    # --------------------------------------------------------- ClusterView
+    def has_pending_prefill(self, iid: int) -> bool:
+        return self.local_of(iid).has_pending_prefill()
+
+    def has_pending_decode(self, iid: int) -> bool:
+        return self.local_of(iid).has_pending_decode()
+
+    # ---------------------------------------------------- request tracking
+    def _register(self, req: Request, tier: str,
+                  on_token: Optional[TokenCallback],
+                  on_finish: Optional[FinishCallback]) -> RequestHandle:
+        if tier not in TIERS:
+            raise ValueError(f"unknown SLO tier {tier!r}; "
+                             f"choose from {sorted(TIERS)}")
+        if req.rid in self.handles:
+            raise ValueError(f"rid {req.rid} already submitted")
+        handle = RequestHandle(req=req, slo=TIERS[tier].apply(self.slo),
+                               tier=tier, on_token=on_token,
+                               on_finish=on_finish)
+        self.handles[req.rid] = handle
+        return handle
+
+    # ----------------------------------------------------- lifecycle glue
+    def dispatch_prefill(self, handle: RequestHandle, now: float) -> int:
+        req = handle.req
+        iid = self.policy.schedule_prefill_req(req, now)
+        req.prefill_instance = iid
+        req.state = RequestState.PREFILLING
+        self.local_of(iid).enqueue_prefill(req.rid, req.input_len)
+        self.decisions["prefill"] += 1
+        return iid
+
+    def emit_token(self, handle: RequestHandle, now: float,
+                   token: Optional[int] = None, *, first: bool = False) -> None:
+        req = handle.req
+        if first:
+            req.first_token_time = now       # o_1 returned to user
+        else:
+            req.token_times.append(now)
+            req.decoded_tokens += 1
+        handle.tokens.append(token)
+        if handle.on_token is not None:
+            handle.on_token(handle, token, now)
+
+    def finish(self, handle: RequestHandle, now: float) -> None:
+        handle.req.finish_time = now
+        handle.req.state = RequestState.FINISHED
+        if handle.on_finish is not None:
+            handle.on_finish(handle)
+
+    def after_prefill(self, handle: RequestHandle, iid: int, now: float,
+                      token: Optional[int] = None,
+                      ) -> Tuple[DecodePlacement, Optional[int]]:
+        """Prefill finished on ``iid``: stream o_1, then place the decode
+        phase (Algorithm 2). Returns the placement and, for MIGRATE, the
+        target instance whose admission queue now holds the request."""
+        req = handle.req
+        self.emit_token(handle, now, token, first=True)
+        if req.output_len <= 1:
+            self.finish(handle, now)
+            return DecodePlacement.FINISHED, None
+        target = self.policy.schedule_decode_req(req, now)
+        self.decisions["decode"] += 1
+        req.decode_instance = target
+        remaining = req.output_len - 1
+        if target == iid:
+            req.state = RequestState.DECODING
+            self.local_of(iid).start_local_decode(
+                req.rid, req.input_len, remaining)
+            return DecodePlacement.LOCAL, iid
+        req.state = RequestState.MIGRATING
+        self.local_of(target).enqueue_migration(
+            req.rid, req.input_len, remaining)
+        self.decisions["migrations"] += 1
+        return DecodePlacement.MIGRATE, target
+
+    # -------------------------------------------------- migration manager
+    def admit_migrations(self, iid: int) -> None:
+        """FCFS, memory-gated admission (§5.4) at destination ``iid``; the
+        backend's ``_begin_transfer`` performs/schedules the data movement."""
+        loc = self.local_of(iid)
+        while True:
+            item = loc.next_migration()
+            if item is None:
+                return
+            rid, kv, rem = item
+            if rid not in self.handles:        # stale entry: drop it
+                continue
+            if not self._begin_transfer(rid, iid, kv, rem):
+                loc.migration_queue.appendleft((rid, kv, rem))
+                return
+
+    def complete_migration(self, rid: int, dst: int, kv: int, rem: int,
+                           now: float) -> None:
+        """KV landed on ``dst``: release it at the source, join the decode
+        set. (``now`` kept for symmetry/overrides; completion itself is not a
+        scheduling decision.)"""
+        req = self.handles[rid].req
+        src = req.prefill_instance
+        if src is not None and src != dst:
+            self._release_source_kv(src, rid, kv)
+        self.local_of(dst).admit_migrated(rid, kv, rem)
+        req.state = RequestState.DECODING
+        self._decode_started(dst)
+
+    # ------------------------------------------------ monitor-tick scrape
+    def collect_stats(self, now: float) -> None:
+        ready = getattr(self.policy, "prefill_ready_at", {})
+        for iid in self.pools.all_ids():
+            loc = self.local_of(iid)
+            self.monitor.update_stats(InstanceStats(
+                instance_id=iid,
+                prefill_queue_len=len(loc.prefill_queue),
+                prefill_backlog_tokens=loc.prefill_backlog_tokens,
+                prefill_ready_at=ready.get(iid, 0.0),
+                running_tokens=loc.running_tokens,
+                n_decode_running=len(loc.decode_running),
+                kv_tokens_used=loc.kv_used,
+                kv_tokens_capacity=loc.kv_capacity,
+            ))
+        self.policy.on_monitor_tick(now)
+
+    # ------------------------------------------------ pool-flip accounting
+    def flip_counts(self) -> Dict[str, int]:
+        return {
+            "total": self.pools.flips,
+            "d2p": getattr(self.policy, "n_d2p_flips", 0),
+            "p2d": getattr(self.policy, "n_p2d_flips", 0),
+            "proactive": getattr(self.policy, "n_proactive_flips", 0),
+        }
+
+    # ----------------------------------------------------------- reporting
+    def report(self) -> ServeReport:
+        return ServeReport(handles=list(self.handles.values()),
+                           flip_detail=self.flip_counts(),
+                           decisions=dict(self.decisions),
+                           duration=self.clock.now())

@@ -1,0 +1,198 @@
+"""Unified online serving API: the ``ServingSystem`` protocol both the
+discrete-event :class:`repro.sim.Simulator` and the real-compute
+:class:`repro.engine.ArrowEngineCluster` implement.
+
+Semantics are open-loop and streaming (DESIGN.md §1):
+
+  * ``submit(request) -> RequestHandle`` registers a request that *arrives* at
+    ``request.arrival`` on the system's clock; it does not block.
+  * ``step()`` performs one unit of work (one event / one cooperative pass);
+    ``run_until(t)`` advances the system's clock to ``t``; ``drain()`` runs
+    until every submitted request finished (or a timeout expires).
+  * Tokens are delivered as they land through per-request ``on_token``
+    callbacks, so TTFT/TPOT are observable online rather than reconstructed
+    from a batch result.
+  * Each request carries an SLO tier (``interactive``/``standard``/``batch``)
+    scaling the system's base SLO; attainment is reported per tier.
+
+The batch entrypoints ``Simulator.run(trace)`` and
+``ArrowEngineCluster.serve(reqs)`` remain as thin deprecation shims over this
+API (DESIGN.md §1.3).
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.clock import Clock
+from repro.core.request import Request
+from repro.core.slo import SLO
+
+
+@dataclass(frozen=True)
+class SLOTier:
+    """Per-request SLO class: a multiplier over the system's base SLO."""
+
+    name: str
+    ttft_scale: float = 1.0
+    tpot_scale: float = 1.0
+
+    def apply(self, base: SLO) -> SLO:
+        return SLO(base.ttft * self.ttft_scale, base.tpot * self.tpot_scale)
+
+
+TIERS: Dict[str, SLOTier] = {
+    "interactive": SLOTier("interactive", ttft_scale=0.5, tpot_scale=0.5),
+    "standard": SLOTier("standard"),
+    "batch": SLOTier("batch", ttft_scale=4.0, tpot_scale=4.0),
+}
+
+# on_token(handle, token_id_or_None, t): token ids are real ints on the
+# engine; the simulator streams ``None`` placeholders (it models timing, not
+# content). ``t`` is the system-clock time the token landed.
+TokenCallback = Callable[["RequestHandle", Optional[int], float], None]
+FinishCallback = Callable[["RequestHandle"], None]
+
+
+@dataclass
+class RequestHandle:
+    """Live view of one submitted request."""
+
+    req: Request
+    slo: SLO                               # tier-scaled effective SLO
+    tier: str = "standard"
+    on_token: Optional[TokenCallback] = None
+    on_finish: Optional[FinishCallback] = None
+    tokens: List[Optional[int]] = field(default_factory=list)
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+    @property
+    def done(self) -> bool:
+        return self.req.finish_time is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return self.req.ttft
+
+    @property
+    def tpot(self) -> Optional[float]:
+        return self.req.tpot
+
+    def meets_slo(self) -> bool:
+        return self.req.meets_slo(self.slo)
+
+
+@dataclass
+class ServeReport:
+    """One reporting path shared by sim and engine runs."""
+
+    handles: List[RequestHandle]
+    flip_detail: Dict[str, int] = field(default_factory=dict)
+    decisions: Dict[str, int] = field(default_factory=dict)
+    duration: float = 0.0
+
+    @property
+    def flips(self) -> int:
+        return self.flip_detail.get("total", 0)
+
+    @property
+    def n_total(self) -> int:
+        return len(self.handles)
+
+    @property
+    def n_finished(self) -> int:
+        return sum(1 for h in self.handles if h.done)
+
+    @property
+    def attainment(self) -> float:
+        """Fraction of *all* submitted requests finishing inside their
+        (tier-scaled) SLO — unfinished requests count as misses."""
+        if not self.handles:
+            return 1.0
+        return sum(1 for h in self.handles if h.meets_slo()) / len(self.handles)
+
+    def attainment_by_tier(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for tier in sorted({h.tier for h in self.handles}):
+            hs = [h for h in self.handles if h.tier == tier]
+            out[tier] = sum(1 for h in hs if h.meets_slo()) / len(hs)
+        return out
+
+    def percentile(self, metric: str, q: float) -> Optional[float]:
+        """q-quantile of ``metric`` ('ttft'/'tpot') over the requests where
+        it is already observable (TTFT exists once o_1 streamed, TPOT once
+        finished); ``None`` when no sample exists yet (callers print 'n/a',
+        never crash)."""
+        vals = sorted(v for h in self.handles
+                      if (v := getattr(h, metric)) is not None)
+        if not vals:
+            return None
+        return vals[min(int(q * len(vals)), len(vals) - 1)]
+
+    def summary(self) -> str:
+        def ms(v: Optional[float]) -> str:
+            return "n/a" if v is None else f"{v * 1e3:.1f}ms"
+
+        return (f"finished {self.n_finished}/{self.n_total} "
+                f"p50_ttft={ms(self.percentile('ttft', 0.5))} "
+                f"p90_ttft={ms(self.percentile('ttft', 0.9))} "
+                f"p90_tpot={ms(self.percentile('tpot', 0.9))} "
+                f"attainment={self.attainment:.2f} flips={self.flips}")
+
+
+class ServingSystem(abc.ABC):
+    """Online, streaming serving front-end over a pool of stateless instances.
+
+    Implementations: ``repro.sim.Simulator`` (VirtualClock) and
+    ``repro.engine.ArrowEngineCluster`` (WallClock).
+    """
+
+    clock: Clock
+
+    @abc.abstractmethod
+    def submit(self, req: Request, *, prompt=None, tier: str = "standard",
+               on_token: Optional[TokenCallback] = None,
+               on_finish: Optional[FinishCallback] = None) -> RequestHandle:
+        """Register ``req`` to arrive at ``req.arrival`` (system-clock
+        seconds). ``prompt`` is the token array for real-compute backends;
+        backends that only model timing ignore it, and the engine synthesizes
+        a deterministic prompt of ``req.input_len`` tokens when omitted."""
+
+    @abc.abstractmethod
+    def step(self) -> bool:
+        """Perform one unit of work. Returns False once fully idle (no queued
+        events / no pending or live requests)."""
+
+    @abc.abstractmethod
+    def run_until(self, t: float) -> None:
+        """Advance the system clock to ``t``, performing all due work."""
+
+    @abc.abstractmethod
+    def drain(self, *, timeout: Optional[float] = None) -> ServeReport:
+        """Run until every submitted request finished, or ``timeout`` system-
+        clock seconds elapsed. Returns the report either way."""
+
+    @abc.abstractmethod
+    def report(self) -> ServeReport:
+        """Snapshot metrics over everything submitted so far."""
+
+
+def replay_trace(system: ServingSystem, trace: List[Request], *,
+                 tier: str = "standard", time_scale: float = 1.0,
+                 on_token: Optional[TokenCallback] = None,
+                 on_finish: Optional[FinishCallback] = None,
+                 ) -> List[RequestHandle]:
+    """Submit fresh copies of ``trace`` through the unified API, so the same
+    trace object can replay through several systems (sim-vs-engine runs)
+    without sharing mutable Request state. Returns handles in trace order."""
+    handles = []
+    for r in trace:
+        req = Request(rid=r.rid, arrival=r.arrival * time_scale,
+                      input_len=r.input_len, output_len=r.output_len)
+        handles.append(system.submit(req, tier=tier, on_token=on_token,
+                                     on_finish=on_finish))
+    return handles

@@ -1,29 +1,44 @@
-"""Real-compute Arrow cluster: N EngineInstances (one JAX process, cooperative
-round-robin execution standing in for N accelerators), the Arrow global
-scheduler, instance monitor and KV transfers with actual array movement.
+"""Real-compute Arrow cluster: a ``ServingSystem`` backend over N
+EngineInstances (one JAX process, cooperative round-robin execution standing
+in for N accelerators) with real array movement for KV transfers.
 
 Wall-clock time drives everything: the TTFT predictor is fitted from a real
 profiling pass at launch, token intervals are measured, and the scheduler
 makes the same decisions it would on a hardware cluster. Use small models/CPU.
+
+All scheduling glue (prefill dispatch, decode placement, the FCFS migration
+manager, monitor-tick scraping, the ``POLICIES`` registry) comes from the
+shared ``RuntimeCore`` (core/runtime.py) — so the engine runs the same
+baseline policies (``colocated``, ``minimal_load``, ...) and replays the same
+traces as the simulator, and streams real token ids through per-request
+``on_token`` callbacks as they land.
 """
 from __future__ import annotations
 
+import heapq
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (SLO, GlobalScheduler, InstanceMonitor, InstancePools,
-                        InstanceStats, Request, RequestState, SchedulerConfig,
+from repro.core import (Request, RequestState, SLO, SchedulerConfig,
                         TTFTPredictor)
+from repro.core.clock import WallClock
+from repro.core.local_scheduler import LocalScheduler
+from repro.core.runtime import DecodePlacement, RuntimeCore
+from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
+                                TokenCallback)
 from repro.engine.instance import EngineInstance
 from repro.models import build_model
 
 
 @dataclass
 class ServeRequest:
+    """Legacy batch-mode request (kept for the ``serve()`` shim)."""
+
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
@@ -33,14 +48,16 @@ class ServeRequest:
     output_tokens: List[int] = field(default_factory=list)
 
 
-class ArrowEngineCluster:
+class ArrowEngineCluster(RuntimeCore):
     def __init__(self, cfg: ModelConfig, *, n_instances: int = 2,
                  n_prefill: int = 1, n_slots: int = 8, capacity: int = 256,
                  slo: SLO = SLO(ttft=2.0, tpot=0.5),
                  sched_cfg: Optional[SchedulerConfig] = None, seed: int = 0,
-                 params=None, chunk_tokens: Optional[int] = None):
+                 params=None, chunk_tokens: Optional[int] = None,
+                 policy: str = "arrow"):
         import jax
         self.cfg = cfg
+        self.capacity = capacity
         if params is None:
             model = build_model(cfg)
             params = model.init(jax.random.PRNGKey(seed))
@@ -48,159 +65,157 @@ class ArrowEngineCluster:
             i: EngineInstance(i, cfg, params, n_slots=n_slots,
                               capacity=capacity, chunk_tokens=chunk_tokens)
             for i in range(n_instances)}
-        ids = list(self.instances)
-        self.pools = InstancePools(ids, n_prefill=n_prefill)
-        self.monitor = InstanceMonitor(ids)
         # real profiling pass on instance 0 (instances are homogeneous here)
         samples = self.instances[0].profile_prefill()
-        self.predictor = TTFTPredictor.fit(samples)
-        self.sched_cfg = sched_cfg or SchedulerConfig(
+        predictor = TTFTPredictor.fit(samples)
+        sched_cfg = sched_cfg or SchedulerConfig(
             max_running_tokens=n_slots * capacity, monitor_interval=0.05)
-        self.gs = GlobalScheduler(self.pools, self.monitor, self.predictor,
-                                  slo, self.sched_cfg, self)
-        self._pending_migrations: List[tuple] = []   # (rid, src, dst)
+        self._init_runtime(list(self.instances), n_prefill=n_prefill,
+                           policy=policy, slo=slo, sched_cfg=sched_cfg,
+                           predictor=predictor, clock=WallClock())
+        self._pending: list = []                # heap: (arrival, rid)
+        self._live: Dict[int, RequestHandle] = {}
+        self._prompts: Dict[int, np.ndarray] = {}
+        self._last_tick = 0.0
 
-    # ------------------------------------------------------- ClusterView
-    def has_pending_prefill(self, iid: int) -> bool:
-        return self.instances[iid].local.has_pending_prefill()
+    @property
+    def gs(self):
+        """Back-compat alias from when the engine hard-wired GlobalScheduler;
+        with ``policy='arrow'`` this is the GlobalScheduler subclass."""
+        return self.policy
 
-    def has_pending_decode(self, iid: int) -> bool:
-        return self.instances[iid].local.has_pending_decode()
+    # ----------------------------------------------------- RuntimeCore hooks
+    def local_of(self, iid: int) -> LocalScheduler:
+        return self.instances[iid].local
 
-    # ------------------------------------------------------------- serve
+    def _begin_transfer(self, rid: int, dst: int, kv: int, rem: int) -> bool:
+        # real KV movement between instances (synchronous array export/import)
+        src = self.handles[rid].req.prefill_instance
+        k, v, L, last, gen = self.instances[src].export_kv(rid)
+        if not self.instances[dst].import_kv(rid, k, v, L, last, gen):
+            return False                        # no free slot: retry later
+        self.complete_migration(rid, dst, kv, rem, self.clock.now())
+        return True
+
+    def _release_source_kv(self, src: int, rid: int, kv: int) -> None:
+        self.instances[src].drop(rid)
+
+    # --------------------------------------------------------- ServingSystem
+    def submit(self, req: Request, *, prompt: Optional[np.ndarray] = None,
+               tier: str = "standard",
+               on_token: Optional[TokenCallback] = None,
+               on_finish: Optional[FinishCallback] = None) -> RequestHandle:
+        """``req.arrival`` is wall-clock seconds after the serving loop
+        starts. When ``prompt`` is omitted a deterministic synthetic prompt is
+        generated (clamped so prompt + decode tokens fit a KV slot), which is
+        what lets ``repro.traces`` traces replay directly on the engine."""
+        if prompt is None:
+            n = max(1, min(req.input_len, self.capacity - req.output_len))
+            rng = np.random.default_rng(0xA44 + req.rid)
+            prompt = rng.integers(1, self.cfg.vocab_size,
+                                  size=n).astype(np.int32)
+        req.input_len = len(prompt)
+        handle = self._register(req, tier, on_token, on_finish)
+        self._prompts[req.rid] = np.asarray(prompt, np.int32)
+        heapq.heappush(self._pending, (req.arrival, req.rid))
+        return handle
+
+    def step(self) -> bool:
+        t = self.clock.now()
+        # arrivals due
+        while self._pending and self._pending[0][0] <= t:
+            _, rid = heapq.heappop(self._pending)
+            handle = self.handles[rid]
+            self.dispatch_prefill(handle, t)
+            self._live[rid] = handle
+        # migrations (instant data move + admission gate)
+        for dst in self.instances:
+            self.admit_migrations(dst)
+        # one iteration per instance (cooperative round-robin)
+        for iid, inst in self.instances.items():
+            self._step_instance(iid, inst)
+        # monitor tick
+        now = self.clock.now()
+        if now - self._last_tick >= self.sched_cfg.monitor_interval:
+            self._last_tick = now
+            self.collect_stats(now)
+        return bool(self._live or self._pending)
+
+    def run_until(self, t: float) -> None:
+        while self.clock.now() < t:
+            if not self.step():
+                time.sleep(min(1e-3, max(t - self.clock.now(), 0.0)))
+
+    def drain(self, *, timeout: Optional[float] = 300.0) -> ServeReport:
+        limit = (float("inf") if timeout is None
+                 else self.clock.now() + timeout)
+        while (self._pending or self._live) and self.clock.now() < limit:
+            self.step()
+            if not self._live and self._pending:
+                time.sleep(max(self._pending[0][0] - self.clock.now(), 0.0))
+        return self.report()
+
+    # ------------------------------------------------- deprecated batch shim
     def serve(self, reqs: List[ServeRequest], *, timeout: float = 300.0
               ) -> List[ServeRequest]:
-        t0 = time.perf_counter()
-        now = lambda: time.perf_counter() - t0  # noqa: E731
-        pending = sorted(reqs, key=lambda r: r.arrival_offset)
-        live: Dict[int, ServeRequest] = {}
-        last_tick = 0.0
-        while (pending or live) and now() < timeout:
-            t = now()
-            # arrivals
-            while pending and pending[0].arrival_offset <= t:
-                sr = pending.pop(0)
-                sr.req = Request(sr.rid, arrival=t, input_len=len(sr.prompt),
-                                 output_len=sr.max_new_tokens)
-                out = self.gs.schedule_prefill(sr.req, t)
-                sr.req.prefill_instance = out.instance
-                sr.req.state = RequestState.PREFILLING
-                inst = self.instances[out.instance]
-                inst.local.enqueue_prefill(sr.rid, len(sr.prompt))
-                live[sr.rid] = sr
-            # migrations (instant data move + admission gate)
-            self._run_migrations(live, now)
-            # one iteration per instance (cooperative round-robin)
-            for iid, inst in self.instances.items():
-                self._step_instance(iid, inst, live, now)
-            # monitor tick
-            if now() - last_tick >= self.sched_cfg.monitor_interval:
-                last_tick = now()
-                self._monitor_tick(last_tick)
-            if not live and pending:
-                time.sleep(max(pending[0].arrival_offset - now(), 0.0))
+        """Batch entrypoint kept for compatibility; new code should use
+        ``submit()`` + ``drain()`` (the unified ServingSystem API)."""
+        warnings.warn("ArrowEngineCluster.serve(reqs) is deprecated; use the "
+                      "ServingSystem API (submit/step/drain)",
+                      DeprecationWarning, stacklevel=2)
+        handles = []
+        for sr in reqs:
+            sr.req = Request(sr.rid, arrival=sr.arrival_offset,
+                             input_len=len(sr.prompt),
+                             output_len=sr.max_new_tokens)
+            handles.append(self.submit(sr.req, prompt=sr.prompt))
+        self.drain(timeout=timeout)
+        for sr, h in zip(reqs, handles):
+            sr.output_tokens = [t for t in h.tokens if t is not None]
         return reqs
 
     # ---------------------------------------------------------- internals
-    def _step_instance(self, iid, inst, live, now) -> None:
+    def _step_instance(self, iid: int, inst: EngineInstance) -> None:
         plan = inst.local.plan_iteration()
         if plan.is_empty:
             return
-        t_start = now()
+        t_start = self.clock.now()
         # decode batch first
         done_tokens = inst.run_decode_iteration(plan.decode_rids)
-        t_after = now()
+        t_after = self.clock.now()
         for rid, tok in done_tokens.items():
-            sr = live.get(rid)
-            if sr is None:
+            handle = self._live.get(rid)
+            if handle is None:
                 continue
-            sr.output_tokens.append(tok)
-            sr.req.token_times.append(t_after)
-            sr.req.decoded_tokens += 1
+            self.emit_token(handle, t_after, tok)
             if inst.local.complete_decode_iteration(rid):
-                sr.req.finish_time = t_after
-                sr.req.state = RequestState.FINISHED
+                self.finish(handle, t_after)
                 inst.drop(rid)
-                live.pop(rid, None)
+                self._live.pop(rid, None)
         if done_tokens:
             self.monitor.record_iteration(iid, t_after, len(done_tokens),
                                           t_after - t_start)
         # chunked prefill (§5.4): one chunk per iteration, decode-first batch
         for rid, start, ln in plan.prefill_chunks[:1]:
-            sr = live.get(rid)
-            if sr is None:
+            handle = self._live.get(rid)
+            if handle is None:
                 continue
             if start == 0 and not inst.kv.free:    # no slot: retry next round
                 continue
-            tok = inst.run_prefill_chunk(rid, sr.prompt[start:start + ln],
-                                         start, sr.req.input_len)
-            t_fin = now()
+            prompt = self._prompts[rid]
+            tok = inst.run_prefill_chunk(rid, prompt[start:start + ln],
+                                         start, handle.req.input_len)
+            t_fin = self.clock.now()
             inst.local.complete_prefill_chunk(rid, ln)
             if tok is None:                        # more chunks to go
                 continue
-            sr.output_tokens.append(tok)
-            sr.req.first_token_time = t_fin
+            self._prompts.pop(rid, None)           # prefill done: free it
             # resync Eq.(2) bookkeeping against reality: predicted drain time
             # of the instance = now + predicted time of the remaining queue
             backlog = sum(self.predictor.predict(w.input_len)
                           for w in inst.local.prefill_queue.values())
-            self.gs.prefill_ready_at[iid] = t_fin + backlog
-            if sr.max_new_tokens <= 1:
-                sr.req.finish_time = t_fin
-                sr.req.state = RequestState.FINISHED
+            self.policy.prefill_ready_at[iid] = t_fin + backlog
+            placement, _ = self.after_prefill(handle, iid, t_fin, token=tok)
+            if placement is DecodePlacement.FINISHED:
                 inst.drop(rid)
-                live.pop(rid, None)
-                continue
-            target = self.gs.schedule_decode(sr.req, t_fin).instance
-            sr.req.decode_instance = target
-            rem = sr.max_new_tokens - 1
-            if target == iid:
-                sr.req.state = RequestState.DECODING
-                inst.local.start_local_decode(rid, sr.req.input_len, rem)
-            else:
-                sr.req.state = RequestState.MIGRATING
-                self.instances[target].local.enqueue_migration(
-                    rid, sr.req.input_len, rem)
-                self._pending_migrations.append((rid, iid, target))
-
-    def _run_migrations(self, live, now) -> None:
-        src_of = {r: (s, d) for (r, s, d) in self._pending_migrations}
-        for dst in self.instances:
-            dloc = self.instances[dst].local
-            while True:
-                item = dloc.next_migration()       # FCFS + memory gate (§5.4)
-                if item is None:
-                    break
-                mrid, kv_tokens, rem = item
-                src = src_of.get(mrid, (None, None))[0]
-                sr = live.get(mrid)
-                if sr is None or src is None:
-                    self._pending_migrations = [
-                        t for t in self._pending_migrations if t[0] != mrid]
-                    continue
-                # real KV movement between instances
-                k, v, L, last, gen = self.instances[src].export_kv(mrid)
-                ok = self.instances[dst].import_kv(mrid, k, v, L, last, gen)
-                if not ok:                          # no free slot: retry later
-                    dloc.migration_queue.appendleft((mrid, kv_tokens, rem))
-                    break
-                self.instances[src].drop(mrid)
-                dloc.admit_migrated(mrid, kv_tokens, rem)
-                sr.req.state = RequestState.DECODING
-                self._pending_migrations = [
-                    t for t in self._pending_migrations if t[0] != mrid]
-
-    def _monitor_tick(self, t: float) -> None:
-        for iid, inst in self.instances.items():
-            loc = inst.local
-            self.monitor.update_stats(InstanceStats(
-                instance_id=iid,
-                prefill_queue_len=len(loc.prefill_queue),
-                prefill_backlog_tokens=loc.prefill_backlog_tokens,
-                prefill_ready_at=self.gs.prefill_ready_at.get(iid, 0.0),
-                running_tokens=loc.running_tokens,
-                n_decode_running=len(loc.decode_running),
-                kv_tokens_used=loc.kv_used,
-                kv_tokens_capacity=loc.kv_capacity,
-            ))
-        self.gs.on_monitor_tick(t)
+                self._live.pop(rid, None)

@@ -1,22 +1,51 @@
-"""Serving launcher — the real-compute Arrow cluster on CPU with a reduced
-model, or the cluster-scale simulator for full configs.
+"""Serving launcher — one ServingSystem front-end over both backends: the
+real-compute Arrow cluster on CPU with a reduced model, or the cluster-scale
+simulator for full configs. Requests, traces and reporting share one path
+(DESIGN.md §1), so sim-vs-engine runs are directly comparable.
 
   PYTHONPATH=src python -m repro.launch.serve --mode engine --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --mode engine --trace azure_code \
+      --rate 2 --duration 10 --policy colocated
   PYTHONPATH=src python -m repro.launch.serve --mode sim --arch gemma-2b \
       --trace azure_code --rate 8
 """
 from __future__ import annotations
 
 import argparse
+from typing import List, Optional
 
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.request import Request
+from repro.core.serving import ServeReport, ServingSystem, replay_trace
 from repro.core.slo import SLO
 
 
-def run_engine(args) -> None:
-    from repro.engine import ArrowEngineCluster, ServeRequest
+def synth_requests(n: int, gap: float, vocab: int, seed: int = 0
+                   ) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival=float(i) * gap,
+                    input_len=int(rng.integers(8, 64)),
+                    output_len=int(rng.integers(2, 16)))
+            for i in range(n)]
+
+
+def run_and_report(system: ServingSystem, trace: List[Request], *,
+                   tier: str, label: str,
+                   timeout: Optional[float] = None) -> ServeReport:
+    replay_trace(system, trace, tier=tier)
+    report = system.drain(timeout=timeout)
+    print(f"[{label}] {report.summary()}")
+    by_tier = report.attainment_by_tier()
+    if len(by_tier) > 1:
+        print(f"[{label}] attainment by tier: " +
+              " ".join(f"{k}={v:.2f}" for k, v in by_tier.items()))
+    return report
+
+
+def run_engine(args) -> ServeReport:
+    from repro.engine import ArrowEngineCluster
     cfg = get_smoke_config(args.arch)
     if cfg.family != "dense":
         raise SystemExit("--mode engine supports dense-family archs; use "
@@ -24,42 +53,35 @@ def run_engine(args) -> None:
     cluster = ArrowEngineCluster(cfg, n_instances=args.instances,
                                  n_prefill=max(args.instances // 2, 1),
                                  n_slots=8, capacity=256,
-                                 slo=SLO(args.ttft, args.tpot))
-    rng = np.random.default_rng(0)
-    reqs = [ServeRequest(
-        rid=i,
-        prompt=rng.integers(1, cfg.vocab_size,
-                            size=int(rng.integers(8, 64))).astype(np.int32),
-        max_new_tokens=int(rng.integers(2, 16)),
-        arrival_offset=float(i) * args.gap)
-        for i in range(args.requests)]
-    out = cluster.serve(reqs, timeout=args.timeout)
-    done = [r for r in out if r.req and r.req.finish_time is not None]
-    ttfts = sorted(r.req.ttft for r in done)
-    tpots = sorted(r.req.tpot for r in done)
-    ok = sum(1 for r in done if r.req.meets_slo(SLO(args.ttft, args.tpot)))
-    print(f"[serve] finished {len(done)}/{len(out)} "
-          f"p50_ttft={ttfts[len(ttfts)//2]*1e3:.1f}ms "
-          f"p90_tpot={tpots[int(len(tpots)*0.9)]*1e3:.1f}ms "
-          f"slo_attainment={ok/max(len(done),1):.2f} "
-          f"pool_flips={cluster.pools.flips}")
+                                 slo=SLO(args.ttft, args.tpot),
+                                 policy=args.policy)
+    if args.trace:
+        from repro.traces import load_trace
+        trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
+                           duration=args.duration)
+    else:
+        trace = synth_requests(args.requests, args.gap, cfg.vocab_size)
+    return run_and_report(cluster, trace, tier=args.tier,
+                          timeout=args.timeout,
+                          label=f"serve-engine {args.policy}")
 
 
-def run_sim(args) -> None:
+def run_sim(args) -> ServeReport:
     from repro.sim import Simulator
     from repro.traces import TRACE_PRESETS, load_trace
     cfg = get_config(args.arch)
-    p = TRACE_PRESETS[args.trace]
-    trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
+    trace_name = args.trace or "azure_code"
+    p = TRACE_PRESETS[trace_name]
+    trace = load_trace(trace_name, rate_scale=args.rate, seed=0,
                        duration=args.duration)
     sim = Simulator(cfg, n_instances=args.instances,
                     n_prefill=max(args.instances // 2, 1),
                     policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot))
-    res = sim.run(trace)
-    print(f"[serve-sim] {args.arch} {args.trace} x{args.rate} "
-          f"policy={args.policy}: n={len(trace)} "
-          f"attainment={res.attainment:.3f} p90_ttft={res.p90('ttft'):.3f}s "
-          f"p90_tpot={res.p90('tpot')*1e3:.1f}ms flips={res.flips}")
+    # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
+    # time and must cover the whole trace
+    return run_and_report(sim, trace, tier=args.tier,
+                          label=f"serve-sim {args.arch} {trace_name} "
+                                f"x{args.rate} {args.policy}")
 
 
 def main(argv=None) -> None:
@@ -72,14 +94,20 @@ def main(argv=None) -> None:
     ap.add_argument("--ttft", type=float, default=5.0)
     ap.add_argument("--tpot", type=float, default=2.0)
     ap.add_argument("--timeout", type=float, default=300.0)
-    ap.add_argument("--trace", default="azure_code")
+    ap.add_argument("--trace", default=None,
+                    help="replay a repro.traces preset (both modes); "
+                         "engine default is synthetic requests")
     ap.add_argument("--rate", type=float, default=8.0)
     ap.add_argument("--duration", type=float, default=120.0)
     ap.add_argument("--policy", default="arrow")
+    ap.add_argument("--tier", default="standard",
+                    choices=("interactive", "standard", "batch"))
     args = ap.parse_args(argv)
     if args.mode == "engine":
         run_engine(args)
     else:
+        if args.trace is None:
+            args.trace = "azure_code"
         run_sim(args)
 
 

@@ -1,28 +1,37 @@
-"""Discrete-event cluster simulator: replays a trace against N stateless
-instances driven by a scheduling policy, with the analytic TPU cost model
-supplying iteration/transfer times. Reproduces the paper's evaluation loop
-(Fig. 7/8/9) at cluster scale on a laptop.
+"""Discrete-event cluster simulator: a ``ServingSystem`` backend that replays
+traffic against N stateless instances driven by a scheduling policy, with the
+analytic TPU cost model supplying iteration/transfer times. Reproduces the
+paper's evaluation loop (Fig. 7/8/9) at cluster scale on a laptop.
 
 Event kinds: request arrival, iteration completion, migration completion,
 monitor tick. Instances run iterations back-to-back while they have work
 (continuous batching); chunked prefill mixes phases inside one iteration.
+
+All scheduling glue (prefill dispatch, decode placement, the FCFS migration
+manager, monitor-tick scraping) lives in the shared ``RuntimeCore``
+(core/runtime.py); this module only supplies the event loop, the virtual
+clock and the cost-model timings. Tokens stream through per-request
+``on_token`` callbacks as they land in virtual time — content is not
+modeled, so the streamed token ids are ``None``.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
+from repro.core.clock import VirtualClock
 from repro.core.local_scheduler import LocalScheduler
-from repro.core.monitor import InstanceMonitor, InstanceStats
-from repro.core.pools import InstancePools
-from repro.core.request import Request, RequestState
+from repro.core.request import Request
+from repro.core.runtime import DecodePlacement, RuntimeCore
+from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
+                                TokenCallback)
 from repro.core.slo import SLO, SchedulerConfig
 from repro.core.ttft_predictor import TTFTPredictor
 from repro.sim.cost_model import CostModel, InstanceProfile
-from repro.sim.policies import POLICIES
 
 
 @dataclass
@@ -47,7 +56,7 @@ class SimResult:
         return vals[min(int(0.9 * len(vals)), len(vals) - 1)]
 
 
-class Simulator:
+class Simulator(RuntimeCore):
     def __init__(self, cfg: ModelConfig, *, n_instances: int = 8,
                  n_prefill: int = 4, policy: str = "arrow",
                  slo: SLO = SLO(3.0, 0.1),
@@ -59,18 +68,17 @@ class Simulator:
         clusters (paper §8): per-instance cost models + a per-instance-fitted
         TTFT predictor; ``profile`` is the homogeneous default."""
         self.cfg = cfg
-        ids_all = list(range(n_instances))
+        ids = list(range(n_instances))
         self.costs: Dict[int, CostModel] = {
             i: CostModel(cfg, (profiles or {}).get(i, profile))
-            for i in ids_all}
+            for i in ids}
         self.cost = self.costs[0]
-        self.slo = slo
         if profiles:
             from repro.core.ttft_predictor import PerInstancePredictor
-            self.predictor = PerInstancePredictor.fit_per_instance(
-                {i: self.costs[i].profile_ttft_samples() for i in ids_all})
+            predictor = PerInstancePredictor.fit_per_instance(
+                {i: self.costs[i].profile_ttft_samples() for i in ids})
         else:
-            self.predictor = TTFTPredictor.fit(self.cost.profile_ttft_samples())
+            predictor = TTFTPredictor.fit(self.cost.profile_ttft_samples())
         # conservative Max Running Tokens: profiled on the weakest instance
         mrt = min(
             c.max_running_tokens(
@@ -80,26 +88,21 @@ class Simulator:
         overrides = {"max_running_tokens": mrt}
         if policy == "arrow_proactive":
             overrides["proactive"] = True
-        self.sched_cfg = SchedulerConfig(**{**base.__dict__, **overrides})
+        sched_cfg = SchedulerConfig(**{**base.__dict__, **overrides})
 
-        ids = list(range(n_instances))
-        if policy == "colocated":
-            n_prefill = n_instances       # pools unused; all serve both
-        self.pools = InstancePools(ids, n_prefill=n_prefill)
-        self.monitor = InstanceMonitor(ids, window=self.sched_cfg.token_interval_window)
+        self._init_runtime(ids, n_prefill=n_prefill, policy=policy, slo=slo,
+                           sched_cfg=sched_cfg, predictor=predictor,
+                           clock=VirtualClock())
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
             for i in ids}
-        self.policy = POLICIES[policy](self.pools, self.monitor, self.predictor,
-                                       slo, self.sched_cfg, self)
-        self._colocated = policy == "colocated"
 
         self.requests: Dict[int, Request] = {}
         self._heap: list = []
         self._seq = itertools.count()
         self._busy: Dict[int, bool] = {i: False for i in ids}
-        self._now = 0.0
+        self._tick_armed = False
 
         # Motivation experiment (§3.2 "lagging instance scheduling"): legacy
         # systems pay a reload/drain penalty per flip. Arrow's stateless
@@ -117,39 +120,83 @@ class Simulator:
 
             self.pools.move = move
 
-    # ------------------------------------------------------- ClusterView
-    def has_pending_prefill(self, iid: int) -> bool:
-        return self.locals[iid].has_pending_prefill()
+    # ----------------------------------------------------- RuntimeCore hooks
+    @property
+    def _now(self) -> float:
+        return self.clock.now()
 
-    def has_pending_decode(self, iid: int) -> bool:
-        return self.locals[iid].has_pending_decode()
+    def local_of(self, iid: int) -> LocalScheduler:
+        return self.locals[iid]
+
+    def _begin_transfer(self, rid: int, dst: int, kv: int, rem: int) -> bool:
+        # reserve memory now; data lands after the (async DMA) transfer delay
+        loc = self.locals[dst]
+        loc.kv_used += kv
+        dur = self.costs[dst].transfer_time(kv)
+        self._push(self._now + dur, self._on_migration_done, dst, rid, kv, rem)
+        return True
+
+    def _release_source_kv(self, src: int, rid: int, kv: int) -> None:
+        self.locals[src].release_prefill_kv(rid, kv)
+        self._kick(src)
+
+    def _decode_started(self, iid: int) -> None:
+        self._kick(iid)
+
+    # --------------------------------------------------------- ServingSystem
+    def submit(self, req: Request, *, prompt=None, tier: str = "standard",
+               on_token: Optional[TokenCallback] = None,
+               on_finish: Optional[FinishCallback] = None) -> RequestHandle:
+        handle = self._register(req, tier, on_token, on_finish)
+        self.requests[req.rid] = req
+        self._push(max(req.arrival, self._now), self._on_arrival, req.rid)
+        if not self._tick_armed:
+            self._tick_armed = True
+            self._push(self._now + self.sched_cfg.monitor_interval,
+                       self._on_monitor_tick)
+        return handle
+
+    def step(self) -> bool:
+        if not self._heap:
+            return False
+        t, _, fn, args = heapq.heappop(self._heap)
+        self.clock.advance(t)
+        fn(*args)
+        return bool(self._heap)
+
+    def run_until(self, t: float) -> None:
+        while self._heap and self._heap[0][0] <= t:
+            self.step()
+        self.clock.advance(t)
+
+    def drain(self, *, timeout: Optional[float] = None) -> ServeReport:
+        limit = float("inf") if timeout is None else self._now + timeout
+        while self._heap and self._heap[0][0] <= limit:
+            self.step()
+        return self.report()
+
+    # ------------------------------------------------- deprecated batch shim
+    def run(self, trace: List[Request], *, max_time: float = 1e9) -> SimResult:
+        """Batch entrypoint kept for compatibility; new code should use
+        ``submit()`` + ``drain()`` (the unified ServingSystem API)."""
+        warnings.warn("Simulator.run(trace) is deprecated; use the "
+                      "ServingSystem API (submit/step/drain)",
+                      DeprecationWarning, stacklevel=2)
+        for r in trace:
+            self.submit(r)
+        while self._heap and self._heap[0][0] <= max_time:
+            self.step()
+        return SimResult(list(self.requests.values()), self.slo,
+                         flips=self.pools.flips, sim_time=self._now)
 
     # ------------------------------------------------------------ events
     def _push(self, t: float, fn, *args) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), fn, args))
 
-    def run(self, trace: List[Request], *, max_time: float = 1e9) -> SimResult:
-        for r in trace:
-            self.requests[r.rid] = r
-            self._push(r.arrival, self._on_arrival, r.rid)
-        self._push(self.sched_cfg.monitor_interval, self._on_monitor_tick)
-        while self._heap:
-            t, _, fn, args = heapq.heappop(self._heap)
-            if t > max_time:
-                break
-            self._now = t
-            fn(*args)
-        return SimResult(list(self.requests.values()), self.slo,
-                         flips=self.pools.flips, sim_time=self._now)
-
     # -------------------------------------------------------- handlers
     def _on_arrival(self, rid: int) -> None:
-        req = self.requests[rid]
-        iid = self.policy.schedule_prefill_req(req, self._now)
-        req.prefill_instance = iid
-        req.state = RequestState.PREFILLING
-        self.locals[iid].enqueue_prefill(rid, req.input_len)
-        self._kick(iid)
+        self.dispatch_prefill(self.handles[rid], self._now)
+        self._kick(self.handles[rid].req.prefill_instance)
 
     def _kick(self, iid: int) -> None:
         """Start an iteration if the instance is idle and has work."""
@@ -159,7 +206,7 @@ class Simulator:
             self._push(self._flip_block[iid], self._kick, iid)
             return
         loc = self.locals[iid]
-        self._try_admit_migrations(iid)
+        self.admit_migrations(iid)
         plan = loc.plan_iteration()
         if plan.is_empty:
             return
@@ -172,18 +219,16 @@ class Simulator:
     def _on_iteration_done(self, iid: int, plan, dur: float) -> None:
         loc = self.locals[iid]
         now = self._now
-        # decode tokens out
+        # decode tokens out (streamed; the sim models timing, not content)
         emitted = 0
         for rid in plan.decode_rids:
             if rid not in loc.decode_running:
                 continue
-            req = self.requests[rid]
-            req.token_times.append(now)
-            req.decoded_tokens += 1
+            handle = self.handles[rid]
+            self.emit_token(handle, now)
             emitted += 1
             if loc.complete_decode_iteration(rid):
-                req.finish_time = now
-                req.state = RequestState.FINISHED
+                self.finish(handle, now)
         self.monitor.record_iteration(iid, now, emitted, dur)
         # prefill chunks
         for rid, start, ln in plan.prefill_chunks:
@@ -192,72 +237,29 @@ class Simulator:
             req = self.requests[rid]
             req.prefill_done_tokens = start + ln
             if loc.complete_prefill_chunk(rid, ln):
-                self._on_prefill_complete(iid, req)
+                self._on_prefill_complete(iid, rid)
         self._busy[iid] = False
         self._kick(iid)
 
-    def _on_prefill_complete(self, iid: int, req: Request) -> None:
-        now = self._now
-        req.first_token_time = now                      # o_1 returned to user
-        if req.output_len <= 1:
-            req.finish_time = now
-            req.state = RequestState.FINISHED
-            self.locals[iid].release_prefill_kv(req.rid, req.input_len)
-            return
-        target = self.policy.schedule_decode_req(req, now)
-        req.decode_instance = target
-        remaining = req.output_len - 1
-        if target == iid or self._colocated:
-            req.state = RequestState.DECODING
-            self.locals[iid].start_local_decode(req.rid, req.input_len, remaining)
+    def _on_prefill_complete(self, iid: int, rid: int) -> None:
+        handle = self.handles[rid]
+        placement, target = self.after_prefill(handle, iid, self._now)
+        if placement is DecodePlacement.FINISHED:
+            self.locals[iid].release_prefill_kv(rid, handle.req.input_len)
+        elif placement is DecodePlacement.LOCAL:
             self._kick(iid)
         else:
-            req.state = RequestState.MIGRATING
-            self.locals[target].enqueue_migration(req.rid, req.input_len, remaining)
-            self._try_admit_migrations(target)
+            self.admit_migrations(target)
 
-    def _try_admit_migrations(self, iid: int) -> None:
-        """FCFS, memory-gated admission; transfer is async DMA (instance can
-        keep computing)."""
-        loc = self.locals[iid]
-        while True:
-            item = loc.next_migration()
-            if item is None:
-                return
-            rid, kv, rem = item
-            # reserve memory now; data lands after the transfer delay
-            loc.kv_used += kv
-            dur = self.costs[iid].transfer_time(kv)
-            self._push(self._now + dur, self._on_migration_done, iid, rid, kv, rem)
-
-    def _on_migration_done(self, iid: int, rid: int, kv: int, rem: int) -> None:
-        req = self.requests[rid]
-        src = req.prefill_instance
-        if src is not None and src != iid:
-            self.locals[src].release_prefill_kv(rid, kv)
-            self._kick(src)
-        loc = self.locals[iid]
-        loc.kv_used -= kv                 # admit_migrated re-adds
-        loc.admit_migrated(rid, kv, rem)
-        req.state = RequestState.DECODING
-        self._kick(iid)
+    def _on_migration_done(self, dst: int, rid: int, kv: int, rem: int) -> None:
+        self.locals[dst].kv_used -= kv       # admit_migrated re-adds
+        self.complete_migration(rid, dst, kv, rem, self._now)
 
     def _on_monitor_tick(self) -> None:
         now = self._now
-        for iid, loc in self.locals.items():
-            ready = getattr(self.policy, "prefill_ready_at", {}).get(iid, 0.0)
-            s = InstanceStats(
-                instance_id=iid,
-                prefill_queue_len=len(loc.prefill_queue),
-                prefill_backlog_tokens=loc.prefill_backlog_tokens,
-                prefill_ready_at=ready,
-                running_tokens=loc.running_tokens,
-                n_decode_running=len(loc.decode_running),
-                kv_tokens_used=loc.kv_used,
-                kv_tokens_capacity=loc.kv_capacity,
-            )
-            self.monitor.update_stats(s)
-        self.policy.on_monitor_tick(now)
+        self.collect_stats(now)
         if self._heap:                     # keep ticking while events remain
             self._push(now + self.sched_cfg.monitor_interval,
                        self._on_monitor_tick)
+        else:
+            self._tick_armed = False

@@ -106,6 +106,8 @@ with mesh:
     fn, args = build_dryrun(cfg, shape, mesh)
     compiled = fn.lower(*args).compile()
     c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):      # older jaxlib returns [dict]
+        c = c[0] if c else {{}}
     assert c.get("flops", 0) > 0
 print("OK", c.get("flops"))
 """

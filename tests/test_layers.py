@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from hyp_compat import given, settings, st
 
 from repro.models import common as cm
 

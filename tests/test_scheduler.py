@@ -1,8 +1,7 @@
 """Unit + property tests for Arrow's core scheduling (pools, Algorithms 1-4,
 TTFT predictor, local scheduler, monitor semantics)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from hyp_compat import given, settings, st
 
 from repro.core import (SLO, GlobalScheduler, InstanceMonitor, InstancePools,
                         InstanceStats, LocalScheduler, Pool, Request,

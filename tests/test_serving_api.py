@@ -1,0 +1,185 @@
+"""Unified ServingSystem API (DESIGN.md §1): sim/engine parity on one trace,
+streaming-callback ordering, SLO tiers, the decode-fallback fix and the
+deprecation shims."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import (SLO, InstanceMonitor, InstancePools, InstanceStats,
+                        Request, SchedulerConfig, TTFTPredictor)
+from repro.core.global_scheduler import GlobalScheduler
+from repro.core.serving import TIERS, replay_trace
+from repro.sim import Simulator
+
+SIM_CFG = get_config("gemma-2b")
+
+
+def tiny_trace(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival=0.02 * i,
+                    input_len=int(rng.integers(8, 48)),
+                    output_len=int(rng.integers(2, 6)))
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    return cfg, params
+
+
+# --------------------------------------------------------------- streaming
+
+
+def test_streaming_tokens_monotone_and_ttft_is_first_callback():
+    sim = Simulator(SIM_CFG, n_instances=4, n_prefill=2, slo=SLO(3.0, 0.1))
+    events = {}
+
+    def on_token(handle, tok, t):
+        events.setdefault(handle.rid, []).append(t)
+
+    trace = tiny_trace(8)
+    handles = replay_trace(sim, trace, on_token=on_token)
+    report = sim.drain()
+    assert report.n_finished == len(trace)
+    for h in handles:
+        ts = events[h.rid]
+        # one callback per output token (o_1 .. o_m), in order
+        assert len(ts) == h.req.output_len
+        assert all(a <= b for a, b in zip(ts, ts[1:]))
+        # TTFT equals the first callback's landing time
+        assert h.ttft == pytest.approx(ts[0] - h.req.arrival)
+
+
+def test_on_finish_fires_once_per_request():
+    sim = Simulator(SIM_CFG, n_instances=2, n_prefill=1, slo=SLO(3.0, 0.1))
+    finished = []
+    replay_trace(sim, tiny_trace(5), on_finish=lambda h: finished.append(h.rid))
+    sim.drain()
+    assert sorted(finished) == list(range(5))
+
+
+# ------------------------------------------------------------------- tiers
+
+
+def test_slo_tiers_scale_per_request():
+    sim = Simulator(SIM_CFG, n_instances=2, n_prefill=1, slo=SLO(2.0, 0.2))
+    trace = tiny_trace(4)
+    h_int = replay_trace(sim, trace[:2], tier="interactive")
+    h_bat = replay_trace(sim, trace[2:], tier="batch")
+    report = sim.drain()
+    assert h_int[0].slo == TIERS["interactive"].apply(SLO(2.0, 0.2))
+    assert h_bat[0].slo == SLO(8.0, 0.8)
+    assert set(report.attainment_by_tier()) == {"interactive", "batch"}
+
+
+def test_unknown_tier_rejected():
+    sim = Simulator(SIM_CFG, n_instances=2, n_prefill=1)
+    with pytest.raises(ValueError, match="tier"):
+        sim.submit(Request(0, 0.0, 16, 2), tier="platinum")
+
+
+# ----------------------------------------------------------- open-loop sim
+
+
+def test_sim_run_until_is_incremental():
+    sim = Simulator(SIM_CFG, n_instances=2, n_prefill=1, slo=SLO(3.0, 0.1))
+    handles = replay_trace(sim, tiny_trace(6))
+    sim.run_until(0.01)
+    assert sim.clock.now() == pytest.approx(0.01)
+    n_early = sum(1 for h in handles if h.done)
+    report = sim.drain()
+    assert report.n_finished == 6 >= n_early
+
+
+def test_sim_run_shim_still_works():
+    trace = tiny_trace(6)
+    sim = Simulator(SIM_CFG, n_instances=2, n_prefill=1, slo=SLO(3.0, 0.1))
+    with pytest.deprecated_call():
+        res = sim.run(trace)
+    assert all(r.finish_time is not None for r in res.requests)
+
+
+# --------------------------------------------------- sim/engine parity
+
+
+def test_sim_engine_parity_same_trace(engine_setup):
+    """Acceptance: the same trace object completes through both backends via
+    the unified API, streaming callbacks fire on both, and request-level
+    scheduling-decision counts are identical under a fixed seed."""
+    cfg, params = engine_setup
+    trace = tiny_trace(6, seed=3)
+
+    sim = Simulator(SIM_CFG, n_instances=2, n_prefill=1, slo=SLO(5.0, 2.0))
+    sim_tokens = {}
+    h_sim = replay_trace(sim, trace,
+                         on_token=lambda h, tok, t:
+                         sim_tokens.setdefault(h.rid, []).append(t))
+    rep_sim = sim.drain()
+
+    from repro.engine import ArrowEngineCluster
+    eng = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params)
+    eng_tokens = {}
+    h_eng = replay_trace(eng, trace,
+                         on_token=lambda h, tok, t:
+                         eng_tokens.setdefault(h.rid, []).append(tok))
+    rep_eng = eng.drain(timeout=120.0)
+
+    assert rep_sim.n_finished == rep_eng.n_finished == len(trace)
+    assert all(h.done for h in h_sim) and all(h.done for h in h_eng)
+    # identical request-level decision counts (migrations are timing-bound)
+    assert (rep_sim.decisions["prefill"], rep_sim.decisions["decode"]) == \
+           (rep_eng.decisions["prefill"], rep_eng.decisions["decode"])
+    # both streamed every token; the engine streamed real token ids
+    for r in trace:
+        assert len(sim_tokens[r.rid]) == r.output_len
+        assert len(eng_tokens[r.rid]) == r.output_len
+        assert all(isinstance(t, int) for t in eng_tokens[r.rid])
+
+
+def test_engine_runs_colocated_baseline(engine_setup):
+    """Acceptance: the engine runs a non-arrow baseline policy end-to-end
+    (previously only the simulator had the POLICIES registry)."""
+    from repro.engine import ArrowEngineCluster
+    cfg, params = engine_setup
+    eng = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params,
+                             policy="colocated")
+    handles = replay_trace(eng, tiny_trace(4, seed=1))
+    report = eng.drain(timeout=120.0)
+    assert report.n_finished == 4
+    # colocated: decode where you prefilled, never a KV transfer
+    assert all(h.req.decode_instance == h.req.prefill_instance
+               for h in handles)
+    assert report.decisions["migrations"] == 0
+
+
+# ------------------------------------------------- decode fallback fix
+
+
+def test_schedule_decode_fallback_targets_least_loaded_decode_capable():
+    """With every instance pinned to PREFILL and flips forbidden, the decode
+    fallback must pick the least-loaded instance, not an arbitrary id."""
+
+    class FakeCluster:
+        def has_pending_prefill(self, iid):
+            return False
+
+        def has_pending_decode(self, iid):
+            return False
+
+    pools = InstancePools(range(3), n_prefill=3)
+    mon = InstanceMonitor(range(3))
+    for iid, rt in zip(range(3), (40, 5, 90)):
+        mon.update_stats(InstanceStats(instance_id=iid, running_tokens=rt))
+    pred = TTFTPredictor.fit([(0, 0.0), (1000, 0.1), (4000, 1.0)])
+    cfg = SchedulerConfig(max_running_tokens=10,  # force t1/t2 rejection
+                          min_prefill_instances=3)  # forbid P->D flip
+    gs = GlobalScheduler(pools, mon, pred, SLO(1.0, 0.1), cfg, FakeCluster())
+    out = gs.schedule_decode(Request(0, 0.0, 100, 8), now=0.0)
+    assert out.via_fallback
+    assert out.instance == 1          # least running_tokens, not all_ids()[-1]

@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from hyp_compat import given, settings, st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import ARCH_IDS, get_config
