@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   Fig.7    bench_e2e               Arrow vs vLLM / vLLM-disagg / DistServe
   Fig.8    bench_ablation          SLO-aware vs minimal-load vs round-robin
   Fig.9    bench_scalability       attainment vs instance count
+  (ours)   bench_elastic           elastic vs static provisioning (DESIGN §6)
   (ours)   bench_kernels           Pallas kernels (interpret) vs jnp oracle
   (ours)   roofline                terms from the dry-run records, if present
 """
@@ -19,9 +20,10 @@ def main() -> None:
     fast = os.environ.get("BENCH_FAST", "")
     duration = "60" if fast else "120"
 
-    from benchmarks import (bench_ablation, bench_e2e, bench_flip_latency,
-                            bench_kernels, bench_load_difference,
-                            bench_scalability, bench_trace_stats)
+    from benchmarks import (bench_ablation, bench_e2e, bench_elastic,
+                            bench_flip_latency, bench_kernels,
+                            bench_load_difference, bench_scalability,
+                            bench_trace_stats)
     print("name,us_per_call,derived")
     bench_trace_stats.main()
     bench_load_difference.main()
@@ -29,6 +31,7 @@ def main() -> None:
     bench_ablation.main(["--duration", duration])
     bench_scalability.main(["--duration", duration])
     bench_flip_latency.main(["--duration", duration])
+    bench_elastic.main(["--duration", duration])
     bench_kernels.main()
     try:
         from benchmarks import roofline

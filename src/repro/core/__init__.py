@@ -1,12 +1,14 @@
 """Arrow's core contribution: stateless instances, elastic instance pools and
 SLO-aware adaptive request/instance scheduling (paper §5), plus the unified
 ``ServingSystem`` streaming front-end both backends implement (DESIGN.md §1)."""
+from repro.core.autoscaler import (AutoScaler, AutoScalerConfig,  # noqa: F401
+                                   ScaleEvent, ScaleSignals)
 from repro.core.clock import Clock, VirtualClock, WallClock  # noqa: F401
 from repro.core.global_scheduler import GlobalScheduler, ScheduleOutcome  # noqa: F401
 from repro.core.local_scheduler import IterationPlan, LocalScheduler  # noqa: F401
 from repro.core.monitor import InstanceMonitor, InstanceStats  # noqa: F401
 from repro.core.policies import POLICIES  # noqa: F401
-from repro.core.pools import InstancePools, Pool  # noqa: F401
+from repro.core.pools import InstancePools, Lifecycle, Pool  # noqa: F401
 from repro.core.request import Phase, Request, RequestState  # noqa: F401
 from repro.core.runtime import DecodePlacement, RuntimeCore  # noqa: F401
 from repro.core.serving import (RequestHandle, ServeReport, ServingSystem,  # noqa: F401

@@ -54,6 +54,14 @@ class GlobalScheduler:
         self._arrivals: list = []          # (t, input_len) ring
         self.n_proactive_flips = 0
 
+    # ----------------------------------- elastic lifecycle (DESIGN.md §6)
+    def on_instance_added(self, iid: int) -> None:
+        """A new instance joined the cluster: start its Eq.(2) bookkeeping."""
+        self.prefill_ready_at.setdefault(iid, 0.0)
+
+    def on_instance_removed(self, iid: int) -> None:
+        self.prefill_ready_at.pop(iid, None)
+
     # ------------------------------------------------------------- helpers
     def _predict(self, iid: int, input_len: int) -> float:
         """Instance-aware prefill-time prediction (heterogeneous clusters use
@@ -158,9 +166,10 @@ class GlobalScheduler:
                     t3, now, self._predict(t3, req.input_len))
                 return ScheduleOutcome(t3, flipped=flipped, predicted_ttft=ttft)
 
-        # fall back to t1 (or t2 / any prefill-capable instance)
+        # fall back to t1 (or t2 / any ACTIVE instance — never a warming or
+        # retiring one)
         fb = t1 if t1 is not None else (t2 if t2 is not None else
-                                        self.pools.all_ids()[0])
+                                        self.pools.active_ids()[0])
         ttft = self.account_prefill_dispatch(
             fb, now, self._predict(fb, req.input_len))
         return ScheduleOutcome(fb, predicted_ttft=ttft, via_fallback=True)
@@ -168,9 +177,11 @@ class GlobalScheduler:
     # ------------------------------------------------- Algorithm 2 (decode)
     def schedule_decode(self, req: Request, now: float) -> ScheduleOutcome:
         # If the prefill instance has itself been flipped to decode duty,
-        # keep the request there: the KV cache transfer vanishes.
+        # keep the request there: the KV cache transfer vanishes. (Not when
+        # it is retiring — a retiring instance accepts no new decode work.)
         pi = req.prefill_instance
-        if pi is not None and self.pools.pool_of(pi) in (Pool.DECODE, Pool.P2D):
+        if pi is not None and self.pools.is_schedulable(pi) and \
+                self.pools.pool_of(pi) in (Pool.DECODE, Pool.P2D):
             return ScheduleOutcome(pi)
 
         max_rt = self.cfg.max_running_tokens
@@ -198,7 +209,7 @@ class GlobalScheduler:
         # last resort: both decode pools empty and no flip allowed. Pick the
         # least-loaded decode-capable instance — never an arbitrary id, which
         # could be a pure-PREFILL instance with no decode duty at all.
-        ids = self.pools.decode_capable() or self.pools.all_ids()
+        ids = self.pools.decode_capable() or self.pools.active_ids()
         pick, _ = self._min_running_tokens(ids)
         return ScheduleOutcome(pick, via_fallback=True)
 

@@ -37,12 +37,25 @@ class InstanceMonitor:
     intervals per instance."""
 
     def __init__(self, instance_ids, window: int = 32):
+        self._window = window
         self.stats: Dict[int, InstanceStats] = {
             iid: InstanceStats(iid) for iid in instance_ids}
         self._intervals: Dict[int, deque] = {
             iid: deque(maxlen=window) for iid in instance_ids}
         self._last_token_at: Dict[int, Optional[float]] = {
             iid: None for iid in instance_ids}
+
+    # ----------------------------------------------------------- lifecycle
+    def add_instance(self, iid: int) -> None:
+        """A freshly provisioned instance joins the scrape set (DESIGN.md §6)."""
+        self.stats.setdefault(iid, InstanceStats(iid))
+        self._intervals.setdefault(iid, deque(maxlen=self._window))
+        self._last_token_at.setdefault(iid, None)
+
+    def remove_instance(self, iid: int) -> None:
+        self.stats.pop(iid, None)
+        self._intervals.pop(iid, None)
+        self._last_token_at.pop(iid, None)
 
     # --------------------------------------------------------- ingestion
     def record_iteration(self, iid: int, now: float, tokens_emitted: int,

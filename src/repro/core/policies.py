@@ -23,6 +23,7 @@ class BasePolicy:
 
     name = "base"
     adaptive = False
+    elastic = False          # True: RuntimeCore attaches an AutoScaler (§6)
 
     def __init__(self, pools: InstancePools, monitor: InstanceMonitor,
                  predictor: TTFTPredictor, slo: SLO, cfg: SchedulerConfig,
@@ -35,6 +36,13 @@ class BasePolicy:
         self.cluster = cluster
         self.prefill_ready_at: Dict[int, float] = {
             i: 0.0 for i in pools.all_ids()}
+
+    # elastic lifecycle (DESIGN.md §6): keep per-instance bookkeeping in sync
+    def on_instance_added(self, iid: int) -> None:
+        self.prefill_ready_at.setdefault(iid, 0.0)
+
+    def on_instance_removed(self, iid: int) -> None:
+        self.prefill_ready_at.pop(iid, None)
 
     def _account(self, iid: int, now: float, input_len: int) -> None:
         start = max(self.prefill_ready_at[iid], now)
@@ -61,6 +69,15 @@ class ArrowPolicy(GlobalScheduler):
 
     def schedule_decode_req(self, req: Request, now: float) -> int:
         return self.schedule_decode(req, now).instance
+
+
+class ArrowElasticPolicy(ArrowPolicy):
+    """Arrow request/instance scheduling + AutoScaler-driven cluster sizing:
+    the instance *set* grows under sustained pressure and shrinks when slack
+    (DESIGN.md §6). Request-level decisions are identical to ``arrow``."""
+
+    name = "arrow_elastic"
+    elastic = True
 
 
 class MinimalLoadPolicy(BasePolicy):
@@ -128,6 +145,7 @@ class ColocatedPolicy(BasePolicy):
 POLICIES = {
     "arrow": ArrowPolicy,
     "arrow_proactive": ArrowPolicy,    # + SchedulerConfig.proactive=True
+    "arrow_elastic": ArrowElasticPolicy,
     "minimal_load": MinimalLoadPolicy,
     "round_robin": RoundRobinPolicy,
     "colocated": ColocatedPolicy,

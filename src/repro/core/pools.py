@@ -1,9 +1,22 @@
 """Elastic instance pools (§5.2): PREFILL, DECODE, P→D, D→P with the Fig. 5
-transition diagram. Flipping = pool-membership move, zero wait/restart."""
+transition diagram. Flipping = pool-membership move, zero wait/restart.
+
+Beyond the paper (DESIGN.md §6): the instance *set* itself is elastic. Each
+instance carries a lifecycle state
+
+    WARMING ──activate──▶ ACTIVE ──begin_retire──▶ RETIRING ──remove──▶ (gone)
+
+Only ACTIVE instances are schedulable: ``members``/``prefill_capable``/
+``decode_capable``/``count`` all restrict themselves to ACTIVE, so the
+global scheduler and the flip algorithms (Alg. 1–4) never place work on — or
+flip — a warming or retiring instance. RETIRING instances keep draining the
+work they already hold (``all_ids`` still includes them for stat scraping and
+iteration driving); the runtime removes them once drained (core/runtime.py).
+"""
 from __future__ import annotations
 
 import enum
-from typing import Dict, List, Set
+from typing import Dict, List
 
 
 class Pool(enum.Enum):
@@ -13,34 +26,66 @@ class Pool(enum.Enum):
     D2P = "D->P"      # scheduled for prefill; still draining decode work
 
 
+class Lifecycle(enum.Enum):
+    WARMING = "warming"    # provisioning/loading weights; not schedulable yet
+    ACTIVE = "active"      # schedulable member of its pool
+    RETIRING = "retiring"  # draining; accepts no new work, no flips
+
+
 class InstancePools:
     def __init__(self, instance_ids, n_prefill: int):
         """First ``n_prefill`` ids start in PREFILL, the rest in DECODE."""
         ids = list(instance_ids)
         self._pool: Dict[int, Pool] = {}
+        self._life: Dict[int, Lifecycle] = {}
         for i, iid in enumerate(ids):
             self._pool[iid] = Pool.PREFILL if i < n_prefill else Pool.DECODE
+            self._life[iid] = Lifecycle.ACTIVE
         self.flips = 0               # observability: pool moves performed
 
     # ------------------------------------------------------------- queries
     def pool_of(self, iid: int) -> Pool:
         return self._pool[iid]
 
+    def lifecycle_of(self, iid: int) -> Lifecycle:
+        return self._life[iid]
+
+    def is_schedulable(self, iid: int) -> bool:
+        """True when ``iid`` is a live ACTIVE member (new work may land)."""
+        return self._life.get(iid) is Lifecycle.ACTIVE
+
     def members(self, pool: Pool) -> List[int]:
-        return [i for i, p in self._pool.items() if p is pool]
+        """ACTIVE members of ``pool`` — the schedulable set."""
+        return [i for i, p in self._pool.items()
+                if p is pool and self._life[i] is Lifecycle.ACTIVE]
 
     def all_ids(self) -> List[int]:
+        """Every live instance: warming + active + retiring."""
         return list(self._pool)
+
+    def active_ids(self) -> List[int]:
+        return [i for i, s in self._life.items() if s is Lifecycle.ACTIVE]
+
+    def warming_ids(self) -> List[int]:
+        return [i for i, s in self._life.items() if s is Lifecycle.WARMING]
+
+    def retiring_ids(self) -> List[int]:
+        return [i for i, s in self._life.items() if s is Lifecycle.RETIRING]
 
     def prefill_capable(self) -> List[int]:
         """Instances currently accepting prefill requests: P ∪ D→P."""
-        return [i for i, p in self._pool.items() if p in (Pool.PREFILL, Pool.D2P)]
+        return [i for i, p in self._pool.items()
+                if p in (Pool.PREFILL, Pool.D2P)
+                and self._life[i] is Lifecycle.ACTIVE]
 
     def decode_capable(self) -> List[int]:
-        return [i for i, p in self._pool.items() if p in (Pool.DECODE, Pool.P2D)]
+        return [i for i, p in self._pool.items()
+                if p in (Pool.DECODE, Pool.P2D)
+                and self._life[i] is Lifecycle.ACTIVE]
 
     def count(self, *pools: Pool) -> int:
-        return sum(1 for p in self._pool.values() if p in pools)
+        return sum(1 for i, p in self._pool.items()
+                   if p in pools and self._life[i] is Lifecycle.ACTIVE)
 
     # --------------------------------------------------------- transitions
     def move(self, iid: int, to: Pool) -> None:
@@ -50,20 +95,60 @@ class InstancePools:
 
     def flip_to_decode(self, iid: int, has_pending_prefill: bool) -> Pool:
         """PREFILL/D→P instance is reassigned to decode duty."""
+        if self._life[iid] is not Lifecycle.ACTIVE:
+            raise ValueError(f"cannot flip instance {iid}: "
+                             f"{self._life[iid].value}")
         to = Pool.P2D if has_pending_prefill else Pool.DECODE
         self.move(iid, to)
         return to
 
     def flip_to_prefill(self, iid: int, has_pending_decode: bool) -> Pool:
+        if self._life[iid] is not Lifecycle.ACTIVE:
+            raise ValueError(f"cannot flip instance {iid}: "
+                             f"{self._life[iid].value}")
         to = Pool.D2P if has_pending_decode else Pool.PREFILL
         self.move(iid, to)
         return to
 
     def on_prefill_drained(self, iid: int) -> None:
-        """Black transition edge: P→D pool member finished its prefill queue."""
-        if self._pool[iid] is Pool.P2D:
+        """Black transition edge: P→D pool member finished its prefill queue.
+        A no-op for warming/retiring instances (their pool no longer matters)."""
+        if self._pool[iid] is Pool.P2D and \
+                self._life[iid] is Lifecycle.ACTIVE:
             self.move(iid, Pool.DECODE)
 
     def on_decode_drained(self, iid: int) -> None:
-        if self._pool[iid] is Pool.D2P:
+        if self._pool[iid] is Pool.D2P and \
+                self._life[iid] is Lifecycle.ACTIVE:
             self.move(iid, Pool.PREFILL)
+
+    # ---------------------------------------------- lifecycle (DESIGN.md §6)
+    def add_instance(self, iid: int, pool: Pool, *,
+                     warming: bool = False) -> None:
+        """Register a freshly provisioned instance. ``warming=True`` keeps it
+        out of the schedulable set until ``activate``."""
+        if iid in self._pool:
+            raise ValueError(f"instance {iid} already exists")
+        self._pool[iid] = pool
+        self._life[iid] = Lifecycle.WARMING if warming else Lifecycle.ACTIVE
+
+    def activate(self, iid: int) -> None:
+        if self._life[iid] is not Lifecycle.WARMING:
+            raise ValueError(f"instance {iid} is {self._life[iid].value}, "
+                             "not warming")
+        self._life[iid] = Lifecycle.ACTIVE
+
+    def begin_retire(self, iid: int) -> None:
+        """ACTIVE → RETIRING: no new work, no flips; existing work drains."""
+        if self._life[iid] is not Lifecycle.ACTIVE:
+            raise ValueError(f"cannot retire instance {iid}: "
+                             f"{self._life[iid].value}")
+        self._life[iid] = Lifecycle.RETIRING
+
+    def remove_instance(self, iid: int) -> None:
+        """Final removal of a drained RETIRING instance."""
+        if self._life[iid] is not Lifecycle.RETIRING:
+            raise ValueError(f"cannot remove instance {iid}: "
+                             f"{self._life[iid].value} (retire first)")
+        del self._pool[iid]
+        del self._life[iid]

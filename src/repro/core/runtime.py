@@ -18,17 +18,28 @@ Backends supply the physical substrate through four hooks: ``local_of``
 (their per-instance ``LocalScheduler``), ``_begin_transfer`` (async DMA with
 a modeled delay in the sim; real array export/import on the engine),
 ``_release_source_kv`` and ``_decode_started`` (post-migration nudges).
+
+Elastic scaling (DESIGN.md §6) adds the instance lifecycle: ``scale_up``
+provisions a new instance (backend hook ``_create_instance`` builds the
+substrate and returns its warm-up delay), ``begin_retire`` drains one —
+re-dispatching its queued migrations and migrating its KV-resident decode
+requests away through the *same* FCFS migration manager — and
+``_maybe_finalize_retires`` removes it once drained. An ``AutoScaler``
+(core/autoscaler.py) drives these from the monitor tick when the policy is
+elastic (``arrow_elastic``).
 """
 from __future__ import annotations
 
 import enum
+from collections import Counter, deque
 from typing import Dict, Optional, Tuple
 
+from repro.core.autoscaler import AutoScaler, AutoScalerConfig
 from repro.core.clock import Clock
 from repro.core.local_scheduler import LocalScheduler
 from repro.core.monitor import InstanceMonitor, InstanceStats
 from repro.core.policies import POLICIES
-from repro.core.pools import InstancePools
+from repro.core.pools import InstancePools, Pool
 from repro.core.request import Request, RequestState
 from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
                                 ServingSystem, TIERS, TokenCallback)
@@ -48,7 +59,9 @@ class RuntimeCore(ServingSystem):
     # ------------------------------------------------------------- wiring
     def _init_runtime(self, ids, *, n_prefill: int, policy: str, slo: SLO,
                       sched_cfg: SchedulerConfig, predictor: TTFTPredictor,
-                      clock: Clock) -> None:
+                      clock: Clock,
+                      autoscaler_cfg: Optional[AutoScalerConfig] = None,
+                      ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
@@ -71,6 +84,23 @@ class RuntimeCore(ServingSystem):
         # with output_len > 1); migrations additionally depend on timing.
         self.decisions: Dict[str, int] = {
             "prefill": 0, "decode": 0, "migrations": 0}
+        # ---- elastic lifecycle state (DESIGN.md §6)
+        self._next_iid = max(ids) + 1 if ids else 0
+        self._spawned_at: Dict[int, float] = {i: 0.0 for i in ids}
+        self._instance_seconds_closed = 0.0
+        self._retire_started: Dict[int, float] = {}
+        self._migrating_from: Dict[int, int] = {}   # rid -> current KV holder
+        self._kv_outbound = Counter()   # iid -> in-flight outbound transfers
+        self._kv_inbound = Counter()    # iid -> admitted, not-yet-landed
+        self._recent_finish: deque = deque(maxlen=128)  # SLO window
+        self.autoscaler: Optional[AutoScaler] = None
+        if getattr(self.policy, "elastic", False):
+            self.autoscaler = AutoScaler(
+                self, autoscaler_cfg or AutoScalerConfig())
+        elif autoscaler_cfg is not None:
+            raise ValueError(
+                f"policy {policy!r} is not elastic; autoscaler_cfg requires "
+                f"an elastic policy (e.g. 'arrow_elastic')")
 
     # ------------------------------------------------------ backend hooks
     def local_of(self, iid: int) -> LocalScheduler:
@@ -88,6 +118,29 @@ class RuntimeCore(ServingSystem):
     def _decode_started(self, iid: int) -> None:
         """A request joined ``iid``'s decode set (event-driven backends kick
         the instance; polling backends need nothing)."""
+
+    # ------------------------------------------ elastic backend hooks (§6)
+    def _create_instance(self, iid: int) -> float:
+        """Provision the physical substrate for a new instance (cost model +
+        LocalScheduler on the sim; a real ``EngineInstance`` on the engine).
+        Returns the warm-up delay in clock seconds (0 = ready now)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support elastic scaling")
+
+    def _schedule_activation(self, iid: int, delay: float) -> None:
+        """Arrange for ``activate_instance(iid)`` after ``delay`` seconds."""
+        raise NotImplementedError
+
+    def _destroy_instance(self, iid: int) -> None:
+        """Release the substrate of a drained, removed instance."""
+
+    def _instance_ready(self, iid: int) -> None:
+        """An instance just became ACTIVE (event-driven backends kick it)."""
+
+    def _instance_quiesced(self, iid: int) -> bool:
+        """True when the backend has no in-flight work for ``iid`` beyond
+        what the LocalScheduler queues show (sim: no running iteration)."""
+        return True
 
     # --------------------------------------------------------- ClusterView
     def has_pending_prefill(self, iid: int) -> bool:
@@ -136,8 +189,16 @@ class RuntimeCore(ServingSystem):
     def finish(self, handle: RequestHandle, now: float) -> None:
         handle.req.finish_time = now
         handle.req.state = RequestState.FINISHED
+        self._recent_finish.append(handle.meets_slo())
         if handle.on_finish is not None:
             handle.on_finish(handle)
+
+    def recent_attainment(self, min_samples: int = 16) -> Optional[float]:
+        """SLO attainment over the sliding window of recent finishes; None
+        until ``min_samples`` finishes have been observed."""
+        if len(self._recent_finish) < min_samples:
+            return None
+        return sum(self._recent_finish) / len(self._recent_finish)
 
     def after_prefill(self, handle: RequestHandle, iid: int, now: float,
                       token: Optional[int] = None,
@@ -160,6 +221,7 @@ class RuntimeCore(ServingSystem):
                 req.rid, req.input_len, remaining)
             return DecodePlacement.LOCAL, iid
         req.state = RequestState.MIGRATING
+        self._kv_outbound[iid] += 1
         self.local_of(target).enqueue_migration(
             req.rid, req.input_len, remaining)
         self.decisions["migrations"] += 1
@@ -177,9 +239,21 @@ class RuntimeCore(ServingSystem):
             rid, kv, rem = item
             if rid not in self.handles:        # stale entry: drop it
                 continue
+            # count the transfer as inbound before starting it: async
+            # backends land it later, and a retiring destination must not
+            # finalize while data is in the air (the engine's synchronous
+            # path completes inside _begin_transfer, netting back to zero).
+            self._kv_inbound[iid] += 1
             if not self._begin_transfer(rid, iid, kv, rem):
+                self._kv_inbound[iid] -= 1
                 loc.migration_queue.appendleft((rid, kv, rem))
                 return
+
+    def _kv_source(self, rid: int) -> Optional[int]:
+        """Instance currently holding ``rid``'s KV: its prefill instance, or
+        — for retire-triggered re-migrations — the retiring decode holder."""
+        return self._migrating_from.get(
+            rid, self.handles[rid].req.prefill_instance)
 
     def complete_migration(self, rid: int, dst: int, kv: int, rem: int,
                            now: float) -> None:
@@ -187,12 +261,128 @@ class RuntimeCore(ServingSystem):
         set. (``now`` kept for symmetry/overrides; completion itself is not a
         scheduling decision.)"""
         req = self.handles[rid].req
-        src = req.prefill_instance
+        src = self._kv_source(rid)
+        self._migrating_from.pop(rid, None)
         if src is not None and src != dst:
             self._release_source_kv(src, rid, kv)
+        if src is not None and self._kv_outbound[src] > 0:
+            self._kv_outbound[src] -= 1
+        if self._kv_inbound[dst] > 0:
+            self._kv_inbound[dst] -= 1
         self.local_of(dst).admit_migrated(rid, kv, rem)
         req.state = RequestState.DECODING
+        req.decode_instance = dst
         self._decode_started(dst)
+
+    # ----------------------------------- instance lifecycle (DESIGN.md §6)
+    def scale_up(self, pool: Pool, now: float) -> int:
+        """Provision one new instance into ``pool``. It joins WARMING when the
+        backend models a spawn delay, ACTIVE immediately otherwise."""
+        iid = self._next_iid
+        self._next_iid += 1
+        delay = self._create_instance(iid)
+        self.pools.add_instance(iid, pool, warming=delay > 0)
+        self.monitor.add_instance(iid)
+        self.policy.on_instance_added(iid)
+        self._spawned_at[iid] = now
+        if delay > 0:
+            self._schedule_activation(iid, delay)
+        else:
+            self._instance_ready(iid)
+        return iid
+
+    def activate_instance(self, iid: int) -> None:
+        """Warm-up finished: the instance becomes schedulable."""
+        self.pools.activate(iid)
+        self._instance_ready(iid)
+
+    def begin_retire(self, iid: int, now: float) -> None:
+        """ACTIVE → RETIRING: the instance accepts no new work. Its queued
+        inbound migrations are re-dispatched and its KV-resident decode
+        requests are migrated away through the existing FCFS migration
+        manager; prefill work it already holds drains in place. Removal
+        happens in ``_maybe_finalize_retires`` once everything left."""
+        self.pools.begin_retire(iid)
+        self._retire_started[iid] = now
+        loc = self.local_of(iid)
+        # queued (never-admitted) inbound migrations: KV is still elsewhere,
+        # only the queue entry moves to a new destination.
+        redispatch = []
+        while loc.migration_queue:
+            redispatch.append(loc.migration_queue.popleft())
+        # KV-resident decode requests: migrate away (source KV stays resident
+        # until the transfer lands, exactly like a post-prefill migration).
+        for rid in list(loc.decode_running):
+            w = loc.decode_running.pop(rid)
+            req = self.handles[rid].req
+            req.state = RequestState.MIGRATING
+            self._migrating_from[rid] = iid
+            self._kv_outbound[iid] += 1
+            self.decisions["migrations"] += 1
+            redispatch.append((rid, w.context_len, w.remaining_out))
+        targets = set()
+        evac_load = Counter()      # tentative KV per target within this batch
+        for rid, kv, rem in redispatch:
+            req = self.handles[rid].req
+            dst = self._evacuation_target(kv, evac_load)
+            src = self._kv_source(rid)
+            if dst == src:
+                # the chosen destination already holds the KV (a queued-at-
+                # `iid` migration whose source is now the best target): no
+                # transfer — resume decode in place, like a LOCAL placement.
+                if self._kv_outbound[src] > 0:
+                    self._kv_outbound[src] -= 1
+                req.decode_instance = src
+                req.state = RequestState.DECODING
+                self.local_of(src).start_local_decode(rid, kv, rem)
+                self._decode_started(src)
+                continue
+            req.decode_instance = dst
+            self.local_of(dst).enqueue_migration(rid, kv, rem)
+            targets.add(dst)
+        for dst in targets:
+            self.admit_migrations(dst)
+
+    def _evacuation_target(self, kv: int, evac_load: Counter) -> int:
+        """Destination for work leaving a retiring instance: the least-loaded
+        ACTIVE decode-capable instance (any active instance as last resort).
+        ``evac_load`` holds KV already routed within the current evacuation
+        batch — monitor stats are tick-stale, so without it every request
+        would pile onto the same pre-batch minimum."""
+        ids = self.pools.decode_capable() or self.pools.active_ids()
+        if not ids:
+            raise RuntimeError("no active instance to evacuate to")
+        dst = min(ids, key=lambda i: (self.monitor.get(i).running_tokens
+                                      + evac_load[i]))
+        evac_load[dst] += kv
+        return dst
+
+    def _retire_drained(self, iid: int) -> bool:
+        loc = self.local_of(iid)
+        return (not loc.has_pending_prefill()
+                and not loc.has_pending_decode()
+                and self._kv_outbound[iid] == 0
+                and self._kv_inbound[iid] == 0
+                and self._instance_quiesced(iid))
+
+    def _maybe_finalize_retires(self, now: float) -> None:
+        for iid in list(self._retire_started):
+            if not self._retire_drained(iid):
+                continue
+            self._retire_started.pop(iid)
+            self.pools.remove_instance(iid)
+            self.monitor.remove_instance(iid)
+            self.policy.on_instance_removed(iid)
+            self._instance_seconds_closed += now - self._spawned_at.pop(iid)
+            self._kv_outbound.pop(iid, None)
+            self._kv_inbound.pop(iid, None)
+            self._destroy_instance(iid)
+
+    def instance_seconds(self, now: float) -> float:
+        """Σ per-instance alive time — the provisioning cost a static
+        deployment pays for its full duration."""
+        return self._instance_seconds_closed + \
+            sum(now - t for t in self._spawned_at.values())
 
     # ------------------------------------------------ monitor-tick scrape
     def collect_stats(self, now: float) -> None:
@@ -210,6 +400,9 @@ class RuntimeCore(ServingSystem):
                 kv_tokens_capacity=loc.kv_capacity,
             ))
         self.policy.on_monitor_tick(now)
+        if self.autoscaler is not None:
+            self.autoscaler.on_monitor_tick(now)
+        self._maybe_finalize_retires(now)
 
     # ------------------------------------------------ pool-flip accounting
     def flip_counts(self) -> Dict[str, int]:
@@ -221,8 +414,18 @@ class RuntimeCore(ServingSystem):
         }
 
     # ----------------------------------------------------------- reporting
+    def scaling_detail(self) -> Dict[str, float]:
+        now = self.clock.now()
+        out = {"instance_seconds": self.instance_seconds(now),
+               "n_instances": len(self.pools.all_ids())}
+        if self.autoscaler is not None:
+            out["scale_ups"] = self.autoscaler.n_scale_ups
+            out["scale_downs"] = self.autoscaler.n_scale_downs
+        return out
+
     def report(self) -> ServeReport:
         return ServeReport(handles=list(self.handles.values()),
                            flip_detail=self.flip_counts(),
                            decisions=dict(self.decisions),
-                           duration=self.clock.now())
+                           duration=self.clock.now(),
+                           scaling=self.scaling_detail())

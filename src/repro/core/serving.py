@@ -94,6 +94,9 @@ class ServeReport:
     flip_detail: Dict[str, int] = field(default_factory=dict)
     decisions: Dict[str, int] = field(default_factory=dict)
     duration: float = 0.0
+    # elastic-scaling accounting (DESIGN.md §6): instance_seconds,
+    # n_instances and — under an elastic policy — scale_ups/scale_downs.
+    scaling: Dict[str, float] = field(default_factory=dict)
 
     @property
     def flips(self) -> int:
@@ -137,11 +140,16 @@ class ServeReport:
         def ms(v: Optional[float]) -> str:
             return "n/a" if v is None else f"{v * 1e3:.1f}ms"
 
-        return (f"finished {self.n_finished}/{self.n_total} "
-                f"p50_ttft={ms(self.percentile('ttft', 0.5))} "
-                f"p90_ttft={ms(self.percentile('ttft', 0.9))} "
-                f"p90_tpot={ms(self.percentile('tpot', 0.9))} "
-                f"attainment={self.attainment:.2f} flips={self.flips}")
+        s = (f"finished {self.n_finished}/{self.n_total} "
+             f"p50_ttft={ms(self.percentile('ttft', 0.5))} "
+             f"p90_ttft={ms(self.percentile('ttft', 0.9))} "
+             f"p90_tpot={ms(self.percentile('tpot', 0.9))} "
+             f"attainment={self.attainment:.2f} flips={self.flips}")
+        if "scale_ups" in self.scaling:
+            s += (f" scale_ups={self.scaling['scale_ups']:.0f}"
+                  f" scale_downs={self.scaling['scale_downs']:.0f}"
+                  f" instance_s={self.scaling['instance_seconds']:.0f}")
+        return s
 
 
 class ServingSystem(abc.ABC):

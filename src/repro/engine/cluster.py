@@ -54,13 +54,16 @@ class ArrowEngineCluster(RuntimeCore):
                  slo: SLO = SLO(ttft=2.0, tpot=0.5),
                  sched_cfg: Optional[SchedulerConfig] = None, seed: int = 0,
                  params=None, chunk_tokens: Optional[int] = None,
-                 policy: str = "arrow"):
+                 policy: str = "arrow", autoscaler_cfg=None):
         import jax
         self.cfg = cfg
         self.capacity = capacity
+        self.n_slots = n_slots
+        self.chunk_tokens = chunk_tokens
         if params is None:
             model = build_model(cfg)
             params = model.init(jax.random.PRNGKey(seed))
+        self.params = params           # shared by reference across instances
         self.instances: Dict[int, EngineInstance] = {
             i: EngineInstance(i, cfg, params, n_slots=n_slots,
                               capacity=capacity, chunk_tokens=chunk_tokens)
@@ -72,7 +75,8 @@ class ArrowEngineCluster(RuntimeCore):
             max_running_tokens=n_slots * capacity, monitor_interval=0.05)
         self._init_runtime(list(self.instances), n_prefill=n_prefill,
                            policy=policy, slo=slo, sched_cfg=sched_cfg,
-                           predictor=predictor, clock=WallClock())
+                           predictor=predictor, clock=WallClock(),
+                           autoscaler_cfg=autoscaler_cfg)
         self._pending: list = []                # heap: (arrival, rid)
         self._live: Dict[int, RequestHandle] = {}
         self._prompts: Dict[int, np.ndarray] = {}
@@ -90,7 +94,7 @@ class ArrowEngineCluster(RuntimeCore):
 
     def _begin_transfer(self, rid: int, dst: int, kv: int, rem: int) -> bool:
         # real KV movement between instances (synchronous array export/import)
-        src = self.handles[rid].req.prefill_instance
+        src = self._kv_source(rid)
         k, v, L, last, gen = self.instances[src].export_kv(rid)
         if not self.instances[dst].import_kv(rid, k, v, L, last, gen):
             return False                        # no free slot: retry later
@@ -99,6 +103,20 @@ class ArrowEngineCluster(RuntimeCore):
 
     def _release_source_kv(self, src: int, rid: int, kv: int) -> None:
         self.instances[src].drop(rid)
+
+    # ------------------------------------- elastic lifecycle hooks (§6)
+    def _create_instance(self, iid: int) -> float:
+        """Spawn a real EngineInstance; params are shared by reference, so
+        the cost is the jit/KV-cache setup — which happens right here, i.e.
+        the warm-up is real elapsed wall-clock, and the instance is ACTIVE
+        the moment construction returns."""
+        self.instances[iid] = EngineInstance(
+            iid, self.cfg, self.params, n_slots=self.n_slots,
+            capacity=self.capacity, chunk_tokens=self.chunk_tokens)
+        return 0.0
+
+    def _destroy_instance(self, iid: int) -> None:
+        self.instances.pop(iid, None)
 
     # --------------------------------------------------------- ServingSystem
     def submit(self, req: Request, *, prompt: Optional[np.ndarray] = None,
@@ -128,11 +146,12 @@ class ArrowEngineCluster(RuntimeCore):
             handle = self.handles[rid]
             self.dispatch_prefill(handle, t)
             self._live[rid] = handle
-        # migrations (instant data move + admission gate)
-        for dst in self.instances:
+        # migrations (instant data move + admission gate); snapshot the id
+        # lists — elastic retirement may remove instances mid-pass
+        for dst in list(self.instances):
             self.admit_migrations(dst)
         # one iteration per instance (cooperative round-robin)
-        for iid, inst in self.instances.items():
+        for iid, inst in list(self.instances.items()):
             self._step_instance(iid, inst)
         # monitor tick
         now = self.clock.now()

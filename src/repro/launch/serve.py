@@ -8,6 +8,11 @@ simulator for full configs. Requests, traces and reporting share one path
       --rate 2 --duration 10 --policy colocated
   PYTHONPATH=src python -m repro.launch.serve --mode sim --arch gemma-2b \
       --trace azure_code --rate 8
+  PYTHONPATH=src python -m repro.launch.serve --mode sim --trace spike \
+      --policy arrow_elastic --instances 4 --min-instances 2 --max-instances 12
+
+``--list-traces`` / ``--list-policies`` print the available presets/policies
+and exit (docs/OPERATOR.md).
 """
 from __future__ import annotations
 
@@ -17,6 +22,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.autoscaler import AutoScalerConfig
+from repro.core.policies import POLICIES
 from repro.core.request import Request
 from repro.core.serving import ServeReport, ServingSystem, replay_trace
 from repro.core.slo import SLO
@@ -44,6 +51,33 @@ def run_and_report(system: ServingSystem, trace: List[Request], *,
     return report
 
 
+def list_traces() -> None:
+    from repro.traces import TRACE_PRESETS
+    print(f"{'name':<12} {'dur':>5} {'rate':>6} {'in_med':>7} {'out_med':>8} "
+          f"{'corr':>5} {'slo_ttft':>9} {'slo_tpot':>9}  arrivals")
+    for p in TRACE_PRESETS.values():
+        shape = {"mmpp": f"MMPP x{p.burst_rate_mult:g} "
+                         f"{p.burst_frac:.0%} of time",
+                 "spike": f"spike x{p.shape_mult:g} over "
+                          f"[{p.spike_window[0]:.0%},{p.spike_window[1]:.0%})",
+                 "diurnal": f"diurnal x{p.shape_mult:g} peak"}[p.rate_shape]
+        print(f"{p.name:<12} {p.duration:>5.0f} {p.base_rate:>5.1f}/s "
+              f"{p.in_median:>7.0f} {p.out_median:>8.0f} {p.in_out_corr:>5.2f} "
+              f"{p.slo_ttft:>8.2f}s {p.slo_tpot:>8.3f}s  {shape}")
+    print("\n(see repro/traces/synth.py for provenance; --rate divides "
+          "inter-arrival times, §7.1)")
+
+
+def list_policies() -> None:
+    print(f"{'name':<16} {'adaptive':>8} {'elastic':>8}  summary")
+    for name, cls in POLICIES.items():
+        doc = (cls.__doc__ or "").strip().splitlines()[0]
+        print(f"{name:<16} {str(cls.adaptive):>8} "
+              f"{str(getattr(cls, 'elastic', False)):>8}  {doc}")
+    print("\n(arrow_proactive = arrow + SchedulerConfig.proactive burst "
+          "detection)")
+
+
 def run_engine(args) -> ServeReport:
     from repro.engine import ArrowEngineCluster
     cfg = get_smoke_config(args.arch)
@@ -54,7 +88,8 @@ def run_engine(args) -> ServeReport:
                                  n_prefill=max(args.instances // 2, 1),
                                  n_slots=8, capacity=256,
                                  slo=SLO(args.ttft, args.tpot),
-                                 policy=args.policy)
+                                 policy=args.policy,
+                                 autoscaler_cfg=autoscaler_cfg(args))
     if args.trace:
         from repro.traces import load_trace
         trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
@@ -76,12 +111,28 @@ def run_sim(args) -> ServeReport:
                        duration=args.duration)
     sim = Simulator(cfg, n_instances=args.instances,
                     n_prefill=max(args.instances // 2, 1),
-                    policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot))
+                    policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot),
+                    autoscaler_cfg=autoscaler_cfg(args))
     # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
     # time and must cover the whole trace
     return run_and_report(sim, trace, tier=args.tier,
                           label=f"serve-sim {args.arch} {trace_name} "
                                 f"x{args.rate} {args.policy}")
+
+
+def autoscaler_cfg(args) -> Optional[AutoScalerConfig]:
+    """AutoScaler bounds from the CLI; None keeps the policy's defaults
+    (non-elastic policies reject an explicit config)."""
+    if args.min_instances is None and args.max_instances is None:
+        return None
+    base = AutoScalerConfig()
+    return AutoScalerConfig(**{
+        **base.__dict__,
+        "min_instances": base.min_instances if args.min_instances is None
+        else args.min_instances,
+        "max_instances": base.max_instances if args.max_instances is None
+        else args.max_instances,
+    })
 
 
 def main(argv=None) -> None:
@@ -99,10 +150,22 @@ def main(argv=None) -> None:
                          "engine default is synthetic requests")
     ap.add_argument("--rate", type=float, default=8.0)
     ap.add_argument("--duration", type=float, default=120.0)
-    ap.add_argument("--policy", default="arrow")
+    ap.add_argument("--policy", default="arrow", choices=sorted(POLICIES))
     ap.add_argument("--tier", default="standard",
                     choices=("interactive", "standard", "batch"))
+    ap.add_argument("--min-instances", type=int, default=None,
+                    help="AutoScaler floor (elastic policies only)")
+    ap.add_argument("--max-instances", type=int, default=None,
+                    help="AutoScaler ceiling (elastic policies only)")
+    ap.add_argument("--list-traces", action="store_true",
+                    help="print the trace-preset table and exit")
+    ap.add_argument("--list-policies", action="store_true",
+                    help="print the policy registry and exit")
     args = ap.parse_args(argv)
+    if args.list_traces:
+        return list_traces()
+    if args.list_policies:
+        return list_policies()
     if args.mode == "engine":
         run_engine(args)
     else:

@@ -2,5 +2,5 @@
 so the real JAX engine can run the same baselines as the simulator through
 the shared runtime (DESIGN.md §1). This shim keeps old imports working."""
 from repro.core.policies import (  # noqa: F401
-    POLICIES, ArrowPolicy, BasePolicy, ColocatedPolicy, MinimalLoadPolicy,
-    RoundRobinPolicy)
+    POLICIES, ArrowElasticPolicy, ArrowPolicy, BasePolicy, ColocatedPolicy,
+    MinimalLoadPolicy, RoundRobinPolicy)

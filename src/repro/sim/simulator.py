@@ -63,11 +63,16 @@ class Simulator(RuntimeCore):
                  sched_cfg: Optional[SchedulerConfig] = None,
                  profile: InstanceProfile = InstanceProfile(),
                  profiles: Optional[Dict[int, InstanceProfile]] = None,
-                 token_budget: int = 8192, flip_latency: float = 0.0):
+                 token_budget: int = 8192, flip_latency: float = 0.0,
+                 autoscaler_cfg=None):
         """``profiles`` (iid -> InstanceProfile) enables heterogeneous
         clusters (paper §8): per-instance cost models + a per-instance-fitted
-        TTFT predictor; ``profile`` is the homogeneous default."""
+        TTFT predictor; ``profile`` is the homogeneous default (elastic
+        scale-ups always materialize from it). ``autoscaler_cfg`` tunes the
+        AutoScaler attached when ``policy`` is elastic (DESIGN.md §6)."""
         self.cfg = cfg
+        self._spawn_profile = profile
+        self._token_budget = token_budget
         ids = list(range(n_instances))
         self.costs: Dict[int, CostModel] = {
             i: CostModel(cfg, (profiles or {}).get(i, profile))
@@ -92,7 +97,7 @@ class Simulator(RuntimeCore):
 
         self._init_runtime(ids, n_prefill=n_prefill, policy=policy, slo=slo,
                            sched_cfg=sched_cfg, predictor=predictor,
-                           clock=VirtualClock())
+                           clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg)
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
@@ -142,6 +147,33 @@ class Simulator(RuntimeCore):
 
     def _decode_started(self, iid: int) -> None:
         self._kick(iid)
+
+    # ------------------------------------- elastic lifecycle hooks (§6)
+    def _create_instance(self, iid: int) -> float:
+        """Materialize a new instance from the homogeneous InstanceProfile;
+        the AutoScaler's ``warmup_s`` models provision/weight-load time."""
+        self.costs[iid] = CostModel(self.cfg, self._spawn_profile)
+        self.locals[iid] = LocalScheduler(
+            iid, token_budget=self._token_budget,
+            kv_capacity_tokens=self.costs[iid].kv_capacity_tokens())
+        self._busy[iid] = False
+        self._flip_block[iid] = 0.0
+        return self.autoscaler.cfg.warmup_s if self.autoscaler else 0.0
+
+    def _schedule_activation(self, iid: int, delay: float) -> None:
+        self._push(self._now + delay, self.activate_instance, iid)
+
+    def _instance_ready(self, iid: int) -> None:
+        self._kick(iid)
+
+    def _instance_quiesced(self, iid: int) -> bool:
+        return not self._busy.get(iid, False)
+
+    def _destroy_instance(self, iid: int) -> None:
+        del self.locals[iid]
+        del self.costs[iid]
+        del self._busy[iid]
+        del self._flip_block[iid]
 
     # --------------------------------------------------------- ServingSystem
     def submit(self, req: Request, *, prompt=None, tier: str = "standard",
@@ -200,6 +232,8 @@ class Simulator(RuntimeCore):
 
     def _kick(self, iid: int) -> None:
         """Start an iteration if the instance is idle and has work."""
+        if iid not in self.locals:        # removed (retired) — stale event
+            return
         if self._busy[iid]:
             return
         if self._flip_block[iid] > self._now:          # draining/reloading

@@ -1,22 +1,42 @@
 """Synthetic workload traces statistically matched to the four production
-traces the paper evaluates on (Fig. 1/2, §3.1). The originals are not
-redistributable; generation is seeded and targets the published moments:
+traces the paper evaluates on (Fig. 1/2, §3.1), plus two elasticity presets
+(spike/diurnal) exercising the AutoScaler (DESIGN.md §6). The originals are
+not redistributable; generation is seeded and targets the published moments.
 
-  Azure Code        : bursty (input-length c_v ≈ 0.8/min), long inputs, short
-                      outputs, strong in/out correlation (r ≈ 0.95)
-  Azure Conversation: moderate lengths, weak correlation (r ≈ 0.29)
-  BurstGPT          : frequent bursts (c_v ≈ 1.11/min) via a 2-state MMPP
-  Mooncake          : very long inputs, low rate, stable load (c_v ≈ 0.16)
+Preset provenance and target moments (at ``rate_scale=1.0``):
+
+  name        provenance                    rate    in_med  out_med  corr  arrivals
+  ----------  ----------------------------  ------  ------  -------  ----  -----------------
+  azure_code  Azure LLM code trace (paper   2.0/s   2600    28       0.95  MMPP, 10x bursts
+              Fig. 1: c_v≈0.8/min, long                                    10% of time
+              inputs, short outputs)
+  azure_conv  Azure LLM conversation trace  4.0/s   1024    220      0.29  MMPP, 2.5x bursts
+              (moderate lengths, weak                                      15% of time
+              in/out correlation)
+  burstgpt    BurstGPT open trace (the      3.0/s   620     190      0.55  MMPP, 8x bursts
+              burstiest: c_v≈1.11/min)                                     10% of time
+  mooncake    Mooncake production trace     3.0/s   14000   300      0.40  Poisson (stable,
+              (very long inputs, stable                                    c_v≈0.16)
+              load)
+  spike       synthetic elasticity study:   1.0/s   1800    160      0.50  6x plateau over
+              flash-crowd plateau on an                                    t∈[40%,60%) of
+              otherwise calm day                                           the duration
+  diurnal     synthetic elasticity study:   1.2/s   1400    180      0.45  sinusoid, 5x
+              one compressed day/night                                     peak-to-trough,
+              load cycle                                                   peak mid-trace
 
 ``load_trace(name, rate_scale)`` replays at a scaled request rate by dividing
-inter-arrival times — the paper's evaluation-workflow trick (§7.1).
+inter-arrival times — the paper's evaluation-workflow trick (§7.1). The MMPP
+presets draw arrivals from a 2-state Markov-modulated Poisson process; the
+shaped presets (spike/diurnal) draw from a non-homogeneous Poisson process
+via thinning against the deterministic rate profile ``rate_at``.
 """
 from __future__ import annotations
 
 import math
 import zlib
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -39,6 +59,27 @@ class TracePreset:
     max_output: int = 4096
     slo_ttft: float = 3.0
     slo_tpot: float = 0.1
+    # deterministic rate shaping (elasticity presets): "mmpp" keeps the
+    # 2-state MMPP arrivals; "spike"/"diurnal" thin a Poisson process against
+    # rate_at(t). shape_mult = peak rate multiplier over base_rate.
+    rate_shape: str = "mmpp"
+    shape_mult: float = 1.0
+    spike_window: Tuple[float, float] = (0.4, 0.6)   # fractions of duration
+
+    def rate_at(self, t: float) -> float:
+        """Deterministic request rate (req/s) at trace time ``t`` for the
+        shaped presets; the MMPP presets return base_rate (their burstiness
+        is stochastic)."""
+        if self.rate_shape == "spike":
+            a, b = self.spike_window
+            inside = a * self.duration <= t < b * self.duration
+            return self.base_rate * (self.shape_mult if inside else 1.0)
+        if self.rate_shape == "diurnal":
+            # one full day compressed into `duration`: trough at t=0, peak
+            # mid-trace, trough again at the end.
+            phase = 0.5 * (1.0 - math.cos(2 * math.pi * t / self.duration))
+            return self.base_rate * (1.0 + (self.shape_mult - 1.0) * phase)
+        return self.base_rate
 
 
 TRACE_PRESETS: Dict[str, TracePreset] = {
@@ -62,12 +103,43 @@ TRACE_PRESETS: Dict[str, TracePreset] = {
         in_median=14000.0, in_sigma=0.55, out_median=300.0, out_sigma=0.5,
         in_out_corr=0.4, burst_rate_mult=1.0, burst_frac=0.0,
         max_input=131072, max_output=2048, slo_ttft=30.0, slo_tpot=0.1),
+    # ---- elasticity presets (DESIGN.md §6): deterministic load shapes that
+    # a fixed-size cluster must over-provision for. Exercised by
+    # benchmarks/bench_elastic.py and tests/test_autoscaler.py.
+    "spike": TracePreset(
+        "spike", duration=600.0, base_rate=1.0,
+        in_median=1800.0, in_sigma=1.0, out_median=160.0, out_sigma=0.7,
+        in_out_corr=0.5, max_input=16384, max_output=1024,
+        slo_ttft=2.0, slo_tpot=0.1,
+        rate_shape="spike", shape_mult=6.0, spike_window=(0.4, 0.6)),
+    "diurnal": TracePreset(
+        "diurnal", duration=600.0, base_rate=1.2,
+        in_median=1400.0, in_sigma=1.0, out_median=180.0, out_sigma=0.7,
+        in_out_corr=0.45, max_input=16384, max_output=1024,
+        slo_ttft=2.0, slo_tpot=0.1,
+        rate_shape="diurnal", shape_mult=5.0),
 }
+
+
+def _shaped_arrivals(rng: np.random.Generator, p: TracePreset) -> np.ndarray:
+    """Non-homogeneous Poisson arrivals against the deterministic rate
+    profile ``p.rate_at`` (Lewis–Shedler thinning)."""
+    lam_max = p.base_rate * max(p.shape_mult, 1.0)
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / lam_max)
+        if t >= p.duration:
+            break
+        if rng.random() * lam_max <= p.rate_at(t):
+            out.append(t)
+    return np.asarray(out)
 
 
 def _arrivals(rng: np.random.Generator, p: TracePreset, rate: float) -> np.ndarray:
     """2-state MMPP: exponential inter-arrivals at low/high rate, switching
     with exponentially-distributed dwell times."""
+    if p.rate_shape != "mmpp":
+        return _shaped_arrivals(rng, p)
     lo = rate * (1 - p.burst_frac * p.burst_rate_mult) / max(1 - p.burst_frac, 1e-9)
     lo = max(lo, rate * 0.1)
     hi = rate * p.burst_rate_mult

@@ -1,0 +1,303 @@
+"""Elastic cluster scaling (DESIGN.md §6): instance lifecycle state machine,
+pool-flip edge cases under retirement, scheduler placement guarantees, the
+AutoScaler decision loop, and the end-to-end sim acceptance run on the spike
+trace (deterministic — virtual clock + seeded trace)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (SLO, AutoScalerConfig, GlobalScheduler,
+                        InstanceMonitor, InstancePools, InstanceStats,
+                        Lifecycle, Pool, Request, SchedulerConfig,
+                        TTFTPredictor)
+from repro.core.serving import replay_trace
+from repro.sim import Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+CFG = get_config("gemma-2b")
+
+
+# ------------------------------------------------- lifecycle state machine
+
+
+def test_lifecycle_add_activate_retire_remove():
+    pools = InstancePools(range(2), n_prefill=1)
+    pools.add_instance(2, Pool.DECODE, warming=True)
+    assert pools.lifecycle_of(2) is Lifecycle.WARMING
+    assert 2 in pools.all_ids() and 2 not in pools.members(Pool.DECODE)
+    assert 2 not in pools.decode_capable()
+    pools.activate(2)
+    assert pools.lifecycle_of(2) is Lifecycle.ACTIVE
+    assert 2 in pools.members(Pool.DECODE) and 2 in pools.decode_capable()
+    pools.begin_retire(2)
+    assert pools.lifecycle_of(2) is Lifecycle.RETIRING
+    assert 2 not in pools.decode_capable() and 2 in pools.all_ids()
+    pools.remove_instance(2)
+    assert 2 not in pools.all_ids()
+
+
+def test_lifecycle_guards():
+    pools = InstancePools(range(2), n_prefill=1)
+    with pytest.raises(ValueError, match="already exists"):
+        pools.add_instance(0, Pool.PREFILL)
+    with pytest.raises(ValueError, match="not warming"):
+        pools.activate(0)                       # already active
+    with pytest.raises(ValueError, match="retire first"):
+        pools.remove_instance(0)                # must retire before removing
+    pools.begin_retire(0)
+    with pytest.raises(ValueError, match="cannot retire"):
+        pools.begin_retire(0)                   # double-retire refused
+
+
+def test_flip_of_retiring_instance_is_refused():
+    pools = InstancePools(range(4), n_prefill=2)
+    pools.begin_retire(0)                       # a PREFILL member
+    with pytest.raises(ValueError, match="cannot flip"):
+        pools.flip_to_decode(0, has_pending_prefill=False)
+    pools.begin_retire(2)                       # a DECODE member
+    with pytest.raises(ValueError, match="cannot flip"):
+        pools.flip_to_prefill(2, has_pending_decode=True)
+    # warming instances are equally unflippable
+    pools.add_instance(9, Pool.PREFILL, warming=True)
+    with pytest.raises(ValueError, match="cannot flip"):
+        pools.flip_to_decode(9, has_pending_prefill=False)
+
+
+def test_drain_transitions_during_retire_are_noops():
+    """The Fig. 5 black edges must not resurrect a retiring instance into an
+    active pool."""
+    pools = InstancePools(range(4), n_prefill=2)
+    pools.flip_to_decode(0, has_pending_prefill=True)   # 0 -> P2D
+    pools.flip_to_prefill(2, has_pending_decode=True)   # 2 -> D2P
+    pools.begin_retire(0)
+    pools.begin_retire(2)
+    flips_before = pools.flips
+    pools.on_prefill_drained(0)
+    pools.on_decode_drained(2)
+    assert pools.pool_of(0) is Pool.P2D         # unchanged
+    assert pools.pool_of(2) is Pool.D2P
+    assert pools.flips == flips_before
+    assert not pools.decode_capable() or 0 not in pools.decode_capable()
+
+
+# --------------------------------------------- scheduler placement guards
+
+
+class FakeCluster:
+    def has_pending_prefill(self, iid):
+        return False
+
+    def has_pending_decode(self, iid):
+        return False
+
+
+def make_sched(n=4, n_prefill=2, slo=SLO(1.0, 0.1), **cfg_kw):
+    pools = InstancePools(range(n), n_prefill=n_prefill)
+    mon = InstanceMonitor(range(n))
+    for i in range(n):
+        mon.update_stats(InstanceStats(instance_id=i))
+    pred = TTFTPredictor.fit([(0, 0.0), (1000, 0.1), (2000, 0.3), (4000, 1.0)])
+    cfg = SchedulerConfig(max_running_tokens=10000, **cfg_kw)
+    gs = GlobalScheduler(pools, mon, pred, slo, cfg, FakeCluster())
+    return gs, pools, mon
+
+
+def test_scheduler_never_places_work_on_retiring_instance():
+    """Algorithms 1-4 must treat a retiring instance as nonexistent, even
+    under pressure that would otherwise flip or fall back onto it."""
+    gs, pools, mon = make_sched(n=4, n_prefill=2, slo=SLO(0.2, 0.01))
+    pools.begin_retire(0)        # prefill member
+    pools.begin_retire(2)        # decode member
+    for i in range(40):
+        r = Request(rid=i, arrival=0.01 * i, input_len=4000, output_len=8)
+        out_p = gs.schedule_prefill(r, now=0.01 * i)
+        assert out_p.instance not in (0, 2), f"prefill placed on retiring"
+        r.prefill_instance = out_p.instance
+        out_d = gs.schedule_decode(r, now=0.01 * i)
+        assert out_d.instance not in (0, 2), f"decode placed on retiring"
+        gs.on_monitor_tick(0.01 * i)
+
+
+def test_decode_does_not_stay_on_retiring_prefill_instance():
+    """Algorithm 2's keep-local shortcut (prefill instance already on decode
+    duty) must not apply when that instance is retiring."""
+    gs, pools, mon = make_sched()
+    pools.flip_to_decode(0, has_pending_prefill=False)
+    pools.begin_retire(0)
+    r = Request(rid=1, arrival=0.0, input_len=500, output_len=10)
+    r.prefill_instance = 0
+    out = gs.schedule_decode(r, now=0.0)
+    assert out.instance != 0
+
+
+def test_flip_candidates_exclude_retiring():
+    gs, pools, mon = make_sched(n=4, n_prefill=2)
+    pools.begin_retire(2)
+    pools.begin_retire(3)
+    # no active decode member is spare -> no D->P flip possible
+    assert gs.try_move_decode_to_prefill() is None
+
+
+# ------------------------------------------------------ runtime lifecycle
+
+
+def elastic_sim(**kw):
+    defaults = dict(n_instances=4, n_prefill=2, policy="arrow_elastic",
+                    slo=SLO(3.0, 0.1),
+                    autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                    max_instances=12))
+    defaults.update(kw)
+    return Simulator(CFG, **defaults)
+
+
+def test_sim_scale_up_warms_then_activates():
+    sim = elastic_sim()
+    iid = sim.scale_up(Pool.PREFILL, sim.clock.now())
+    assert sim.pools.lifecycle_of(iid) is Lifecycle.WARMING
+    assert iid in sim.locals and iid in sim.costs
+    assert iid not in sim.pools.members(Pool.PREFILL)
+    # warm-up is an event on the virtual clock
+    sim.run_until(sim.autoscaler.cfg.warmup_s + 1e-6)
+    assert sim.pools.lifecycle_of(iid) is Lifecycle.ACTIVE
+    assert iid in sim.pools.members(Pool.PREFILL)
+    assert iid in sim.policy.prefill_ready_at
+
+
+def test_sim_retire_drains_and_removes():
+    """begin_retire mid-run: resident decode work migrates away via the FCFS
+    manager, every request still finishes exactly once, and the instance is
+    eventually removed from every runtime structure."""
+    sim = elastic_sim()
+    trace = load_trace("azure_code", rate_scale=4.0, seed=0, duration=30)
+    tokens = {}
+    replay_trace(sim, trace,
+                 on_token=lambda h, tok, t: tokens.setdefault(h.rid, []).append(t))
+    sim.run_until(5.0)
+    # retire the decode-capable instance carrying the most work
+    cands = [i for i in sim.pools.decode_capable()
+             if sim.locals[i].decode_running]
+    victim = max(cands, key=lambda i: len(sim.locals[i].decode_running)) \
+        if cands else sim.pools.decode_capable()[0]
+    migrated = list(sim.locals[victim].decode_running)
+    sim.begin_retire(victim, sim.clock.now())
+    assert not sim.locals[victim].decode_running      # evacuated immediately
+    for rid in migrated:
+        assert sim.handles[rid].req.decode_instance != victim
+    report = sim.drain()
+    assert report.n_finished == len(trace)
+    for r in trace:
+        # exactly one o_1 + (output_len-1) decode tokens: nothing dropped or
+        # duplicated across the retire-migration
+        assert len(tokens[r.rid]) == r.output_len
+        ts = tokens[r.rid]
+        assert all(a <= b for a, b in zip(ts, ts[1:]))
+    assert victim not in sim.pools.all_ids()
+    assert victim not in sim.locals
+    assert victim not in sim.policy.prefill_ready_at
+    assert report.scaling["instance_seconds"] < 4 * report.duration
+
+
+def test_retire_waits_for_inflight_inbound_migration():
+    """Regression: a retiring instance with a KV transfer *in the air toward
+    it* (admitted, not yet landed) must not be finalized — the transfer must
+    land, decode drains in place, and removal happens afterwards."""
+    from repro.core.request import RequestState
+    sim = elastic_sim()
+    h = sim.submit(Request(rid=0, arrival=0.0, input_len=512, output_len=4))
+    dst = None
+    for _ in range(10000):
+        alive = sim.step()
+        req = h.req
+        if req.state is RequestState.MIGRATING and \
+                req.decode_instance is not None:
+            loc = sim.locals[req.decode_instance]
+            if not loc.migration_queue and 0 not in loc.decode_running:
+                dst = req.decode_instance        # admitted, still in flight
+                break
+        if not alive:
+            break
+    assert dst is not None, "no in-flight migration window observed"
+    sim.begin_retire(dst, sim.clock.now())
+    sim._maybe_finalize_retires(sim.clock.now())
+    assert dst in sim.locals                     # NOT finalized mid-transfer
+    report = sim.drain()
+    assert report.n_finished == 1
+    assert len(h.tokens) == h.req.output_len     # nothing dropped
+    sim.collect_stats(sim.clock.now())           # final tick finalizes
+    assert dst not in sim.pools.all_ids()
+
+
+def test_autoscaler_requires_elastic_policy():
+    with pytest.raises(ValueError, match="not elastic"):
+        Simulator(CFG, n_instances=4, n_prefill=2, policy="arrow",
+                  autoscaler_cfg=AutoScalerConfig())
+
+
+def test_autoscaler_scales_up_under_pressure_and_down_when_idle():
+    """Direct decision-loop check with synthetic monitor state (no trace)."""
+    sim = elastic_sim(autoscaler_cfg=AutoScalerConfig(
+        min_instances=2, max_instances=6, up_patience=2, down_patience=3,
+        cooldown_s=0.0, warmup_s=0.0))
+    asc = sim.autoscaler
+    # sustained prefill pressure: queues predicted far beyond the TTFT budget
+    for i in sim.pools.prefill_capable():
+        sim.policy.prefill_ready_at[i] = 100.0
+    n0 = len(sim.pools.all_ids())
+    for t in range(4):
+        sim.collect_stats(float(t))
+    assert asc.n_scale_ups >= 1
+    assert len(sim.pools.all_ids()) > n0
+    assert asc.events[0].pool is Pool.PREFILL      # pressure picked the pool
+    # now fully idle: pressure gone -> shrink toward min_instances
+    for i in sim.pools.all_ids():
+        sim.policy.prefill_ready_at[i] = 0.0
+    for t in range(4, 40):
+        sim.collect_stats(float(t))
+    assert asc.n_scale_downs >= 1
+    assert len(sim.pools.active_ids()) >= asc.cfg.min_instances
+
+
+def test_autoscaler_respects_bounds():
+    sim = elastic_sim(autoscaler_cfg=AutoScalerConfig(
+        min_instances=4, max_instances=5, up_patience=1, down_patience=1,
+        cooldown_s=0.0, warmup_s=0.0))
+    for i in sim.pools.prefill_capable():
+        sim.policy.prefill_ready_at[i] = 1e9
+    for t in range(20):
+        sim.collect_stats(float(t))
+    assert len(sim.pools.all_ids()) <= 5           # ceiling holds
+    for i in sim.pools.all_ids():
+        sim.policy.prefill_ready_at[i] = 0.0
+    for t in range(20, 80):
+        sim.collect_stats(float(t))
+    assert len(sim.pools.active_ids()) >= 4        # floor holds
+
+
+# ------------------------------------------- acceptance: spike trace study
+
+
+def test_elastic_matches_static_attainment_with_fewer_instance_seconds():
+    """Acceptance (ISSUE 2): on the spike trace, arrow_elastic records >=1
+    scale-up and >=1 scale-down, attains >= the static 8-instance arrow run,
+    and pays fewer instance-seconds. Fully deterministic: virtual clock,
+    seeded trace."""
+    p = TRACE_PRESETS["spike"]
+    slo = SLO(p.slo_ttft, p.slo_tpot)
+    trace = load_trace("spike", rate_scale=4.0, seed=0)
+
+    static = Simulator(CFG, n_instances=8, n_prefill=4, policy="arrow",
+                       slo=slo)
+    replay_trace(static, trace)
+    rep_s = static.drain()
+
+    elastic = Simulator(CFG, n_instances=4, n_prefill=2,
+                        policy="arrow_elastic", slo=slo,
+                        autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                        max_instances=12))
+    replay_trace(elastic, trace)
+    rep_e = elastic.drain()
+
+    assert rep_e.scaling["scale_ups"] >= 1
+    assert rep_e.scaling["scale_downs"] >= 1
+    assert rep_e.n_finished == len(trace)
+    assert rep_e.attainment >= rep_s.attainment
+    assert rep_e.scaling["instance_seconds"] < rep_s.scaling["instance_seconds"]

@@ -18,8 +18,9 @@ def capture(fn, *args):
 
 def test_trace_stats_emits_csv():
     from benchmarks import bench_trace_stats
+    from repro.traces import TRACE_PRESETS
     lines = capture(bench_trace_stats.main)
-    assert len(lines) == 4
+    assert len(lines) == len(TRACE_PRESETS)
     for line in lines:
         name, us, derived = line.split(",", 2)
         assert name.startswith("trace_stats.")
@@ -43,6 +44,16 @@ def test_scalability_quick():
         name, _, derived = line.split(",", 2)
         att[name] = float(derived.split("=")[1])
     assert att["scalability.n16.arrow"] >= att["scalability.n2.arrow"]
+
+
+def test_elastic_benchmark_smoke():
+    from benchmarks import bench_elastic
+    lines = capture(bench_elastic.main, ["--smoke"])
+    assert any(line.startswith("elastic.spike.arrow_elastic") for line in lines)
+    assert any(line.startswith("elastic.spike.saving") for line in lines)
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        assert float(us) >= 0
 
 
 def test_roofline_from_records():

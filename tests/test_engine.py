@@ -7,9 +7,15 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import SLO
+from repro.core import Request, SLO
 from repro.engine import ArrowEngineCluster, EngineInstance, ServeRequest
 from repro.models import build_model
+
+# Engine runs are wall-clock driven: on a loaded CI machine jit compiles and
+# cooperative round-robin passes stretch. Budget generously — assertions
+# below are value/ordering based (token ids, monotone times), never exact
+# timings, so a slow machine can only time out, not produce a wrong pass.
+DRAIN_TIMEOUT = 300.0
 
 
 @pytest.fixture(scope="module")
@@ -126,7 +132,7 @@ def test_cluster_chunked_end_to_end(setup):
     reqs = [ServeRequest(
         rid=i, prompt=rng.integers(1, cfg.vocab_size, size=50).astype(np.int32),
         max_new_tokens=3) for i in range(4)]
-    out = cluster.serve(reqs, timeout=120.0)
+    out = cluster.serve(reqs, timeout=DRAIN_TIMEOUT)
     for sr in out:
         assert sr.req.finish_time is not None
         ref = greedy_reference(cfg, model, params, sr.prompt, sr.max_new_tokens)
@@ -143,7 +149,7 @@ def test_cluster_end_to_end_all_finish(setup):
                          prompt=rng.integers(1, cfg.vocab_size, size=rng.integers(4, 20)).astype(np.int32),
                          max_new_tokens=int(rng.integers(1, 6)))
             for i in range(8)]
-    out = cluster.serve(reqs, timeout=120.0)
+    out = cluster.serve(reqs, timeout=DRAIN_TIMEOUT)
     for sr in out:
         assert sr.req is not None and sr.req.finish_time is not None, sr.rid
         assert len(sr.output_tokens) == sr.max_new_tokens
@@ -153,3 +159,59 @@ def test_cluster_end_to_end_all_finish(setup):
     for sr in out[:3]:
         ref = greedy_reference(cfg, model, params, sr.prompt, sr.max_new_tokens)
         assert sr.output_tokens == ref, sr.rid
+
+
+def test_retire_instance_migrates_resident_kv(setup):
+    """Elastic retirement (DESIGN.md §6): retiring an instance whose slot
+    cache holds live decode requests must migrate/drain them — every stream
+    still matches the greedy reference exactly (nothing dropped, nothing
+    duplicated) and the instance is removed once empty. Streamed token ids
+    are the evidence; times are only checked for ordering (wall clock)."""
+    cfg, model, params = setup
+    cluster = ArrowEngineCluster(cfg, n_instances=3, n_prefill=1, n_slots=4,
+                                 capacity=128, slo=SLO(ttft=5.0, tpot=2.0),
+                                 params=params)
+    rng = np.random.default_rng(11)
+    prompts = {i: rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)
+               for i in range(4)}
+    events = {}
+
+    def on_token(h, tok, t):
+        events.setdefault(h.rid, []).append((tok, t))
+
+    handles = [cluster.submit(Request(rid=i, arrival=0.0, input_len=24,
+                                      output_len=10),
+                              prompt=prompts[i], on_token=on_token)
+               for i in range(4)]
+    # run until some instance holds KV-resident decode work
+    victim = None
+    for _ in range(3000):
+        cluster.step()
+        cands = [i for i, inst in cluster.instances.items()
+                 if inst.local.decode_running]
+        if cands:
+            victim = max(cands,
+                         key=lambda i: len(cluster.instances[i]
+                                           .local.decode_running))
+            break
+    assert victim is not None, "no decode work materialized"
+    resident = list(cluster.instances[victim].local.decode_running)
+    assert resident
+    cluster.begin_retire(victim, cluster.clock.now())
+    assert not cluster.instances[victim].local.decode_running  # evacuated
+    for rid in resident:
+        assert cluster.handles[rid].req.decode_instance != victim
+
+    report = cluster.drain(timeout=DRAIN_TIMEOUT)
+    assert report.n_finished == 4
+    for h in handles:
+        ref = greedy_reference(cfg, model, params, prompts[h.rid], 10)
+        toks = [tok for tok, _ in events[h.rid]]
+        assert toks == ref, f"rid {h.rid} stream diverged across retirement"
+        ts = [t for _, t in events[h.rid]]
+        assert all(a <= b for a, b in zip(ts, ts[1:]))  # ordering bound only
+    # a final monitor pass finalizes the drained retirement
+    cluster.collect_stats(cluster.clock.now())
+    assert victim not in cluster.instances
+    assert victim not in cluster.pools.all_ids()
+    assert report.scaling["n_instances"] >= 2

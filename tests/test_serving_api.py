@@ -127,7 +127,7 @@ def test_sim_engine_parity_same_trace(engine_setup):
     h_eng = replay_trace(eng, trace,
                          on_token=lambda h, tok, t:
                          eng_tokens.setdefault(h.rid, []).append(tok))
-    rep_eng = eng.drain(timeout=120.0)
+    rep_eng = eng.drain(timeout=300.0)
 
     assert rep_sim.n_finished == rep_eng.n_finished == len(trace)
     assert all(h.done for h in h_sim) and all(h.done for h in h_eng)
@@ -150,7 +150,7 @@ def test_engine_runs_colocated_baseline(engine_setup):
                              capacity=128, slo=SLO(5.0, 2.0), params=params,
                              policy="colocated")
     handles = replay_trace(eng, tiny_trace(4, seed=1))
-    report = eng.drain(timeout=120.0)
+    report = eng.drain(timeout=300.0)
     assert report.n_finished == 4
     # colocated: decode where you prefilled, never a KV transfer
     assert all(h.req.decode_instance == h.req.prefill_instance

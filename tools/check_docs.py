@@ -1,0 +1,93 @@
+"""Docs CI gate (ISSUE 2 satellite): two checks over the repo's markdown.
+
+1. **Internal links resolve** — every relative `[text](path)` target in the
+   checked files must exist (anchors are stripped; external schemes are
+   skipped).
+2. **Quickstart commands run as written** — every fenced code block
+   immediately preceded by an `<!-- ci:run -->` marker is executed line by
+   line with the repo root as cwd. A failing command fails the job, so the
+   README cannot drift from the code.
+
+Usage:  python tools/check_docs.py [--no-run]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOCS = ["README.md", "DESIGN.md", "docs/OPERATOR.md", "ROADMAP.md",
+        "PAPER.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+RUN_MARKER = "<!-- ci:run -->"
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            errors.append(f"{doc}: file missing")
+            continue
+        for m in LINK_RE.finditer(path.read_text()):
+            target = m.group(1).split("#")[0]
+            if not target or "://" in target or target.startswith("mailto:"):
+                continue
+            resolved = (path.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc}: broken link -> {m.group(1)}")
+    return errors
+
+
+def run_blocks(doc: str = "README.md") -> list:
+    """Execute every `<!-- ci:run -->`-marked fenced block in ``doc``."""
+    text = (ROOT / doc).read_text()
+    lines = text.splitlines()
+    errors = []
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == RUN_MARKER:
+            j = i + 1
+            while j < len(lines) and not lines[j].startswith("```"):
+                j += 1
+            k = j + 1
+            while k < len(lines) and not lines[k].startswith("```"):
+                k += 1
+            block = "\n".join(lines[j + 1:k])
+            print(f"$ {block}", flush=True)
+            proc = subprocess.run(["bash", "-euo", "pipefail", "-c", block],
+                                  cwd=ROOT)
+            if proc.returncode != 0:
+                errors.append(f"{doc}: ci:run block at line {j + 1} exited "
+                              f"{proc.returncode}")
+            i = k
+        i += 1
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-run", action="store_true",
+                    help="only check links; skip executing ci:run blocks")
+    args = ap.parse_args(argv)
+    errors = check_links()
+    if errors:
+        for e in errors:
+            print(f"FAIL {e}", file=sys.stderr)
+        return 1
+    print("links: OK")
+    if not args.no_run:
+        errors = run_blocks()
+        if errors:
+            for e in errors:
+                print(f"FAIL {e}", file=sys.stderr)
+            return 1
+        print("ci:run blocks: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
