@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   Fig.8    bench_ablation          SLO-aware vs minimal-load vs round-robin
   Fig.9    bench_scalability       attainment vs instance count
   (ours)   bench_elastic           elastic vs static provisioning (DESIGN §6)
+  (ours)   bench_prefix            prefix-aware KV reuse on multi-turn (DESIGN §7)
   (ours)   bench_kernels           Pallas kernels (interpret) vs jnp oracle
   (ours)   roofline                terms from the dry-run records, if present
 """
@@ -22,8 +23,8 @@ def main() -> None:
 
     from benchmarks import (bench_ablation, bench_e2e, bench_elastic,
                             bench_flip_latency, bench_kernels,
-                            bench_load_difference, bench_scalability,
-                            bench_trace_stats)
+                            bench_load_difference, bench_prefix,
+                            bench_scalability, bench_trace_stats)
     print("name,us_per_call,derived")
     bench_trace_stats.main()
     bench_load_difference.main()
@@ -32,6 +33,7 @@ def main() -> None:
     bench_scalability.main(["--duration", duration])
     bench_flip_latency.main(["--duration", duration])
     bench_elastic.main(["--duration", duration])
+    bench_prefix.main(["--duration", duration])
     bench_kernels.main()
     try:
         from benchmarks import roofline

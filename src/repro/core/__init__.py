@@ -4,11 +4,15 @@ SLO-aware adaptive request/instance scheduling (paper §5), plus the unified
 from repro.core.autoscaler import (AutoScaler, AutoScalerConfig,  # noqa: F401
                                    ScaleEvent, ScaleSignals)
 from repro.core.clock import Clock, VirtualClock, WallClock  # noqa: F401
-from repro.core.global_scheduler import GlobalScheduler, ScheduleOutcome  # noqa: F401
+from repro.core.global_scheduler import (GlobalScheduler,  # noqa: F401
+                                         NoSchedulableInstance,
+                                         ScheduleOutcome)
 from repro.core.local_scheduler import IterationPlan, LocalScheduler  # noqa: F401
 from repro.core.monitor import InstanceMonitor, InstanceStats  # noqa: F401
 from repro.core.policies import POLICIES  # noqa: F401
 from repro.core.pools import InstancePools, Lifecycle, Pool  # noqa: F401
+from repro.core.prefix_index import (PrefixCacheManager, PrefixHit,  # noqa: F401
+                                     PrefixIndex, content_keys, lineage_keys)
 from repro.core.request import Phase, Request, RequestState  # noqa: F401
 from repro.core.runtime import DecodePlacement, RuntimeCore  # noqa: F401
 from repro.core.serving import (RequestHandle, ServeReport, ServingSystem,  # noqa: F401

@@ -6,13 +6,27 @@ guard. Engine-agnostic: drives any cluster exposing the ClusterView protocol
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Protocol
+from typing import Dict, List, Optional, Protocol
 
 from repro.core.monitor import InstanceMonitor
 from repro.core.pools import InstancePools, Pool
+from repro.core.prefix_index import PrefixHit
 from repro.core.request import Request
 from repro.core.slo import SLO, SchedulerConfig
 from repro.core.ttft_predictor import TTFTPredictor
+
+
+class NoSchedulableInstance(RuntimeError):
+    """No ACTIVE instance can accept the request's phase right now (every
+    instance is WARMING or RETIRING). The runtime queues the request and
+    retries when an instance activates (core/runtime.py) instead of
+    crashing."""
+
+    def __init__(self, phase: str, pools: InstancePools):
+        super().__init__(
+            f"no ACTIVE instance to schedule {phase} on: "
+            f"{len(pools.warming_ids())} warming, "
+            f"{len(pools.retiring_ids())} retiring, 0 active")
 
 
 class ClusterView(Protocol):
@@ -28,6 +42,7 @@ class ScheduleOutcome:
     flipped: Optional[int] = None      # instance moved between pools, if any
     predicted_ttft: Optional[float] = None
     via_fallback: bool = False
+    prefix_hit: Optional[PrefixHit] = None   # cached-prefix reuse chosen (§7)
 
 
 class GlobalScheduler:
@@ -70,6 +85,14 @@ class GlobalScheduler:
         if hasattr(p, "for_instance"):
             return p.for_instance(iid).predict(input_len)
         return p.predict(input_len)
+
+    def _predict_chunk(self, iid: int, start: int, length: int) -> float:
+        """Suffix-prefill prediction for prefix reuse (§7): the chunk cost is
+        the difference of the cumulative quadratic."""
+        p = self.predictor
+        if hasattr(p, "for_instance"):
+            return p.for_instance(iid).predict_chunk(start, length)
+        return p.predict_chunk(start, length)
 
     def _prefill_delay(self, iid: int, now: float) -> float:
         return max(self.prefill_ready_at[iid] - now, 0.0)
@@ -139,13 +162,55 @@ class GlobalScheduler:
         self.n_p2d_flips += 1
         return pick
 
+    # ------------------------------------- prefix-affinity candidate (§7)
+    def _best_prefix_option(self, req: Request, now: float,
+                            prefix_hits: Optional[List[PrefixHit]]
+                            ) -> Optional[tuple]:
+        """Best admissible cached-prefix holder: ACTIVE, and — when it is on
+        decode duty — only if its decode load is comfortably low (the Alg. 1
+        overload guard applied per-instance). Returns (predicted_ttft,
+        suffix_prefill_time, hit) minimizing predicted TTFT."""
+        best = None
+        for h in prefix_hits or []:
+            cached = min(h.cached_len, req.input_len - 1)
+            if cached <= 0 or not self.pools.is_schedulable(h.iid):
+                continue
+            if self.pools.pool_of(h.iid) in (Pool.DECODE, Pool.P2D):
+                s = self.monitor.get(h.iid)
+                if s.running_tokens > self.cfg.decode_low_load_frac * \
+                        self.cfg.max_running_tokens:
+                    continue
+            suffix = self._predict_chunk(h.iid, cached, req.input_len - cached)
+            t_h = self._prefill_delay(h.iid, now) + suffix
+            if best is None or t_h < best[0]:
+                best = (t_h, suffix, PrefixHit(h.iid, h.rid, cached))
+        return best
+
     # ------------------------------------------------- Algorithm 1 (prefill)
-    def schedule_prefill(self, req: Request, now: float) -> ScheduleOutcome:
+    def schedule_prefill(self, req: Request, now: float,
+                         prefix_hits: Optional[List[PrefixHit]] = None
+                         ) -> ScheduleOutcome:
         ttft_budget = self.cfg.ttft_threshold_frac * self.slo.ttft
         if self.cfg.proactive:
             self._arrivals.append((now, req.input_len))
 
         t1, d1 = self._min_prefill_delay(self.pools.members(Pool.PREFILL), now)
+
+        # Prefix-affinity shortcut (§7, generalizing the Alg. 2 keep-local
+        # rule to prefill): route to the instance holding the longest cached
+        # prefix when its predicted *suffix* TTFT is within budget and beats
+        # the best cold prefill-pool candidate. Eq. (2) stays exact: the
+        # holder is charged only the uncached suffix.
+        opt = self._best_prefix_option(req, now, prefix_hits)
+        if opt is not None:
+            t_h, suffix, hit = opt
+            cold1 = None if t1 is None else \
+                d1 + self._predict(t1, req.input_len)
+            if t_h <= ttft_budget and (cold1 is None or t_h <= cold1):
+                ttft = self.account_prefill_dispatch(hit.iid, now, suffix)
+                return ScheduleOutcome(hit.iid, predicted_ttft=ttft,
+                                       prefix_hit=hit)
+
         if t1 is not None and d1 + self._predict(t1, req.input_len) <= ttft_budget:
             ttft = self.account_prefill_dispatch(
                 t1, now, self._predict(t1, req.input_len))
@@ -167,9 +232,16 @@ class GlobalScheduler:
                 return ScheduleOutcome(t3, flipped=flipped, predicted_ttft=ttft)
 
         # fall back to t1 (or t2 / any ACTIVE instance — never a warming or
-        # retiring one)
-        fb = t1 if t1 is not None else (t2 if t2 is not None else
-                                        self.pools.active_ids()[0])
+        # retiring one). When *no* ACTIVE instance exists the request is not
+        # placeable: raise a descriptive error instead of the bare
+        # IndexError active_ids()[0] used to produce — the runtime queues
+        # the request and retries on the next activation.
+        fb = t1 if t1 is not None else t2
+        if fb is None:
+            active = self.pools.active_ids()
+            if not active:
+                raise NoSchedulableInstance("prefill", self.pools)
+            fb = active[0]
         ttft = self.account_prefill_dispatch(
             fb, now, self._predict(fb, req.input_len))
         return ScheduleOutcome(fb, predicted_ttft=ttft, via_fallback=True)
@@ -210,6 +282,8 @@ class GlobalScheduler:
         # least-loaded decode-capable instance — never an arbitrary id, which
         # could be a pure-PREFILL instance with no decode duty at all.
         ids = self.pools.decode_capable() or self.pools.active_ids()
+        if not ids:
+            raise NoSchedulableInstance("decode", self.pools)
         pick, _ = self._min_running_tokens(ids)
         return ScheduleOutcome(pick, via_fallback=True)
 

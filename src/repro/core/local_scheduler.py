@@ -14,7 +14,9 @@ from typing import Dict, List, Optional, Tuple
 class PrefillWork:
     rid: int
     input_len: int
-    done: int = 0                 # chunked progress
+    done: int = 0                 # chunked progress (starts at the cached
+    #                               prefix length under prefix reuse, §7)
+    cached: int = 0               # tokens served from a cached prefix
 
     @property
     def remaining(self) -> int:
@@ -55,11 +57,19 @@ class LocalScheduler:
         self.migration_queue: deque = deque()  # FCFS: (rid, kv_tokens)
         self.prefill_queue: "OrderedDict[int, PrefillWork]" = OrderedDict()
         self.decode_running: "OrderedDict[int, DecodeWork]" = OrderedDict()
+        # finished requests whose KV is retained as a reusable prefix (§7):
+        # rid -> resident kv tokens. Counts toward kv_used, not decode load.
+        self.retained: Dict[int, int] = {}
         self.kv_used = 0
 
     # ------------------------------------------------------------ enqueues
-    def enqueue_prefill(self, rid: int, input_len: int) -> None:
-        self.prefill_queue[rid] = PrefillWork(rid, input_len)
+    def enqueue_prefill(self, rid: int, input_len: int,
+                        cached: int = 0) -> None:
+        """``cached`` prefix tokens come from a retained KV (copy-on-extend)
+        — chunking starts at ``cached``, but the request's KV footprint is
+        the full ``input_len`` (the copy is its own)."""
+        self.prefill_queue[rid] = PrefillWork(rid, input_len, done=cached,
+                                              cached=cached)
         self.kv_used += input_len
 
     def enqueue_migration(self, rid: int, kv_tokens: int, remaining_out: int) -> None:
@@ -153,3 +163,17 @@ class LocalScheduler:
     def release_prefill_kv(self, rid: int, kv_tokens: int) -> None:
         """KV handed off to another instance (after migration completes)."""
         self.kv_used = max(0, self.kv_used - kv_tokens)
+
+    # ----------------------------------------------- retained prefixes (§7)
+    def retain_kv(self, rid: int, kv_tokens: int) -> None:
+        """A finished request's KV stays resident as a reusable prefix. The
+        decode path already released its tokens from ``kv_used``; re-add
+        them under the retained account."""
+        self.retained[rid] = kv_tokens
+        self.kv_used += kv_tokens
+
+    def release_retained(self, rid: int) -> int:
+        """Evict/invalidate a retained prefix; returns the tokens freed."""
+        kv = self.retained.pop(rid, 0)
+        self.kv_used = max(0, self.kv_used - kv)
+        return kv

@@ -54,6 +54,16 @@ class BasePolicy:
     def _min_tokens(self, ids):
         return min(ids, key=lambda i: self.monitor.get(i).running_tokens)
 
+    def place_prefill(self, req: Request, now: float, prefix_hits=None):
+        """Prefill placement entry point used by the runtime. Baselines do
+        not route by prefix affinity, but when their own choice happens to
+        land on an instance that already caches a prefix of ``req`` the
+        reuse is still taken (the KV is right there). Returns
+        ``(iid, PrefixHit | None)``."""
+        iid = self.schedule_prefill_req(req, now)
+        hit = next((h for h in (prefix_hits or []) if h.iid == iid), None)
+        return iid, hit
+
     def on_monitor_tick(self, now: float) -> None:
         pass
 
@@ -69,6 +79,16 @@ class ArrowPolicy(GlobalScheduler):
 
     def schedule_decode_req(self, req: Request, now: float) -> int:
         return self.schedule_decode(req, now).instance
+
+    def place_prefill(self, req: Request, now: float, prefix_hits=None):
+        """Arrow routes by prefix affinity (§7): Algorithm 1 considers the
+        cached-prefix holder first and charges Eq. (2) only the suffix.
+        Reuse is taken *only* when the affinity shortcut chose it — when
+        the normal path happens to land on a holder it was charged the
+        full prefill, and taking the reuse anyway would leave
+        ``prefill_ready_at`` overestimating by the cached-prefix time."""
+        out = self.schedule_prefill(req, now, prefix_hits=prefix_hits)
+        return out.instance, out.prefix_hit
 
 
 class ArrowElasticPolicy(ArrowPolicy):

@@ -42,6 +42,10 @@ class InstancePools:
             self._pool[iid] = Pool.PREFILL if i < n_prefill else Pool.DECODE
             self._life[iid] = Lifecycle.ACTIVE
         self.flips = 0               # observability: pool moves performed
+        # observer invoked on every actual pool move (iid, frm, to): the
+        # runtime uses it to invalidate the prefix cache on a role change
+        # (DESIGN.md §7) without the scheduler knowing about caching.
+        self.on_flip = None
 
     # ------------------------------------------------------------- queries
     def pool_of(self, iid: int) -> Pool:
@@ -89,9 +93,12 @@ class InstancePools:
 
     # --------------------------------------------------------- transitions
     def move(self, iid: int, to: Pool) -> None:
-        if self._pool[iid] is not to:
+        frm = self._pool[iid]
+        if frm is not to:
             self.flips += 1
         self._pool[iid] = to
+        if frm is not to and self.on_flip is not None:
+            self.on_flip(iid, frm, to)
 
     def flip_to_decode(self, iid: int, has_pending_prefill: bool) -> Pool:
         """PREFILL/D→P instance is reassigned to decode duty."""

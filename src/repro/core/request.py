@@ -28,9 +28,17 @@ class Request:
     output_len: int                  # trace ground truth (sim) / max tokens (engine)
     state: RequestState = RequestState.QUEUED
 
+    # multi-turn lineage (DESIGN.md §7): a follow-up turn extends its
+    # session's token stream; dispatch is gated on the parent finishing and
+    # the prefix cache can reuse the parent's retained KV.
+    session_id: Optional[int] = None
+    parent_rid: Optional[int] = None
+    history_len: int = 0             # tokens shared with the parent's context
+
     # scheduling bookkeeping
     prefill_instance: Optional[int] = None
     decode_instance: Optional[int] = None
+    cached_len: int = 0              # prefix tokens served from cache (§7)
 
     # measured outcomes
     first_token_time: Optional[float] = None      # absolute time of o_1

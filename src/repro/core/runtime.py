@@ -36,10 +36,13 @@ from typing import Dict, Optional, Tuple
 
 from repro.core.autoscaler import AutoScaler, AutoScalerConfig
 from repro.core.clock import Clock
+from repro.core.global_scheduler import NoSchedulableInstance
 from repro.core.local_scheduler import LocalScheduler
 from repro.core.monitor import InstanceMonitor, InstanceStats
 from repro.core.policies import POLICIES
-from repro.core.pools import InstancePools, Pool
+from repro.core.pools import InstancePools, Lifecycle, Pool
+from repro.core.prefix_index import (DEFAULT_BLOCK, PrefixCacheManager,
+                                     PrefixHit, lineage_keys)
 from repro.core.request import Request, RequestState
 from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
                                 ServingSystem, TIERS, TokenCallback)
@@ -61,6 +64,8 @@ class RuntimeCore(ServingSystem):
                       sched_cfg: SchedulerConfig, predictor: TTFTPredictor,
                       clock: Clock,
                       autoscaler_cfg: Optional[AutoScalerConfig] = None,
+                      prefix_cache: bool = False,
+                      prefix_block: int = DEFAULT_BLOCK,
                       ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
@@ -93,6 +98,24 @@ class RuntimeCore(ServingSystem):
         self._kv_outbound = Counter()   # iid -> in-flight outbound transfers
         self._kv_inbound = Counter()    # iid -> admitted, not-yet-landed
         self._recent_finish: deque = deque(maxlen=128)  # SLO window
+        # ---- deferred dispatch: multi-turn parent gating + the no-ACTIVE-
+        # instance queue (both retried through the backend's _arrival_due)
+        self._gated: Dict[int, list] = {}       # parent rid -> waiting rids
+        self._unplaced: deque = deque()         # rids awaiting any ACTIVE
+        # ---- prefix-aware KV reuse (DESIGN.md §7)
+        self.prefix_mgr: Optional[PrefixCacheManager] = None
+        self._prefix_src: Dict[int, tuple] = {}  # rid -> (iid, src_rid, len)
+        # predictor-derived timing totals (the manager owns the token/hit
+        # counters — keep each statistic in exactly one place)
+        self._prefix_timing = {"saved_prefill_s": 0.0, "full_prefill_s": 0.0,
+                               "prefill_tokens": 0.0}
+        if prefix_cache:
+            self.prefix_mgr = PrefixCacheManager(
+                block=prefix_block, release=self._on_prefix_release)
+            # a role change drops the instance's cached prefixes (§7):
+            # memory belongs to the new duty, and correctness stays trivial
+            self.pools.on_flip = \
+                lambda iid, frm, to: self.prefix_mgr.invalidate_instance(iid)
         self.autoscaler: Optional[AutoScaler] = None
         if getattr(self.policy, "elastic", False):
             self.autoscaler = AutoScaler(
@@ -118,6 +141,63 @@ class RuntimeCore(ServingSystem):
     def _decode_started(self, iid: int) -> None:
         """A request joined ``iid``'s decode set (event-driven backends kick
         the instance; polling backends need nothing)."""
+
+    def _arrival_due(self, rid: int) -> None:
+        """Re-deliver a deferred request (gated on its parent, or unplaced
+        while no instance was ACTIVE) into the backend's arrival path."""
+        raise NotImplementedError
+
+    def _prepare_dispatch(self, handle: RequestHandle, now: float) -> None:
+        """Called once per request right before placement, after any parent
+        gating has cleared (the engine materializes session prompts here —
+        the transcript is only complete once the parent finished)."""
+
+    # ---------------------------------------- prefix-cache backend hooks (§7)
+    def _retain_kv(self, iid: int, rid: int, kv_tokens: int) -> bool:
+        """Keep ``rid``'s finished KV resident on ``iid`` as a reusable
+        prefix. Default: LocalScheduler bookkeeping only (the sim models no
+        content); the engine additionally keeps the real slot."""
+        self.local_of(iid).retain_kv(rid, kv_tokens)
+        return True
+
+    def _release_retained(self, iid: int, rid: int) -> None:
+        """Free a retained prefix KV (eviction/invalidation)."""
+        self.local_of(iid).release_retained(rid)
+
+    def _on_prefix_release(self, iid: int, rid: int, kv_tokens: int) -> None:
+        if iid in self.pools.all_ids():       # instance may be long gone
+            self._release_retained(iid, rid)
+
+    # -------------------------------------------------- prefix-key schemes
+    def _lookup_keys(self, req: Request):
+        """Block keys of ``req``'s prompt for the index lookup, capped so at
+        least one token is always recomputed (the last position's logits
+        produce o_1). Backends with real prompts override to add content
+        keys for session-less requests."""
+        if req.session_id is None:
+            return None
+        return lineage_keys(self._lineage_namespace(req),
+                            req.input_len - 1, self.prefix_mgr.block)
+
+    def _retention_keys(self, handle: RequestHandle):
+        """Block keys of the *resident* context at finish: the prompt plus
+        the generated tokens that entered the KV (the final token never
+        does, hence input_len + decoded_tokens)."""
+        req = handle.req
+        if req.session_id is None:
+            return None
+        return lineage_keys(self._lineage_namespace(req),
+                            req.input_len + req.decoded_tokens,
+                            self.prefix_mgr.block)
+
+    def _lineage_namespace(self, req: Request):
+        """Namespace for lineage keys; backends that can fork a session
+        (engine prompt truncation) override with (session_id, epoch)."""
+        return req.session_id
+
+    def _session_note_finish(self, handle: RequestHandle) -> None:
+        """Called on every finish, cache on or off (the engine appends the
+        generated tokens to the session transcript here)."""
 
     # ------------------------------------------ elastic backend hooks (§6)
     def _create_instance(self, iid: int) -> float:
@@ -165,12 +245,52 @@ class RuntimeCore(ServingSystem):
         return handle
 
     # ----------------------------------------------------- lifecycle glue
-    def dispatch_prefill(self, handle: RequestHandle, now: float) -> int:
+    def dispatch_prefill(self, handle: RequestHandle,
+                         now: float) -> Optional[int]:
+        """Place ``handle``'s prefill (Algorithm 1 + §7 prefix affinity).
+        Returns the instance, or None when the request was deferred: a
+        multi-turn follow-up whose parent has not finished yet (released in
+        ``finish``), or no ACTIVE instance exists (released on the next
+        ``activate_instance``)."""
         req = handle.req
-        iid = self.policy.schedule_prefill_req(req, now)
+        if req.parent_rid is not None:
+            parent = self.handles.get(req.parent_rid)
+            if parent is not None and not parent.done:
+                self._gated.setdefault(req.parent_rid, []).append(req.rid)
+                return None
+        self._prepare_dispatch(handle, now)
+        hits = None
+        if self.prefix_mgr is not None:
+            hits = self.prefix_mgr.lookup(self._lookup_keys(req))
+        try:
+            iid, hit = self.policy.place_prefill(req, now, prefix_hits=hits)
+        except NoSchedulableInstance:
+            self._unplaced.append(req.rid)
+            return None
+        cached = 0
+        if hit is not None and self.prefix_mgr is not None:
+            cached = min(hit.cached_len, req.input_len - 1)
+            if cached > 0 and iid == hit.iid:
+                self.prefix_mgr.record_hit(PrefixHit(hit.iid, hit.rid,
+                                                     cached))
+                self.prefix_mgr.pin(hit.iid, hit.rid)
+                self._prefix_src[req.rid] = (hit.iid, hit.rid, cached)
+                req.cached_len = cached
+            else:
+                cached = 0
+        if self.prefix_mgr is not None:
+            p = self.predictor
+            full = p.predict(req.input_len)
+            t = self._prefix_timing
+            t["full_prefill_s"] += full
+            t["prefill_tokens"] += req.input_len
+            if cached:
+                t["saved_prefill_s"] += full - p.predict_chunk(
+                    cached, req.input_len - cached)
         req.prefill_instance = iid
         req.state = RequestState.PREFILLING
-        self.local_of(iid).enqueue_prefill(req.rid, req.input_len)
+        self.local_of(iid).enqueue_prefill(req.rid, req.input_len,
+                                           cached=cached)
         self.decisions["prefill"] += 1
         return iid
 
@@ -190,8 +310,35 @@ class RuntimeCore(ServingSystem):
         handle.req.finish_time = now
         handle.req.state = RequestState.FINISHED
         self._recent_finish.append(handle.meets_slo())
+        self._session_note_finish(handle)
+        if self.prefix_mgr is not None:
+            self._maybe_retain(handle)
+        # release follow-up turns gated on this request (multi-turn): the
+        # user cannot send a follow-up before seeing the answer, so the
+        # effective arrival is no earlier than the parent's finish.
+        for rid in self._gated.pop(handle.req.rid, []):
+            child = self.handles[rid]
+            child.req.arrival = max(child.req.arrival, now)
+            self._arrival_due(rid)
         if handle.on_finish is not None:
             handle.on_finish(handle)
+
+    def _maybe_retain(self, handle: RequestHandle) -> None:
+        """Retain the finished request's KV as a reusable prefix (§7) on the
+        instance where it is resident — unless that instance is retiring
+        (its memory is on the way out) or already gone."""
+        req = handle.req
+        iid = req.decode_instance if req.decode_instance is not None \
+            else req.prefill_instance
+        if iid is None or iid not in self.pools.all_ids() or \
+                self.pools.lifecycle_of(iid) is Lifecycle.RETIRING:
+            return
+        keys = self._retention_keys(handle)
+        if not keys:
+            return
+        kv = req.input_len + req.decoded_tokens
+        if self._retain_kv(iid, req.rid, kv):
+            self.prefix_mgr.retain(iid, req.rid, keys, kv)
 
     def recent_attainment(self, min_samples: int = 16) -> Optional[float]:
         """SLO attainment over the sliding window of recent finishes; None
@@ -207,6 +354,10 @@ class RuntimeCore(ServingSystem):
         phase (Algorithm 2). Returns the placement and, for MIGRATE, the
         target instance whose admission queue now holds the request."""
         req = handle.req
+        src = self._prefix_src.pop(req.rid, None)
+        if src is not None and self.prefix_mgr is not None:
+            # copy-on-extend done (the suffix is computed): unpin the source
+            self.prefix_mgr.unpin(src[0], src[1])
         self.emit_token(handle, now, token, first=True)
         if req.output_len <= 1:
             self.finish(handle, now)
@@ -235,6 +386,14 @@ class RuntimeCore(ServingSystem):
         while True:
             item = loc.next_migration()
             if item is None:
+                # memory-blocked head: cached prefixes are the first thing
+                # to go (§7 — reclaimable capacity, LRU, unpinned only)
+                if self.prefix_mgr is not None and loc.migration_queue:
+                    need = loc.kv_used + loc.migration_queue[0][1] \
+                        - loc.kv_capacity
+                    if need > 0 and \
+                            self.prefix_mgr.make_room(iid, need) > 0:
+                        continue
                 return
             rid, kv, rem = item
             if rid not in self.handles:        # stale entry: drop it
@@ -292,9 +451,12 @@ class RuntimeCore(ServingSystem):
         return iid
 
     def activate_instance(self, iid: int) -> None:
-        """Warm-up finished: the instance becomes schedulable."""
+        """Warm-up finished: the instance becomes schedulable. Requests that
+        found no ACTIVE instance at dispatch time retry now."""
         self.pools.activate(iid)
         self._instance_ready(iid)
+        while self._unplaced:
+            self._arrival_due(self._unplaced.popleft())
 
     def begin_retire(self, iid: int, now: float) -> None:
         """ACTIVE → RETIRING: the instance accepts no new work. Its queued
@@ -304,6 +466,11 @@ class RuntimeCore(ServingSystem):
         happens in ``_maybe_finalize_retires`` once everything left."""
         self.pools.begin_retire(iid)
         self._retire_started[iid] = now
+        if self.prefix_mgr is not None:
+            # cached prefixes are disposable state: invalidate (free) rather
+            # than migrate — pinned entries (a copy-on-extend in flight on
+            # this very instance) are doomed and freed on the last unpin
+            self.prefix_mgr.invalidate_instance(iid)
         loc = self.local_of(iid)
         # queued (never-admitted) inbound migrations: KV is still elsewhere,
         # only the queue entry moves to a new destination.
@@ -423,9 +590,21 @@ class RuntimeCore(ServingSystem):
             out["scale_downs"] = self.autoscaler.n_scale_downs
         return out
 
+    def prefix_detail(self) -> Dict[str, float]:
+        """Prefix-cache effectiveness (§7); empty when the cache is off."""
+        if self.prefix_mgr is None:
+            return {}
+        out = dict(self.prefix_mgr.stats)
+        out.update(self._prefix_timing)
+        full = out["full_prefill_s"]
+        out["saved_prefill_frac"] = \
+            out["saved_prefill_s"] / full if full > 0 else 0.0
+        return out
+
     def report(self) -> ServeReport:
         return ServeReport(handles=list(self.handles.values()),
                            flip_detail=self.flip_counts(),
                            decisions=dict(self.decisions),
                            duration=self.clock.now(),
-                           scaling=self.scaling_detail())
+                           scaling=self.scaling_detail(),
+                           prefix=self.prefix_detail())

@@ -97,6 +97,10 @@ class ServeReport:
     # elastic-scaling accounting (DESIGN.md §6): instance_seconds,
     # n_instances and — under an elastic policy — scale_ups/scale_downs.
     scaling: Dict[str, float] = field(default_factory=dict)
+    # prefix-cache accounting (DESIGN.md §7): hits/lookups, cached_tokens,
+    # saved_prefill_s/saved_prefill_frac, evictions, invalidations. Empty
+    # when the cache is off.
+    prefix: Dict[str, float] = field(default_factory=dict)
 
     @property
     def flips(self) -> int:
@@ -149,6 +153,10 @@ class ServeReport:
             s += (f" scale_ups={self.scaling['scale_ups']:.0f}"
                   f" scale_downs={self.scaling['scale_downs']:.0f}"
                   f" instance_s={self.scaling['instance_seconds']:.0f}")
+        if self.prefix:
+            s += (f" prefix_hits={self.prefix['hits']:.0f}"
+                  f"/{self.prefix['lookups']:.0f}"
+                  f" saved_prefill={self.prefix['saved_prefill_frac']:.0%}")
         return s
 
 
@@ -200,7 +208,9 @@ def replay_trace(system: ServingSystem, trace: List[Request], *,
     handles = []
     for r in trace:
         req = Request(rid=r.rid, arrival=r.arrival * time_scale,
-                      input_len=r.input_len, output_len=r.output_len)
+                      input_len=r.input_len, output_len=r.output_len,
+                      session_id=r.session_id, parent_rid=r.parent_rid,
+                      history_len=r.history_len)
         handles.append(system.submit(req, tier=tier, on_token=on_token,
                                      on_finish=on_finish))
     return handles

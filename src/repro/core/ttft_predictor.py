@@ -59,3 +59,6 @@ class PerInstancePredictor:
 
     def predict(self, input_len: int, iid=None) -> float:
         return self.for_instance(iid).predict(input_len)
+
+    def predict_chunk(self, start: int, length: int, iid=None) -> float:
+        return self.for_instance(iid).predict_chunk(start, length)

@@ -28,6 +28,7 @@ from repro.core import (Request, RequestState, SLO, SchedulerConfig,
                         TTFTPredictor)
 from repro.core.clock import WallClock
 from repro.core.local_scheduler import LocalScheduler
+from repro.core.prefix_index import content_keys, lineage_keys
 from repro.core.runtime import DecodePlacement, RuntimeCore
 from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
                                 TokenCallback)
@@ -54,7 +55,8 @@ class ArrowEngineCluster(RuntimeCore):
                  slo: SLO = SLO(ttft=2.0, tpot=0.5),
                  sched_cfg: Optional[SchedulerConfig] = None, seed: int = 0,
                  params=None, chunk_tokens: Optional[int] = None,
-                 policy: str = "arrow", autoscaler_cfg=None):
+                 policy: str = "arrow", autoscaler_cfg=None,
+                 prefix_cache: bool = False):
         import jax
         self.cfg = cfg
         self.capacity = capacity
@@ -76,11 +78,21 @@ class ArrowEngineCluster(RuntimeCore):
         self._init_runtime(list(self.instances), n_prefill=n_prefill,
                            policy=policy, slo=slo, sched_cfg=sched_cfg,
                            predictor=predictor, clock=WallClock(),
-                           autoscaler_cfg=autoscaler_cfg)
+                           autoscaler_cfg=autoscaler_cfg,
+                           prefix_cache=prefix_cache)
         self._pending: list = []                # heap: (arrival, rid)
         self._live: Dict[int, RequestHandle] = {}
         self._prompts: Dict[int, np.ndarray] = {}
         self._last_tick = 0.0
+        # multi-turn sessions (DESIGN.md §7): the evolving token stream per
+        # session (prompt ‖ generated of the last finished turn) — follow-up
+        # prompts literally extend it, which is what makes lineage keys
+        # *true in compute* on the engine. ``_session_epoch`` bumps when a
+        # turn truncates the stream (capacity clamp): stale lineage keys
+        # must not collide with the forked content.
+        self._session_tail: Dict[int, np.ndarray] = {}
+        self._session_epoch: Dict[int, int] = {}
+        self._rid_epoch: Dict[int, tuple] = {}   # rid -> (lookup, retain)
 
     @property
     def gs(self):
@@ -97,12 +109,109 @@ class ArrowEngineCluster(RuntimeCore):
         src = self._kv_source(rid)
         k, v, L, last, gen = self.instances[src].export_kv(rid)
         if not self.instances[dst].import_kv(rid, k, v, L, last, gen):
-            return False                        # no free slot: retry later
+            # no free slot: cached prefixes are reclaimable capacity (§7)
+            if not (self.prefix_mgr is not None
+                    and self.prefix_mgr.evict_one(dst) is not None
+                    and self.instances[dst].import_kv(rid, k, v, L,
+                                                      last, gen)):
+                return False                    # genuinely full: retry later
         self.complete_migration(rid, dst, kv, rem, self.clock.now())
         return True
 
     def _release_source_kv(self, src: int, rid: int, kv: int) -> None:
+        # free the slot *and* the LocalScheduler token accounting (the gate
+        # for migration admission) — mirror of the sim's release
+        self.instances[src].local.release_prefill_kv(rid, kv)
         self.instances[src].drop(rid)
+
+    def _arrival_due(self, rid: int) -> None:
+        heapq.heappush(self._pending, (self.handles[rid].req.arrival, rid))
+
+    # ------------------------------------- prefix cache / sessions (§7)
+    def _release_retained(self, iid: int, rid: int) -> None:
+        super()._release_retained(iid, rid)
+        inst = self.instances.get(iid)
+        if inst is not None:
+            inst.drop(rid)                      # free the real slot
+
+    def _retain_kv(self, iid: int, rid: int, kv_tokens: int) -> bool:
+        inst = self.instances.get(iid)
+        if inst is None or rid not in inst.kv.slot_of:
+            return False
+        # a full slot's tail position keeps receiving the batched dummy
+        # write (instance.run_decode_iteration) — don't retain it
+        if inst.kv.len_of.get(rid, 0) >= inst.capacity:
+            return False
+        return super()._retain_kv(iid, rid, kv_tokens)
+
+    def _prepare_dispatch(self, handle: RequestHandle, now: float) -> None:
+        """Materialize the session prompt once parent gating has cleared:
+        the prompt extends the session transcript (real tokens), padded
+        with deterministic fresh tokens up to the trace's input_len."""
+        req = handle.req
+        if req.session_id is None or req.rid in self._prompts:
+            return
+        sid = req.session_id
+        ctx = self._session_tail.get(sid, np.zeros((0,), np.int32))
+        n = max(1, min(req.input_len, self.capacity - req.output_len))
+        epoch = self._session_epoch.get(sid, 0)
+        if n < len(ctx):
+            # capacity clamp truncated the stream: this turn forks the
+            # session — future retentions use a fresh lineage namespace
+            self._session_epoch[sid] = epoch + 1
+            self._rid_epoch[req.rid] = (epoch, epoch + 1)
+            prompt = ctx[:n].copy()
+        else:
+            self._rid_epoch[req.rid] = (epoch, epoch)
+            rng = np.random.default_rng(0xA44 + req.rid)
+            fresh = rng.integers(1, self.cfg.vocab_size,
+                                 size=n - len(ctx)).astype(np.int32)
+            prompt = np.concatenate([ctx, fresh]).astype(np.int32)
+        req.input_len = n
+        self._prompts[req.rid] = prompt
+
+    def _lookup_keys(self, req: Request):
+        if req.session_id is not None:
+            epoch = self._rid_epoch.get(req.rid, (0, 0))[0]
+            return lineage_keys((req.session_id, epoch), req.input_len - 1,
+                                self.prefix_mgr.block)
+        prompt = self._prompts.get(req.rid)
+        if prompt is None:
+            return None
+        return content_keys(prompt[:req.input_len - 1], self.prefix_mgr.block)
+
+    def _retention_keys(self, handle: RequestHandle):
+        req = handle.req
+        if req.session_id is not None:
+            epoch = self._rid_epoch.get(req.rid, (0, 0))[1]
+            return lineage_keys((req.session_id, epoch),
+                                req.input_len + req.decoded_tokens,
+                                self.prefix_mgr.block)
+        prompt = self._prompts.get(req.rid)
+        if prompt is None:
+            return None
+        # resident KV = prompt + every generated token except the last
+        # (o_m is returned but never fed back into the cache)
+        gen = np.asarray([t for t in handle.tokens[:-1] if t is not None],
+                         np.int32)
+        return content_keys(np.concatenate([prompt, gen]),
+                            self.prefix_mgr.block)
+
+    def _session_note_finish(self, handle: RequestHandle) -> None:
+        req = handle.req
+        if req.session_id is None:
+            return
+        prompt = self._prompts.get(req.rid)
+        if prompt is None:
+            return
+        gen = np.asarray([t for t in handle.tokens if t is not None],
+                         np.int32)
+        self._session_tail[req.session_id] = np.concatenate([prompt, gen])
+        self._prompts.pop(req.rid, None)   # folded into the tail; free it
+
+    def _maybe_retain(self, handle: RequestHandle) -> None:
+        super()._maybe_retain(handle)
+        self._prompts.pop(handle.req.rid, None)   # keys computed; free it
 
     # ------------------------------------- elastic lifecycle hooks (§6)
     def _create_instance(self, iid: int) -> float:
@@ -127,14 +236,18 @@ class ArrowEngineCluster(RuntimeCore):
         starts. When ``prompt`` is omitted a deterministic synthetic prompt is
         generated (clamped so prompt + decode tokens fit a KV slot), which is
         what lets ``repro.traces`` traces replay directly on the engine."""
-        if prompt is None:
+        if prompt is None and req.session_id is None:
             n = max(1, min(req.input_len, self.capacity - req.output_len))
             rng = np.random.default_rng(0xA44 + req.rid)
             prompt = rng.integers(1, self.cfg.vocab_size,
                                   size=n).astype(np.int32)
-        req.input_len = len(prompt)
         handle = self._register(req, tier, on_token, on_finish)
-        self._prompts[req.rid] = np.asarray(prompt, np.int32)
+        if prompt is not None:
+            req.input_len = len(prompt)
+            self._prompts[req.rid] = np.asarray(prompt, np.int32)
+        # else: a session request — its prompt extends the session
+        # transcript and is materialized at dispatch time, once the parent
+        # turn has finished (_prepare_dispatch)
         heapq.heappush(self._pending, (req.arrival, req.rid))
         return handle
 
@@ -144,7 +257,8 @@ class ArrowEngineCluster(RuntimeCore):
         while self._pending and self._pending[0][0] <= t:
             _, rid = heapq.heappop(self._pending)
             handle = self.handles[rid]
-            self.dispatch_prefill(handle, t)
+            if self.dispatch_prefill(handle, t) is None:
+                continue       # deferred: re-enters _pending via _arrival_due
             self._live[rid] = handle
         # migrations (instant data move + admission gate); snapshot the id
         # lists — elastic retirement may remove instances mid-pass
@@ -209,7 +323,8 @@ class ArrowEngineCluster(RuntimeCore):
             self.emit_token(handle, t_after, tok)
             if inst.local.complete_decode_iteration(rid):
                 self.finish(handle, t_after)
-                inst.drop(rid)
+                if rid not in inst.local.retained:   # kept as a prefix (§7)
+                    inst.drop(rid)
                 self._live.pop(rid, None)
         if done_tokens:
             self.monitor.record_iteration(iid, t_after, len(done_tokens),
@@ -219,8 +334,16 @@ class ArrowEngineCluster(RuntimeCore):
             handle = self._live.get(rid)
             if handle is None:
                 continue
-            if start == 0 and not inst.kv.free:    # no slot: retry next round
-                continue
+            if rid not in inst.kv.slot_of:         # first chunk: need a slot
+                if not inst.kv.free and not (
+                        self.prefix_mgr is not None
+                        and self.prefix_mgr.evict_one(iid) is not None):
+                    continue                       # no slot: retry next round
+                if start > 0:
+                    # prefix reuse (§7): seed the fresh slot with the cached
+                    # prefix, then compute only the suffix chunks
+                    src = self._prefix_src[rid]
+                    inst.begin_cached_prefill(rid, src[1], start)
             prompt = self._prompts[rid]
             tok = inst.run_prefill_chunk(rid, prompt[start:start + ln],
                                          start, handle.req.input_len)
@@ -228,13 +351,19 @@ class ArrowEngineCluster(RuntimeCore):
             inst.local.complete_prefill_chunk(rid, ln)
             if tok is None:                        # more chunks to go
                 continue
-            self._prompts.pop(rid, None)           # prefill done: free it
+            if self.prefix_mgr is None and handle.req.session_id is None:
+                self._prompts.pop(rid, None)       # prefill done: free it
             # resync Eq.(2) bookkeeping against reality: predicted drain time
             # of the instance = now + predicted time of the remaining queue
-            backlog = sum(self.predictor.predict(w.input_len)
+            # (a cached prefix shrinks a queued request to its suffix)
+            backlog = sum(self.predictor.predict_chunk(w.done, w.remaining)
                           for w in inst.local.prefill_queue.values())
             self.policy.prefill_ready_at[iid] = t_fin + backlog
             placement, _ = self.after_prefill(handle, iid, t_fin, token=tok)
             if placement is DecodePlacement.FINISHED:
-                inst.drop(rid)
+                # release the prefill's kv_used accounting (mirror of the
+                # sim path); a retained prefix re-added its own tokens
+                inst.local.release_prefill_kv(rid, handle.req.input_len)
+                if rid not in inst.local.retained:
+                    inst.drop(rid)
                 self._live.pop(rid, None)

@@ -65,6 +65,15 @@ class EngineInstance:
         self.generated[rid] = [tok]
         return tok
 
+    def begin_cached_prefill(self, rid: int, src_rid: int,
+                             cached_len: int) -> None:
+        """Prefix reuse (DESIGN.md §7): seed ``rid``'s slot with the first
+        ``cached_len`` positions of ``src_rid``'s retained KV; subsequent
+        ``run_prefill_chunk`` calls start at ``offset == cached_len``."""
+        slot = self.kv.alloc(rid)
+        assert slot is not None, "no free KV slots for cached prefill"
+        self.kv.copy_prefix(src_rid, rid, cached_len)
+
     def run_prefill_chunk(self, rid: int, chunk: np.ndarray, offset: int,
                           total_len: int) -> Optional[int]:
         """Chunked prefill (§5.4): process prompt tokens [offset, offset+len)

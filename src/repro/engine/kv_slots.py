@@ -52,6 +52,21 @@ class SlotKVCache:
         self.pos_map = self.pos_map.at[s].set(jnp.asarray(pm))
         self.len_of[rid] = length
 
+    def copy_prefix(self, src_rid: int, dst_rid: int, length: int) -> None:
+        """Copy-on-extend (DESIGN.md §7): duplicate the first ``length``
+        cached positions of ``src_rid``'s slot into ``dst_rid``'s freshly
+        allocated slot, so the new request prefills only its suffix. The
+        copy is the new request's own KV — the source stays untouched."""
+        s = self.slot_of[src_rid]
+        d = self.slot_of[dst_rid]
+        L = min(length, self.len_of[src_rid], self.capacity)
+        self.k = self.k.at[:, d, :L].set(self.k[:, s, :L])
+        self.v = self.v.at[:, d, :L].set(self.v[:, s, :L])
+        pm = np.full(self.capacity, -1, np.int32)
+        pm[:L] = np.arange(L)
+        self.pos_map = self.pos_map.at[d].set(jnp.asarray(pm))
+        self.len_of[dst_rid] = L
+
     def extract(self, rid: int):
         """For KV transfer to another instance: (k (L,S,Hk,D), v, length)."""
         s = self.slot_of[rid]

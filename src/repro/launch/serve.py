@@ -60,7 +60,9 @@ def list_traces() -> None:
                          f"{p.burst_frac:.0%} of time",
                  "spike": f"spike x{p.shape_mult:g} over "
                           f"[{p.spike_window[0]:.0%},{p.spike_window[1]:.0%})",
-                 "diurnal": f"diurnal x{p.shape_mult:g} peak"}[p.rate_shape]
+                 "diurnal": f"diurnal x{p.shape_mult:g} peak",
+                 "sessions": f"sessions ~{p.turns_mean:g} turns, "
+                             f"think {p.think_mean:g}s"}[p.rate_shape]
         print(f"{p.name:<12} {p.duration:>5.0f} {p.base_rate:>5.1f}/s "
               f"{p.in_median:>7.0f} {p.out_median:>8.0f} {p.in_out_corr:>5.2f} "
               f"{p.slo_ttft:>8.2f}s {p.slo_tpot:>8.3f}s  {shape}")
@@ -89,7 +91,8 @@ def run_engine(args) -> ServeReport:
                                  n_slots=8, capacity=256,
                                  slo=SLO(args.ttft, args.tpot),
                                  policy=args.policy,
-                                 autoscaler_cfg=autoscaler_cfg(args))
+                                 autoscaler_cfg=autoscaler_cfg(args),
+                                 prefix_cache=args.prefix_cache == "on")
     if args.trace:
         from repro.traces import load_trace
         trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
@@ -112,7 +115,8 @@ def run_sim(args) -> ServeReport:
     sim = Simulator(cfg, n_instances=args.instances,
                     n_prefill=max(args.instances // 2, 1),
                     policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot),
-                    autoscaler_cfg=autoscaler_cfg(args))
+                    autoscaler_cfg=autoscaler_cfg(args),
+                    prefix_cache=args.prefix_cache == "on")
     # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
     # time and must cover the whole trace
     return run_and_report(sim, trace, tier=args.tier,
@@ -135,7 +139,10 @@ def autoscaler_cfg(args) -> Optional[AutoScalerConfig]:
     })
 
 
-def main(argv=None) -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher's full CLI surface. Kept as a named function so
+    ``tools/check_docs.py`` can diff the argparse flags against the
+    operator guide's flag table (drift fails the docs CI job)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("engine", "sim"), default="engine")
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
@@ -157,11 +164,19 @@ def main(argv=None) -> None:
                     help="AutoScaler floor (elastic policies only)")
     ap.add_argument("--max-instances", type=int, default=None,
                     help="AutoScaler ceiling (elastic policies only)")
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="off",
+                    help="prefix-aware KV reuse (DESIGN.md §7): retain "
+                         "finished contexts and prefill only the uncached "
+                         "suffix of multi-turn / repeated prompts")
     ap.add_argument("--list-traces", action="store_true",
                     help="print the trace-preset table and exit")
     ap.add_argument("--list-policies", action="store_true",
                     help="print the policy registry and exit")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
     if args.list_traces:
         return list_traces()
     if args.list_policies:

@@ -64,7 +64,7 @@ class Simulator(RuntimeCore):
                  profile: InstanceProfile = InstanceProfile(),
                  profiles: Optional[Dict[int, InstanceProfile]] = None,
                  token_budget: int = 8192, flip_latency: float = 0.0,
-                 autoscaler_cfg=None):
+                 autoscaler_cfg=None, prefix_cache: bool = False):
         """``profiles`` (iid -> InstanceProfile) enables heterogeneous
         clusters (paper §8): per-instance cost models + a per-instance-fitted
         TTFT predictor; ``profile`` is the homogeneous default (elastic
@@ -97,7 +97,8 @@ class Simulator(RuntimeCore):
 
         self._init_runtime(ids, n_prefill=n_prefill, policy=policy, slo=slo,
                            sched_cfg=sched_cfg, predictor=predictor,
-                           clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg)
+                           clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg,
+                           prefix_cache=prefix_cache)
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
@@ -147,6 +148,11 @@ class Simulator(RuntimeCore):
 
     def _decode_started(self, iid: int) -> None:
         self._kick(iid)
+
+    def _arrival_due(self, rid: int) -> None:
+        """Deferred request released (parent finished / instance activated):
+        re-enter the arrival path at the current virtual time."""
+        self._push(self._now, self._on_arrival, rid)
 
     # ------------------------------------- elastic lifecycle hooks (§6)
     def _create_instance(self, iid: int) -> float:
@@ -227,8 +233,9 @@ class Simulator(RuntimeCore):
 
     # -------------------------------------------------------- handlers
     def _on_arrival(self, rid: int) -> None:
-        self.dispatch_prefill(self.handles[rid], self._now)
-        self._kick(self.handles[rid].req.prefill_instance)
+        iid = self.dispatch_prefill(self.handles[rid], self._now)
+        if iid is not None:               # else deferred (gated/unplaced)
+            self._kick(iid)
 
     def _kick(self, iid: int) -> None:
         """Start an iteration if the instance is idle and has work."""

@@ -1,7 +1,9 @@
 """Synthetic workload traces statistically matched to the four production
 traces the paper evaluates on (Fig. 1/2, §3.1), plus two elasticity presets
-(spike/diurnal) exercising the AutoScaler (DESIGN.md §6). The originals are
-not redistributable; generation is seeded and targets the published moments.
+(spike/diurnal) exercising the AutoScaler (DESIGN.md §6) and a multi-turn
+conversation preset (multiturn) exercising the prefix cache (DESIGN.md §7).
+The originals are not redistributable; generation is seeded and targets the
+published moments.
 
 Preset provenance and target moments (at ``rate_scale=1.0``):
 
@@ -24,12 +26,29 @@ Preset provenance and target moments (at ``rate_scale=1.0``):
   diurnal     synthetic elasticity study:   1.2/s   1400    180      0.45  sinusoid, 5x
               one compressed day/night                                     peak-to-trough,
               load cycle                                                   peak mid-trace
+  multiturn   synthetic chat-session study  0.8/s*  512**   192      0.30  Poisson session
+              (multi-turn prefix reuse,                                    starts; turns
+              DESIGN.md §7): each session                                  gated on the
+              runs ~4 turns whose prompt                                   previous turn's
+              is the full history plus a                                   completion + an
+              fresh user message                                           exp. think gap
+                                                                           (mean 12 s)
+
+  *  multiturn's base_rate counts *sessions* per second; the request rate
+     is ~turns_mean higher.
+  ** first-turn prompt median; a follow-up prompt is the whole previous
+     context (prompt + output) plus a fresh message of median 96 tokens.
 
 ``load_trace(name, rate_scale)`` replays at a scaled request rate by dividing
 inter-arrival times — the paper's evaluation-workflow trick (§7.1). The MMPP
 presets draw arrivals from a 2-state Markov-modulated Poisson process; the
 shaped presets (spike/diurnal) draw from a non-homogeneous Poisson process
-via thinning against the deterministic rate profile ``rate_at``.
+via thinning against the deterministic rate profile ``rate_at``. The session
+preset (multiturn) draws Poisson session starts and emits one request per
+turn carrying ``session_id``/``parent_rid``/``history_len``; a follow-up's
+nominal arrival is its parent's plus an exponential think gap, and the
+serving runtime additionally gates dispatch on the parent actually finishing
+(core/runtime.py), so effective arrival = max(nominal, parent finish).
 """
 from __future__ import annotations
 
@@ -61,10 +80,15 @@ class TracePreset:
     slo_tpot: float = 0.1
     # deterministic rate shaping (elasticity presets): "mmpp" keeps the
     # 2-state MMPP arrivals; "spike"/"diurnal" thin a Poisson process against
-    # rate_at(t). shape_mult = peak rate multiplier over base_rate.
+    # rate_at(t); "sessions" draws Poisson *session* starts and unrolls each
+    # into a gated multi-turn chain (DESIGN.md §7).
     rate_shape: str = "mmpp"
     shape_mult: float = 1.0
     spike_window: Tuple[float, float] = (0.4, 0.6)   # fractions of duration
+    # session-preset knobs (rate_shape == "sessions")
+    turns_mean: float = 4.0        # geometric mean turns per session
+    followup_median: float = 96.0  # fresh user-message tokens per follow-up
+    think_mean: float = 12.0       # exp. think-time gap between turns (s)
 
     def rate_at(self, t: float) -> float:
         """Deterministic request rate (req/s) at trace time ``t`` for the
@@ -118,6 +142,16 @@ TRACE_PRESETS: Dict[str, TracePreset] = {
         in_out_corr=0.45, max_input=16384, max_output=1024,
         slo_ttft=2.0, slo_tpot=0.1,
         rate_shape="diurnal", shape_mult=5.0),
+    # ---- multi-turn conversation preset (DESIGN.md §7): sessions with a
+    # growing shared history — the workload where prefix reuse pays.
+    # Exercised by benchmarks/bench_prefix.py and tests/test_prefix.py.
+    "multiturn": TracePreset(
+        "multiturn", duration=600.0, base_rate=0.8,   # sessions/s
+        in_median=512.0, in_sigma=0.8, out_median=192.0, out_sigma=0.6,
+        in_out_corr=0.3, max_input=16384, max_output=1024,
+        slo_ttft=2.0, slo_tpot=0.1,
+        rate_shape="sessions", turns_mean=4.0, followup_median=96.0,
+        think_mean=12.0),
 }
 
 
@@ -158,6 +192,59 @@ def _arrivals(rng: np.random.Generator, p: TracePreset, rate: float) -> np.ndarr
     return np.asarray(out)
 
 
+def _session_trace(rng: np.random.Generator, p: TracePreset,
+                   rate_scale: float) -> List[Request]:
+    """Multi-turn sessions (DESIGN.md §7): Poisson session starts; each
+    session runs a geometric number of turns. Turn k's prompt is the whole
+    previous context (prompt + output) plus a fresh user message, so
+    ``input_len`` grows and ``history_len`` records the shared prefix. The
+    nominal arrival of a follow-up is its parent's arrival plus an
+    exponential think gap — the runtime gates actual dispatch on the parent
+    finishing, so the chain is causally ordered whatever the timings."""
+    starts = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / p.base_rate)
+        if t >= p.duration:
+            break
+        starts.append(t)
+    chains: List[List[Request]] = []
+    for sid, t0 in enumerate(starts):
+        n_turns = int(rng.geometric(1.0 / max(p.turns_mean, 1.0)))
+        t_arr, ctx = t0, 0
+        chain: List[Request] = []
+        for k in range(n_turns):
+            med = p.in_median if k == 0 else p.followup_median
+            z = rng.standard_normal(2)
+            fresh = int(np.clip(np.exp(math.log(med) + p.in_sigma * z[0]),
+                                16, p.max_input))
+            in_len = ctx + fresh
+            if in_len > p.max_input:      # history would overflow: end here
+                break
+            rho = p.in_out_corr
+            z_out = rho * z[0] + math.sqrt(max(1 - rho * rho, 0.0)) * z[1]
+            out_len = int(np.clip(
+                np.exp(math.log(p.out_median) + p.out_sigma * z_out),
+                1, p.max_output))
+            chain.append(Request(
+                rid=-1, arrival=t_arr / rate_scale, input_len=in_len,
+                output_len=out_len, session_id=sid, history_len=ctx))
+            ctx = in_len + out_len
+            t_arr += rng.exponential(p.think_mean)
+        if chain:
+            chains.append(chain)
+    # rids in global arrival order; parent links follow the chain order
+    flat = sorted((r for c in chains for r in c), key=lambda r: r.arrival)
+    rid_of = {}
+    for i, r in enumerate(flat):
+        r.rid = i
+        rid_of[id(r)] = i
+    for chain in chains:
+        for parent, child in zip(chain, chain[1:]):
+            child.parent_rid = rid_of[id(parent)]
+    return flat
+
+
 def load_trace(name: str, rate_scale: float = 1.0, *, seed: int = 0,
                duration: float | None = None) -> List[Request]:
     """Generate the named trace, then replay it at ``rate_scale``× speed by
@@ -168,6 +255,8 @@ def load_trace(name: str, rate_scale: float = 1.0, *, seed: int = 0,
     p = TracePreset(**{**p.__dict__, "duration": base_duration})
     # NB: stable across processes (builtin hash() is salted per interpreter)
     rng = np.random.default_rng(zlib.crc32(f"{name}:{seed}".encode()))
+    if p.rate_shape == "sessions":
+        return _session_trace(rng, p, rate_scale)
     times = _arrivals(rng, p, p.base_rate) / rate_scale
     n = len(times)
     # correlated lognormal lengths

@@ -1,0 +1,410 @@
+"""Prefix-aware KV reuse (DESIGN.md §7): index/trie unit behaviour, the
+scheduler's affinity routing and Eq. (2) suffix accounting, multi-turn trace
+invariants and parent gating, eviction under memory pressure, invalidation
+on flip/retire, the NoSchedulableInstance fix, and sim/engine parity on a
+small multiturn trace (hit counts match; engine streams are bit-identical
+with the cache on vs off)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import (SLO, AutoScalerConfig, GlobalScheduler,
+                        InstanceMonitor, InstancePools, InstanceStats,
+                        NoSchedulableInstance, Pool, PrefixCacheManager,
+                        PrefixHit, PrefixIndex, Request, RequestState,
+                        SchedulerConfig, TTFTPredictor, content_keys,
+                        lineage_keys)
+from repro.core.prefix_index import PrefixEntry
+from repro.core.serving import replay_trace
+from repro.sim import Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+CFG = get_config("gemma-2b")
+MT_SLO = SLO(TRACE_PRESETS["multiturn"].slo_ttft,
+             TRACE_PRESETS["multiturn"].slo_tpot)
+
+
+# ------------------------------------------------------------- key schemes
+
+
+def test_lineage_and_content_keys():
+    assert lineage_keys(7, 96, block=32) == ((7, 0), (7, 1), (7, 2))
+    assert lineage_keys(7, 95, block=32) == ((7, 0), (7, 1))
+    assert lineage_keys(7, 31, block=32) == ()
+    toks = list(range(100))
+    a = content_keys(toks, block=32)
+    b = content_keys(toks[:64] + [999] * 36, block=32)
+    assert len(a) == 3
+    assert a[:2] == b[:2]          # shared 64-token prefix -> shared chain
+    assert a[2] != b[2]            # divergence changes every later key
+    # regression: the hash must commit to full token ids, not a low byte —
+    # ids equal mod 256 are different tokens
+    c = content_keys([t + 256 for t in toks], block=32)
+    assert a[0] != c[0]
+
+
+# ------------------------------------------------------------- index/trie
+
+
+def entry(iid, rid, n_blocks, ns=0, kv=None):
+    return PrefixEntry(iid, rid, lineage_keys(ns, n_blocks * 32),
+                       kv if kv is not None else n_blocks * 32)
+
+
+def test_index_longest_prefix_lookup():
+    idx = PrefixIndex(block=32)
+    idx.insert(entry(0, 10, 4))        # instance 0 caches 4 blocks
+    idx.insert(entry(1, 11, 2))        # instance 1 caches 2 blocks
+    hits = idx.lookup(lineage_keys(0, 3 * 32))
+    # deepest matching node is depth 3: only instance 0 reaches it
+    assert hits == [PrefixHit(0, 10, 96)]
+    hits = idx.lookup(lineage_keys(0, 2 * 32))
+    assert {h.iid for h in hits} == {0, 1}
+    assert all(h.cached_len == 64 for h in hits)
+    assert idx.lookup(lineage_keys(99, 128)) == []
+
+
+def test_index_remove_prunes():
+    idx = PrefixIndex(block=32)
+    idx.insert(entry(0, 1, 3))
+    idx.remove(0, 1)
+    assert len(idx) == 0
+    assert not idx.root.children       # branches pruned
+    assert idx.lookup(lineage_keys(0, 96)) == []
+
+
+def test_manager_lru_eviction_order_and_pins():
+    freed = []
+    mgr = PrefixCacheManager(block=32,
+                             release=lambda i, r, kv: freed.append((i, r)))
+    mgr.retain(0, 1, lineage_keys(0, 64), 64)
+    mgr.retain(0, 2, lineage_keys(1, 64), 64)
+    mgr.retain(0, 3, lineage_keys(2, 64), 64)
+    mgr.record_hit(PrefixHit(0, 1, 64))       # rid 1 becomes most-recent
+    mgr.pin(0, 2)                             # rid 2 is un-evictable
+    assert mgr.make_room(0, 64) == 64
+    assert freed == [(0, 3)]                  # LRU unpinned first, not 1 or 2
+    assert mgr.make_room(0, 1000) == 64       # only rid 1 remains evictable
+    assert (0, 2) not in [f for f in freed]
+    assert mgr.stats["evictions"] == 2
+
+
+def test_invalidate_dooms_pinned_entry_until_unpin():
+    freed = []
+    mgr = PrefixCacheManager(block=32,
+                             release=lambda i, r, kv: freed.append((i, r)))
+    mgr.retain(1, 5, lineage_keys(0, 96), 96)
+    mgr.pin(1, 5)
+    assert mgr.invalidate_instance(1) == 1
+    assert mgr.index.lookup(lineage_keys(0, 96)) == []   # gone from lookups
+    assert freed == []                                   # but KV still alive
+    mgr.unpin(1, 5)
+    assert freed == [(1, 5)]                             # freed on last unpin
+
+
+# --------------------------------------------- scheduler affinity routing
+
+
+class FakeCluster:
+    def has_pending_prefill(self, iid):
+        return False
+
+    def has_pending_decode(self, iid):
+        return False
+
+
+def make_sched(n=3, n_prefill=2, slo=SLO(10.0, 0.1), **cfg_kw):
+    pools = InstancePools(range(n), n_prefill=n_prefill)
+    mon = InstanceMonitor(range(n))
+    for i in range(n):
+        mon.update_stats(InstanceStats(instance_id=i))
+    pred = TTFTPredictor.fit([(0, 0.0), (1000, 0.1), (2000, 0.3), (4000, 1.0)])
+    cfg = SchedulerConfig(max_running_tokens=10000, **cfg_kw)
+    gs = GlobalScheduler(pools, mon, pred, slo, cfg, FakeCluster())
+    return gs, pools, mon
+
+
+def test_affinity_routes_to_holder_and_charges_suffix():
+    gs, pools, mon = make_sched()            # 0,1 PREFILL; 2 DECODE
+    req = Request(0, 0.0, 1024, 8)
+    hit = PrefixHit(iid=2, rid=50, cached_len=512)
+    out = gs.schedule_prefill(req, 0.0, prefix_hits=[hit])
+    assert out.instance == 2
+    assert out.prefix_hit == PrefixHit(2, 50, 512)
+    # Eq. (2): the holder is charged only the uncached suffix
+    assert gs.prefill_ready_at[2] == pytest.approx(
+        gs.predictor.predict_chunk(512, 512))
+    assert gs.prefill_ready_at[0] == 0.0     # cold candidates untouched
+
+
+def test_affinity_skips_overloaded_decode_holder():
+    gs, pools, mon = make_sched()
+    cfg = gs.cfg
+    mon.update_stats(InstanceStats(
+        instance_id=2,
+        running_tokens=int(cfg.decode_low_load_frac *
+                           cfg.max_running_tokens) + 1))
+    out = gs.schedule_prefill(Request(0, 0.0, 1024, 8), 0.0,
+                              prefix_hits=[PrefixHit(2, 50, 512)])
+    assert out.instance != 2                 # overload guard: decode first
+    assert out.prefix_hit is None
+
+
+def test_affinity_prefers_cold_when_holder_queue_is_long():
+    gs, pools, mon = make_sched()
+    gs.prefill_ready_at[2] = 100.0           # holder buried in work
+    out = gs.schedule_prefill(Request(0, 0.0, 1024, 8), 0.0,
+                              prefix_hits=[PrefixHit(2, 50, 512)])
+    assert out.instance in (0, 1)
+    assert out.prefix_hit is None
+
+
+# ---------------------------------------------- NoSchedulableInstance fix
+
+
+def test_schedule_raises_descriptive_error_when_nothing_active():
+    gs, pools, mon = make_sched(n=2, n_prefill=1)
+    pools.begin_retire(0)
+    pools.begin_retire(1)
+    with pytest.raises(NoSchedulableInstance, match="prefill.*2 retiring"):
+        gs.schedule_prefill(Request(0, 0.0, 64, 4), 0.0)
+    with pytest.raises(NoSchedulableInstance, match="decode"):
+        gs.schedule_decode(Request(1, 0.0, 64, 4), 0.0)
+
+
+def test_runtime_queues_unplaced_request_instead_of_crashing():
+    """Regression (ISSUE 3): every instance WARMING/RETIRING used to raise a
+    bare IndexError from active_ids()[0]; now the request waits and is
+    dispatched when capacity appears."""
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow_elastic",
+                    slo=SLO(3.0, 0.1),
+                    autoscaler_cfg=AutoScalerConfig(min_instances=1,
+                                                    max_instances=4))
+    sim.begin_retire(0, 0.0)
+    sim.begin_retire(1, 0.0)
+    h = sim.submit(Request(rid=0, arrival=0.0, input_len=64, output_len=2))
+    sim.run_until(1.0)                       # arrival processed: no crash
+    assert not h.done
+    assert h.req.state is RequestState.QUEUED
+    assert h.req.prefill_instance is None
+    sim.scale_up(Pool.PREFILL, sim.clock.now())
+    report = sim.drain()
+    assert report.n_finished == 1 and h.done
+
+
+# --------------------------------------------------- multiturn trace shape
+
+
+def test_multiturn_trace_invariants():
+    trace = load_trace("multiturn", rate_scale=2.0, seed=0, duration=120)
+    assert len(trace) > 50
+    by_rid = {r.rid: r for r in trace}
+    assert sorted(by_rid) == list(range(len(trace)))
+    arr = [r.arrival for r in trace]
+    assert arr == sorted(arr)                # rids in arrival order
+    followups = [r for r in trace if r.parent_rid is not None]
+    assert followups, "preset must generate multi-turn sessions"
+    for r in followups:
+        p = by_rid[r.parent_rid]
+        assert p.session_id == r.session_id
+        assert p.rid < r.rid and p.arrival <= r.arrival
+        # the child's prompt is the parent's whole context + a fresh message
+        assert r.history_len == p.input_len + p.output_len
+        assert r.input_len > r.history_len
+    # seeded determinism
+    again = load_trace("multiturn", rate_scale=2.0, seed=0, duration=120)
+    assert [(r.rid, r.arrival, r.input_len, r.parent_rid) for r in trace] == \
+           [(r.rid, r.arrival, r.input_len, r.parent_rid) for r in again]
+
+
+# -------------------------------------------------- sim end-to-end reuse
+
+
+def mt_sim(prefix_cache, **kw):
+    defaults = dict(n_instances=4, n_prefill=2, policy="arrow", slo=MT_SLO)
+    defaults.update(kw)
+    return Simulator(CFG, prefix_cache=prefix_cache, **defaults)
+
+
+def test_sim_multiturn_hits_savings_and_parent_gating():
+    trace = load_trace("multiturn", rate_scale=2.0, seed=0, duration=120)
+    followups = [r for r in trace if r.parent_rid is not None]
+    sim = mt_sim(True)
+    handles = replay_trace(sim, trace)
+    report = sim.drain()
+    assert report.n_finished == len(trace)
+    by_rid = {h.rid: h for h in handles}
+    for h in handles:
+        if h.req.parent_rid is None:
+            continue
+        parent = by_rid[h.req.parent_rid]
+        # dispatch gating: a follow-up can never see its first token
+        # before the parent finished
+        assert h.req.first_token_time >= parent.req.finish_time
+    px = report.prefix
+    assert px["hits"] >= 0.9 * len(followups)
+    assert px["saved_prefill_frac"] >= 0.30        # acceptance threshold
+    assert sum(1 for h in handles if h.req.cached_len > 0) == px["hits"]
+
+
+def test_cache_off_and_sessionless_runs_are_untouched():
+    """Acceptance: non-multiturn results are unchanged — cache off is the
+    identical code path, and cache *on* over a session-less trace never
+    retains or hits (the sim models no content)."""
+    p = TRACE_PRESETS["spike"]
+    trace = load_trace("spike", rate_scale=2.0, seed=0, duration=60)
+    runs = []
+    for kw in (dict(), dict(prefix_cache=False), dict(prefix_cache=True)):
+        sim = Simulator(CFG, n_instances=4, n_prefill=2, policy="arrow",
+                        slo=SLO(p.slo_ttft, p.slo_tpot), **kw)
+        replay_trace(sim, trace)
+        rep = sim.drain()
+        runs.append(([h.ttft for h in rep.handles], rep.decisions))
+    assert runs[0] == runs[1] == runs[2]
+    # and with the cache on, nothing was ever cached for session-less load
+    assert sim.prefix_mgr.stats["retained"] == 0
+    assert sim.prefix_mgr.stats["hits"] == 0
+
+
+def test_multiturn_cache_on_at_least_matches_goodput():
+    trace = load_trace("multiturn", rate_scale=4.0, seed=0, duration=120)
+    good = {}
+    for on in (False, True):
+        sim = mt_sim(on, n_instances=2, n_prefill=1)
+        replay_trace(sim, trace)
+        rep = sim.drain()
+        good[on] = (sum(1 for h in rep.handles if h.meets_slo()),
+                    rep.percentile("ttft", 0.9))
+    assert good[True][0] >= good[False][0]         # goodput no worse
+    assert good[True][1] <= good[False][1] + 1e-9  # p90 TTFT no worse
+
+
+# -------------------------------------------- eviction / invalidation
+
+
+def test_eviction_under_memory_pressure_frees_lru_first():
+    sim = mt_sim(True, n_instances=2, n_prefill=1)
+    loc = sim.locals[1]
+    for rid, ns in ((100, 0), (101, 1)):
+        sim._register(Request(rid, 0.0, 64, 2), "standard", None, None)
+        loc.retain_kv(rid, 64)
+        sim.prefix_mgr.retain(1, rid, lineage_keys(ns, 64), 64)
+    sim.prefix_mgr.record_hit(PrefixHit(1, 100, 64))   # 101 becomes LRU
+    loc.kv_capacity = loc.kv_used + 10        # a 50-token import cannot fit
+    sim._register(Request(7, 0.0, 50, 3), "standard", None, None)
+    sim.handles[7].req.prefill_instance = 0
+    loc.enqueue_migration(7, 50, 3)
+    sim.admit_migrations(1)
+    assert not loc.migration_queue            # admitted after eviction
+    assert 101 not in loc.retained and 100 in loc.retained
+    assert sim.prefix_mgr.stats["evictions"] == 1
+
+
+def test_retire_and_flip_invalidate_index():
+    sim = mt_sim(True)
+    trace = load_trace("multiturn", rate_scale=2.0, seed=1, duration=60)
+    replay_trace(sim, trace)
+    sim.drain()
+    holders = [i for i in sim.pools.all_ids()
+               if sim.prefix_mgr.entries_on(i)]
+    assert holders, "drained multiturn run must leave retained prefixes"
+    victim = holders[0]
+    n_before = len(sim.prefix_mgr.entries_on(victim))
+    sim.begin_retire(victim, sim.clock.now())
+    assert sim.prefix_mgr.entries_on(victim) == []
+    assert not sim.locals[victim].retained            # KV actually freed
+    assert sim.prefix_mgr.stats["invalidations"] >= n_before
+    # pool flip of another holder invalidates too
+    others = [i for i in sim.pools.all_ids()
+              if sim.prefix_mgr.entries_on(i)]
+    if others:
+        v2 = others[0]
+        if sim.pools.pool_of(v2) in (Pool.DECODE, Pool.P2D):
+            sim.pools.flip_to_prefill(v2, False)
+        else:
+            sim.pools.flip_to_decode(v2, False)
+        assert sim.prefix_mgr.entries_on(v2) == []
+
+
+# --------------------------------------------------- sim/engine parity
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def tiny_multiturn():
+    """Two sessions (3 + 2 turns), growing history, engine-capacity sized.
+    Every follow-up should hit: 3 expected hits on both backends."""
+    return [
+        Request(0, 0.00, 40, 3, session_id=0),
+        Request(1, 0.05, 36, 2, session_id=1),
+        Request(2, 0.10, 81, 3, session_id=0, parent_rid=0, history_len=43),
+        Request(3, 0.15, 68, 2, session_id=1, parent_rid=1, history_len=38),
+        Request(4, 0.20, 104, 2, session_id=0, parent_rid=2, history_len=84),
+    ]
+
+
+def test_sim_engine_parity_multiturn_hits_and_streams(engine_setup):
+    """Acceptance (ISSUE 3): identical cached-prefix hit counts across the
+    two backends on the same multiturn trace, and the engine's real greedy
+    token streams are bit-identical with the cache on vs off."""
+    cfg, params = engine_setup
+    trace = tiny_multiturn()
+    expected_hits = sum(1 for r in trace if r.parent_rid is not None)
+
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, slo=SLO(5.0, 2.0),
+                    prefix_cache=True)
+    replay_trace(sim, trace)
+    rep_sim = sim.drain()
+    assert rep_sim.n_finished == len(trace)
+    assert rep_sim.prefix["hits"] == expected_hits
+
+    from repro.engine import ArrowEngineCluster
+    streams = {}
+    eng_hits = None
+    for on in (False, True):
+        eng = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                                 capacity=128, slo=SLO(5.0, 2.0),
+                                 params=params, prefix_cache=on)
+        toks = {}
+        replay_trace(eng, trace,
+                     on_token=lambda h, tok, t:
+                     toks.setdefault(h.rid, []).append(tok))
+        rep = eng.drain(timeout=300.0)
+        assert rep.n_finished == len(trace)
+        streams[on] = toks
+        if on:
+            eng_hits = rep.prefix["hits"]
+    assert eng_hits == rep_sim.prefix["hits"] == expected_hits
+    for r in trace:
+        assert len(streams[True][r.rid]) == r.output_len
+        assert all(isinstance(t, int) for t in streams[True][r.rid])
+    # copy-on-extend is exact: greedy streams don't change with reuse
+    assert streams[True] == streams[False]
+
+
+def test_engine_slot_eviction_under_pressure(engine_setup):
+    """Retained slots are reclaimable capacity: with every slot retained, a
+    new prefill evicts the LRU prefix instead of deadlocking."""
+    cfg, params = engine_setup
+    from repro.engine import ArrowEngineCluster
+    eng = ArrowEngineCluster(cfg, n_instances=1, n_prefill=1, n_slots=2,
+                             capacity=128, slo=SLO(10.0, 5.0), params=params,
+                             prefix_cache=True)
+    # two single-turn sessions fill both slots with retained prefixes
+    replay_trace(eng, [Request(0, 0.0, 40, 2, session_id=0),
+                       Request(1, 0.0, 40, 2, session_id=1)])
+    eng.drain(timeout=300.0)
+    inst = eng.instances[0]
+    assert len(inst.local.retained) == 2 and not inst.kv.free
+    # a third, unrelated request needs a slot -> one retained prefix evicted
+    h = eng.submit(Request(2, 0.0, 40, 2))
+    rep = eng.drain(timeout=300.0)
+    assert h.done and rep.n_finished == 3
+    assert eng.prefix_mgr.stats["evictions"] >= 1

@@ -103,6 +103,64 @@ def test_sim_run_shim_still_works():
     assert all(r.finish_time is not None for r in res.requests)
 
 
+def test_sim_run_shim_identical_to_replay_trace():
+    """The deprecated batch shim must produce results *identical* to the
+    unified replay_trace + drain path (it is a thin delegation — the
+    virtual clock makes this exact)."""
+    def make():
+        return Simulator(SIM_CFG, n_instances=2, n_prefill=1,
+                         slo=SLO(3.0, 0.1))
+
+    trace = tiny_trace(8, seed=11)
+    sim_old = make()
+    with pytest.deprecated_call():
+        res = sim_old.run([Request(rid=r.rid, arrival=r.arrival,
+                                   input_len=r.input_len,
+                                   output_len=r.output_len) for r in trace])
+    sim_new = make()
+    handles = replay_trace(sim_new, trace)
+    rep = sim_new.drain()
+    assert rep.n_finished == len(trace) == len(res.requests)
+    old = {r.rid: (r.first_token_time, r.finish_time, tuple(r.token_times))
+           for r in res.requests}
+    new = {h.rid: (h.req.first_token_time, h.req.finish_time,
+                   tuple(h.req.token_times)) for h in handles}
+    assert old == new
+    assert res.sim_time == rep.duration
+
+
+def test_engine_serve_shim_warns_and_matches_unified_path(engine_setup):
+    """ArrowEngineCluster.serve() must emit a DeprecationWarning and stream
+    the same greedy token ids as submit()+drain() with the same prompts
+    (content is schedule-independent; timings are wall-clock and are not
+    compared)."""
+    from repro.engine import ArrowEngineCluster, ServeRequest
+    cfg, params = engine_setup
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (24, 40, 32)]
+    outs = (4, 3, 2)
+
+    eng1 = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                              capacity=128, slo=SLO(5.0, 2.0), params=params)
+    reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(zip(prompts, outs))]
+    with pytest.deprecated_call():
+        served = eng1.serve(reqs, timeout=300.0)
+
+    eng2 = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                              capacity=128, slo=SLO(5.0, 2.0), params=params)
+    handles = [eng2.submit(Request(rid=i, arrival=0.0, input_len=len(p),
+                                   output_len=m), prompt=p)
+               for i, (p, m) in enumerate(zip(prompts, outs))]
+    eng2.drain(timeout=300.0)
+
+    for sr, h in zip(served, handles):
+        assert sr.req.finish_time is not None and h.done
+        assert sr.output_tokens == [t for t in h.tokens if t is not None]
+        assert len(sr.output_tokens) == sr.max_new_tokens
+
+
 # --------------------------------------------------- sim/engine parity
 
 

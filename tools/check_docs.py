@@ -1,4 +1,5 @@
-"""Docs CI gate (ISSUE 2 satellite): two checks over the repo's markdown.
+"""Docs CI gate (ISSUE 2 satellite, extended by ISSUE 3): three checks over
+the repo's markdown.
 
 1. **Internal links resolve** — every relative `[text](path)` target in the
    checked files must exist (anchors are stripped; external schemes are
@@ -7,8 +8,13 @@
    immediately preceded by an `<!-- ci:run -->` marker is executed line by
    line with the repo root as cwd. A failing command fails the job, so the
    README cannot drift from the code.
+3. **Launcher flags match the operator guide** — the `--flags` documented in
+   docs/OPERATOR.md's "Launcher flags" section are diffed against
+   `repro.launch.serve.build_parser()`. Drift in *either* direction fails:
+   a flag added to the code must be documented, a flag documented must
+   exist.
 
-Usage:  python tools/check_docs.py [--no-run]
+Usage:  python tools/check_docs.py [--no-run] [--no-flags]
 """
 from __future__ import annotations
 
@@ -19,10 +25,13 @@ import subprocess
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-DOCS = ["README.md", "DESIGN.md", "docs/OPERATOR.md", "ROADMAP.md",
-        "PAPER.md"]
+DOCS = ["README.md", "DESIGN.md", "docs/OPERATOR.md", "docs/SCHEDULING.md",
+        "ROADMAP.md", "PAPER.md"]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 RUN_MARKER = "<!-- ci:run -->"
+FLAGS_DOC = "docs/OPERATOR.md"
+FLAGS_HEADING = "Launcher flags"
+FLAG_RE = re.compile(r"`(--[a-z][a-z0-9-]*)`")
 
 
 def check_links() -> list:
@@ -68,10 +77,47 @@ def run_blocks(doc: str = "README.md") -> list:
     return errors
 
 
+def _flags_section(text: str) -> str:
+    """The body of the '## … Launcher flags …' section (up to the next H2)."""
+    lines = text.splitlines()
+    start = next((i for i, ln in enumerate(lines)
+                  if ln.startswith("## ") and FLAGS_HEADING in ln), None)
+    if start is None:
+        return ""
+    end = next((i for i in range(start + 1, len(lines))
+                if lines[i].startswith("## ")), len(lines))
+    return "\n".join(lines[start:end])
+
+
+def check_flags() -> list:
+    """Diff documented launcher flags against the argparse surface."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.launch.serve import build_parser
+    code = {opt for a in build_parser()._actions
+            for opt in a.option_strings if opt.startswith("--")} - {"--help"}
+    section = _flags_section((ROOT / FLAGS_DOC).read_text())
+    if not section:
+        return [f"{FLAGS_DOC}: no '## {FLAGS_HEADING}' section found "
+                f"(the flag table is required — see tools/check_docs.py)"]
+    documented = set(FLAG_RE.findall(section))
+    errors = []
+    for f in sorted(code - documented):
+        errors.append(f"{FLAGS_DOC}: flag {f} exists in repro.launch.serve "
+                      f"but is missing from the '{FLAGS_HEADING}' table")
+    for f in sorted(documented - code):
+        errors.append(f"{FLAGS_DOC}: flag {f} is documented in the "
+                      f"'{FLAGS_HEADING}' table but repro.launch.serve does "
+                      f"not define it")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-run", action="store_true",
-                    help="only check links; skip executing ci:run blocks")
+                    help="only check links/flags; skip executing ci:run "
+                         "blocks")
+    ap.add_argument("--no-flags", action="store_true",
+                    help="skip the launcher-flag drift check")
     args = ap.parse_args(argv)
     errors = check_links()
     if errors:
@@ -79,6 +125,13 @@ def main(argv=None) -> int:
             print(f"FAIL {e}", file=sys.stderr)
         return 1
     print("links: OK")
+    if not args.no_flags:
+        errors = check_flags()
+        if errors:
+            for e in errors:
+                print(f"FAIL {e}", file=sys.stderr)
+            return 1
+        print("launcher flags: OK")
     if not args.no_run:
         errors = run_blocks()
         if errors:
