@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   Fig.9    bench_scalability       attainment vs instance count
   (ours)   bench_elastic           elastic vs static provisioning (DESIGN §6)
   (ours)   bench_prefix            prefix-aware KV reuse on multi-turn (DESIGN §7)
+  (ours)   bench_faults            goodput under crashes vs no-recovery (DESIGN §8)
   (ours)   bench_kernels           Pallas kernels (interpret) vs jnp oracle
   (ours)   roofline                terms from the dry-run records, if present
 """
@@ -22,7 +23,7 @@ def main() -> None:
     duration = "60" if fast else "120"
 
     from benchmarks import (bench_ablation, bench_e2e, bench_elastic,
-                            bench_flip_latency, bench_kernels,
+                            bench_faults, bench_flip_latency, bench_kernels,
                             bench_load_difference, bench_prefix,
                             bench_scalability, bench_trace_stats)
     print("name,us_per_call,derived")
@@ -34,6 +35,7 @@ def main() -> None:
     bench_flip_latency.main(["--duration", duration])
     bench_elastic.main(["--duration", duration])
     bench_prefix.main(["--duration", duration])
+    bench_faults.main([])
     bench_kernels.main()
     try:
         from benchmarks import roofline

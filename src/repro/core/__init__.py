@@ -4,6 +4,8 @@ SLO-aware adaptive request/instance scheduling (paper §5), plus the unified
 from repro.core.autoscaler import (AutoScaler, AutoScalerConfig,  # noqa: F401
                                    ScaleEvent, ScaleSignals)
 from repro.core.clock import Clock, VirtualClock, WallClock  # noqa: F401
+from repro.core.faults import (FaultEvent, FaultInjector,  # noqa: F401
+                               FaultPlan)
 from repro.core.global_scheduler import (GlobalScheduler,  # noqa: F401
                                          NoSchedulableInstance,
                                          ScheduleOutcome)
@@ -16,6 +18,7 @@ from repro.core.prefix_index import (PrefixCacheManager, PrefixHit,  # noqa: F40
 from repro.core.request import Phase, Request, RequestState  # noqa: F401
 from repro.core.runtime import DecodePlacement, RuntimeCore  # noqa: F401
 from repro.core.serving import (RequestHandle, ServeReport, ServingSystem,  # noqa: F401
-                                SLOTier, TIERS, replay_trace)
+                                SLOTier, TIERS, UndispatchableError,
+                                replay_trace)
 from repro.core.slo import SLO, SchedulerConfig  # noqa: F401
 from repro.core.ttft_predictor import TTFTPredictor  # noqa: F401

@@ -125,7 +125,8 @@ class AutoScaler:
             prefill_pressure=self._prefill_pressure(now),
             decode_pressure=self._decode_pressure(),
             attainment=rt.recent_attainment(self.cfg.min_slo_samples),
-            n_live=len(rt.pools.all_ids()),
+            # failed corpses awaiting removal are not capacity (§8)
+            n_live=len(rt.pools.all_ids()) - len(rt.pools.failed_ids()),
             n_active=len(rt.pools.active_ids()),
         )
 
@@ -157,6 +158,24 @@ class AutoScaler:
         elif self._down_streak >= cfg.down_patience and \
                 sig.n_active > cfg.min_instances:
             self._scale_down(now, sig)
+
+    # ----------------------------------------------------- fault path (§8)
+    def on_instance_failed(self, iid: int, pool: Pool,
+                           now: float) -> Optional[int]:
+        """A crash removed capacity outright: spawn a replacement into the
+        dead instance's pool, bypassing patience (the signal is unambiguous)
+        but respecting ``max_instances``. Returns the new iid, or None when
+        the ceiling blocks the replacement."""
+        rt = self.runtime
+        live = len(rt.pools.all_ids()) - len(rt.pools.failed_ids()) \
+            - len(rt.pools.retiring_ids())
+        if live >= self.cfg.max_instances:
+            return None
+        new = rt.scale_up(pool, now)
+        self.events.append(ScaleEvent("up", new, pool, now,
+                                      reason=f"replace failed {iid}"))
+        self._after_action(now)
+        return new
 
     # ------------------------------------------------------------- actions
     def _scale_up(self, now: float, sig: ScaleSignals) -> None:

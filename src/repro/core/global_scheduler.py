@@ -26,7 +26,8 @@ class NoSchedulableInstance(RuntimeError):
         super().__init__(
             f"no ACTIVE instance to schedule {phase} on: "
             f"{len(pools.warming_ids())} warming, "
-            f"{len(pools.retiring_ids())} retiring, 0 active")
+            f"{len(pools.retiring_ids())} retiring, "
+            f"{len(pools.failed_ids())} failed, 0 active")
 
 
 class ClusterView(Protocol):

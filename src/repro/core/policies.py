@@ -10,7 +10,9 @@ from __future__ import annotations
 
 from typing import Dict
 
-from repro.core.global_scheduler import GlobalScheduler, ScheduleOutcome  # noqa: F401
+from repro.core.global_scheduler import (GlobalScheduler,  # noqa: F401
+                                         NoSchedulableInstance,
+                                         ScheduleOutcome)
 from repro.core.monitor import InstanceMonitor
 from repro.core.pools import InstancePools, Pool
 from repro.core.request import Request
@@ -47,6 +49,14 @@ class BasePolicy:
     def _account(self, iid: int, now: float, input_len: int) -> None:
         start = max(self.prefill_ready_at[iid], now)
         self.prefill_ready_at[iid] = start + self.predictor.predict(input_len)
+
+    def _require(self, ids, phase: str):
+        """Baselines share arrow's contract under elasticity/faults: an
+        empty candidate set raises NoSchedulableInstance (the runtime queues
+        and retries on activation) instead of a bare min()/index crash."""
+        if not ids:
+            raise NoSchedulableInstance(phase, self.pools)
+        return ids
 
     def _min_ready(self, ids, now):
         return min(ids, key=lambda i: max(self.prefill_ready_at[i] - now, 0.0))
@@ -108,12 +118,18 @@ class MinimalLoadPolicy(BasePolicy):
     name = "minimal_load"
 
     def schedule_prefill_req(self, req: Request, now: float) -> int:
-        iid = self._min_ready(self.pools.members(Pool.PREFILL), now)
+        ids = self._require(self.pools.members(Pool.PREFILL)
+                            or self.pools.prefill_capable()
+                            or self.pools.active_ids(), "prefill")
+        iid = self._min_ready(ids, now)
         self._account(iid, now, req.input_len)
         return iid
 
     def schedule_decode_req(self, req: Request, now: float) -> int:
-        return self._min_tokens(self.pools.members(Pool.DECODE))
+        ids = self._require(self.pools.members(Pool.DECODE)
+                            or self.pools.decode_capable()
+                            or self.pools.active_ids(), "decode")
+        return self._min_tokens(ids)
 
 
 class RoundRobinPolicy(BasePolicy):
@@ -127,14 +143,16 @@ class RoundRobinPolicy(BasePolicy):
         self._d_idx = 0
 
     def schedule_prefill_req(self, req: Request, now: float) -> int:
-        ids = sorted(self.pools.members(Pool.PREFILL))
+        ids = sorted(self._require(self.pools.members(Pool.PREFILL)
+                                   or self.pools.active_ids(), "prefill"))
         iid = ids[self._p_idx % len(ids)]
         self._p_idx += 1
         self._account(iid, now, req.input_len)
         return iid
 
     def schedule_decode_req(self, req: Request, now: float) -> int:
-        ids = sorted(self.pools.members(Pool.DECODE))
+        ids = sorted(self._require(self.pools.members(Pool.DECODE)
+                                   or self.pools.active_ids(), "decode"))
         iid = ids[self._d_idx % len(ids)]
         self._d_idx += 1
         return iid
@@ -148,7 +166,9 @@ class ColocatedPolicy(BasePolicy):
     name = "colocated"
 
     def schedule_prefill_req(self, req: Request, now: float) -> int:
-        ids = self.pools.all_ids()
+        # ACTIVE only: a colocated cluster under faults (§8) must not place
+        # work on a crashed instance
+        ids = self._require(self.pools.active_ids(), "prefill")
         # least-loaded by combined queue: predicted prefill drain + decode load
         def load(i):
             s = self.monitor.get(i)
@@ -159,7 +179,13 @@ class ColocatedPolicy(BasePolicy):
         return iid
 
     def schedule_decode_req(self, req: Request, now: float) -> int:
-        return req.prefill_instance
+        pi = req.prefill_instance
+        if self.pools.is_schedulable(pi):
+            return pi
+        # the prefill instance crashed between o_1 and placement: fall back
+        # to the least-loaded live instance instead of decoding on a corpse
+        return self._min_tokens(self._require(self.pools.active_ids(),
+                                              "decode"))
 
 
 POLICIES = {

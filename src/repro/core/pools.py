@@ -5,6 +5,8 @@ Beyond the paper (DESIGN.md §6): the instance *set* itself is elastic. Each
 instance carries a lifecycle state
 
     WARMING ──activate──▶ ACTIVE ──begin_retire──▶ RETIRING ──remove──▶ (gone)
+       │                    │                         │
+       └────────────────────┴───────fail──────────────┘──remove──▶ (gone)
 
 Only ACTIVE instances are schedulable: ``members``/``prefill_capable``/
 ``decode_capable``/``count`` all restrict themselves to ACTIVE, so the
@@ -12,6 +14,13 @@ global scheduler and the flip algorithms (Alg. 1–4) never place work on — or
 flip — a warming or retiring instance. RETIRING instances keep draining the
 work they already hold (``all_ids`` still includes them for stat scraping and
 iteration driving); the runtime removes them once drained (core/runtime.py).
+
+FAILED (DESIGN.md §8) is the fail-stop crash state: reachable from any live
+state, never schedulable, never flippable, skipped by stat scraping and the
+AutoScaler's pool accounting. Unlike RETIRING nothing drains — the substrate
+and its resident KV are already gone; the runtime recovers the lost work
+(core/runtime.py ``fail_instance``) and removes the corpse on the next
+monitor tick.
 """
 from __future__ import annotations
 
@@ -30,6 +39,7 @@ class Lifecycle(enum.Enum):
     WARMING = "warming"    # provisioning/loading weights; not schedulable yet
     ACTIVE = "active"      # schedulable member of its pool
     RETIRING = "retiring"  # draining; accepts no new work, no flips
+    FAILED = "failed"      # crashed: substrate + resident KV gone (§8)
 
 
 class InstancePools:
@@ -75,6 +85,9 @@ class InstancePools:
 
     def retiring_ids(self) -> List[int]:
         return [i for i, s in self._life.items() if s is Lifecycle.RETIRING]
+
+    def failed_ids(self) -> List[int]:
+        return [i for i, s in self._life.items() if s is Lifecycle.FAILED]
 
     def prefill_capable(self) -> List[int]:
         """Instances currently accepting prefill requests: P ∪ D→P."""
@@ -152,9 +165,19 @@ class InstancePools:
                              f"{self._life[iid].value}")
         self._life[iid] = Lifecycle.RETIRING
 
+    def fail(self, iid: int) -> None:
+        """Fail-stop crash (DESIGN.md §8): reachable from any live state.
+        The instance is instantly unschedulable and unflippable; the runtime
+        recovers its lost work and removes the corpse."""
+        if iid not in self._life:
+            raise ValueError(f"unknown instance {iid}")
+        if self._life[iid] is Lifecycle.FAILED:
+            raise ValueError(f"instance {iid} already failed")
+        self._life[iid] = Lifecycle.FAILED
+
     def remove_instance(self, iid: int) -> None:
-        """Final removal of a drained RETIRING instance."""
-        if self._life[iid] is not Lifecycle.RETIRING:
+        """Final removal of a drained RETIRING or crashed FAILED instance."""
+        if self._life[iid] not in (Lifecycle.RETIRING, Lifecycle.FAILED):
             raise ValueError(f"cannot remove instance {iid}: "
                              f"{self._life[iid].value} (retire first)")
         del self._pool[iid]

@@ -40,6 +40,15 @@ class Request:
     decode_instance: Optional[int] = None
     cached_len: int = 0              # prefix tokens served from cache (§7)
 
+    # crash recovery (DESIGN.md §8): a request whose KV was lost re-prefills
+    # its prompt plus the already-streamed tokens (minus the last, which
+    # seeds the next decode step) — ``input_len`` absorbs those tokens so
+    # the recovery prefill is costed and scheduled like any other, and
+    # ``resumed_tokens`` (the stream length at recovery) tells the runtime
+    # not to re-emit anything the user already saw.
+    resumed_tokens: int = 0
+    recoveries: int = 0              # times this request was crash-recovered
+
     # measured outcomes
     first_token_time: Optional[float] = None      # absolute time of o_1
     finish_time: Optional[float] = None

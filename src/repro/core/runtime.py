@@ -27,6 +27,15 @@ requests away through the *same* FCFS migration manager — and
 ``_maybe_finalize_retires`` removes it once drained. An ``AutoScaler``
 (core/autoscaler.py) drives these from the monitor tick when the policy is
 elastic (``arrow_elastic``).
+
+Fault tolerance (DESIGN.md §8) adds the crash path: ``fail_instance``
+tears an instance down *without* a drain — its resident KV is gone, so the
+runtime invalidates its prefix-index entries, aborts every migration
+touching it, re-routes migrations whose KV survives elsewhere, and
+re-dispatches the lost requests (decode-phase victims re-prefill prompt +
+already-streamed tokens so recovered greedy streams stay token-identical).
+A ``FaultInjector`` (core/faults.py) fires scripted crash/slowdown events;
+the AutoScaler spawns replacements when the policy is elastic.
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.core.autoscaler import AutoScaler, AutoScalerConfig
 from repro.core.clock import Clock
+from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.global_scheduler import NoSchedulableInstance
 from repro.core.local_scheduler import LocalScheduler
 from repro.core.monitor import InstanceMonitor, InstanceStats
@@ -45,7 +55,8 @@ from repro.core.prefix_index import (DEFAULT_BLOCK, PrefixCacheManager,
                                      PrefixHit, lineage_keys)
 from repro.core.request import Request, RequestState
 from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
-                                ServingSystem, TIERS, TokenCallback)
+                                ServingSystem, TIERS, TokenCallback,
+                                UndispatchableError)
 from repro.core.slo import SLO, SchedulerConfig
 from repro.core.ttft_predictor import TTFTPredictor
 
@@ -66,6 +77,7 @@ class RuntimeCore(ServingSystem):
                       autoscaler_cfg: Optional[AutoScalerConfig] = None,
                       prefix_cache: bool = False,
                       prefix_block: int = DEFAULT_BLOCK,
+                      fault_plan: Optional[FaultPlan] = None,
                       ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
@@ -97,7 +109,24 @@ class RuntimeCore(ServingSystem):
         self._migrating_from: Dict[int, int] = {}   # rid -> current KV holder
         self._kv_outbound = Counter()   # iid -> in-flight outbound transfers
         self._kv_inbound = Counter()    # iid -> admitted, not-yet-landed
+        # per-rid migration bookkeeping so a crash can find and abort every
+        # transfer touching the dead instance (DESIGN.md §8):
+        self._transfers: Dict[int, Tuple[int, int, int]] = {}  # rid->(s,d,kv)
+        self._migration_kv: Dict[int, int] = {}     # rid -> kv while MIGRATING
         self._recent_finish: deque = deque(maxlen=128)  # SLO window
+        # ---- fault domain (DESIGN.md §8)
+        self.fault_stats: Dict[str, float] = {
+            "crashes": 0, "slowdowns": 0, "skipped_events": 0,
+            "requests_recovered": 0, "requests_lost": 0,
+            "kv_tokens_lost": 0, "re_prefill_tokens": 0,
+            "migrations_aborted": 0, "replacements": 0}
+        self._slowdowns: Dict[int, Tuple[float, float]] = {}  # iid->(f,until)
+        self._failed_pending: Dict[int, float] = {}  # iid -> crash time
+        self.fault_injector: Optional[FaultInjector] = None
+        if fault_plan is not None:
+            # backends arm the firing (sim: exact virtual-clock events;
+            # engine: polled every cooperative pass)
+            self.fault_injector = FaultInjector(fault_plan, self)
         # ---- deferred dispatch: multi-turn parent gating + the no-ACTIVE-
         # instance queue (both retried through the backend's _arrival_due)
         self._gated: Dict[int, list] = {}       # parent rid -> waiting rids
@@ -152,6 +181,28 @@ class RuntimeCore(ServingSystem):
         gating has cleared (the engine materializes session prompts here —
         the transcript is only complete once the parent finished)."""
 
+    # ------------------------------------------------ fault backend hooks (§8)
+    def _abort_transfer(self, rid: int, dst: int, kv: int) -> None:
+        """A migration in flight toward ``dst`` was aborted by a crash: undo
+        whatever the backend reserved in ``_begin_transfer`` and drop the
+        pending completion (sim: stale-token the heap event; engine:
+        transfers are synchronous, nothing is ever in flight)."""
+
+    def _on_instance_failed(self, iid: int) -> None:
+        """Crash teardown of the physical substrate (sim: cancel the running
+        iteration; engine: drop the real ``EngineInstance`` and its slots).
+        Called after the runtime inventoried the lost work."""
+
+    def _prepare_recovery(self, handle: RequestHandle) -> None:
+        """A decode-phase request lost its KV: extend the backend's notion of
+        its prompt with the already-streamed tokens minus the last (the
+        engine rebuilds the actual token array; the sim models no content).
+        Called before the runtime updates the request's bookkeeping."""
+
+    def _request_lost(self, rid: int) -> None:
+        """No-recovery strawman: the request is stranded for good — drop it
+        from the backend's live set so ``drain()`` terminates."""
+
     # ---------------------------------------- prefix-cache backend hooks (§7)
     def _retain_kv(self, iid: int, rid: int, kv_tokens: int) -> bool:
         """Keep ``rid``'s finished KV resident on ``iid`` as a reusable
@@ -165,7 +216,10 @@ class RuntimeCore(ServingSystem):
         self.local_of(iid).release_retained(rid)
 
     def _on_prefix_release(self, iid: int, rid: int, kv_tokens: int) -> None:
-        if iid in self.pools.all_ids():       # instance may be long gone
+        # the instance may be long gone, or a FAILED corpse whose substrate
+        # (and with it the retained KV) no longer exists (§8)
+        if iid in self.pools.all_ids() and \
+                self.pools.lifecycle_of(iid) is not Lifecycle.FAILED:
             self._release_retained(iid, rid)
 
     # -------------------------------------------------- prefix-key schemes
@@ -292,6 +346,11 @@ class RuntimeCore(ServingSystem):
         self.local_of(iid).enqueue_prefill(req.rid, req.input_len,
                                            cached=cached)
         self.decisions["prefill"] += 1
+        if req.recoveries:
+            # recovery recompute (§8): tokens prefilled again because a
+            # crash lost the KV — a surviving prefix holder shrinks this
+            self.fault_stats["re_prefill_tokens"] += \
+                max(req.input_len - cached, 0)
         return iid
 
     def emit_token(self, handle: RequestHandle, now: float,
@@ -331,7 +390,8 @@ class RuntimeCore(ServingSystem):
         iid = req.decode_instance if req.decode_instance is not None \
             else req.prefill_instance
         if iid is None or iid not in self.pools.all_ids() or \
-                self.pools.lifecycle_of(iid) is Lifecycle.RETIRING:
+                self.pools.lifecycle_of(iid) in (Lifecycle.RETIRING,
+                                                 Lifecycle.FAILED):
             return
         keys = self._retention_keys(handle)
         if not keys:
@@ -352,20 +412,37 @@ class RuntimeCore(ServingSystem):
                       ) -> Tuple[DecodePlacement, Optional[int]]:
         """Prefill finished on ``iid``: stream o_1, then place the decode
         phase (Algorithm 2). Returns the placement and, for MIGRATE, the
-        target instance whose admission queue now holds the request."""
+        target instance whose admission queue now holds the request.
+
+        A crash-recovery prefill (§8) re-computed the already-streamed
+        context: nothing new is emitted — the computed token is the last
+        one the user already saw (it seeds the next decode step) — and
+        decode resumes with the post-crash remainder."""
         req = handle.req
         src = self._prefix_src.pop(req.rid, None)
         if src is not None and self.prefix_mgr is not None:
             # copy-on-extend done (the suffix is computed): unpin the source
             self.prefix_mgr.unpin(src[0], src[1])
-        self.emit_token(handle, now, token, first=True)
-        if req.output_len <= 1:
-            self.finish(handle, now)
-            return DecodePlacement.FINISHED, None
-        target = self.policy.schedule_decode_req(req, now)
+        resumed = req.resumed_tokens > 0 and \
+            req.resumed_tokens == len(handle.tokens)
+        if not resumed:
+            self.emit_token(handle, now, token, first=True)
+            if req.output_len <= 1:
+                self.finish(handle, now)
+                return DecodePlacement.FINISHED, None
+        try:
+            target = self.policy.schedule_decode_req(req, now)
+        except NoSchedulableInstance:
+            # nothing ACTIVE (e.g. a crash took the last one while this
+            # prefill drained on a retiring instance): decode in place —
+            # the KV is already here, and a retiring holder draining extra
+            # decode work is the same situation as a migration landing on
+            # it mid-retire. A crash of ``iid`` recovers it like any other
+            # resident decode.
+            target = iid
         self.decisions["decode"] += 1
         req.decode_instance = target
-        remaining = req.output_len - 1
+        remaining = req.output_len - len(handle.tokens)
         if target == iid:
             req.state = RequestState.DECODING
             self.local_of(iid).start_local_decode(
@@ -373,6 +450,7 @@ class RuntimeCore(ServingSystem):
             return DecodePlacement.LOCAL, iid
         req.state = RequestState.MIGRATING
         self._kv_outbound[iid] += 1
+        self._migration_kv[req.rid] = req.input_len
         self.local_of(target).enqueue_migration(
             req.rid, req.input_len, remaining)
         self.decisions["migrations"] += 1
@@ -402,9 +480,12 @@ class RuntimeCore(ServingSystem):
             # backends land it later, and a retiring destination must not
             # finalize while data is in the air (the engine's synchronous
             # path completes inside _begin_transfer, netting back to zero).
+            # _transfers keys the in-flight set a crash must abort (§8).
             self._kv_inbound[iid] += 1
+            self._transfers[rid] = (self._kv_source(rid), iid, kv)
             if not self._begin_transfer(rid, iid, kv, rem):
                 self._kv_inbound[iid] -= 1
+                self._transfers.pop(rid, None)
                 loc.migration_queue.appendleft((rid, kv, rem))
                 return
 
@@ -422,6 +503,8 @@ class RuntimeCore(ServingSystem):
         req = self.handles[rid].req
         src = self._kv_source(rid)
         self._migrating_from.pop(rid, None)
+        self._transfers.pop(rid, None)
+        self._migration_kv.pop(rid, None)
         if src is not None and src != dst:
             self._release_source_kv(src, rid, kv)
         if src is not None and self._kv_outbound[src] > 0:
@@ -452,7 +535,11 @@ class RuntimeCore(ServingSystem):
 
     def activate_instance(self, iid: int) -> None:
         """Warm-up finished: the instance becomes schedulable. Requests that
-        found no ACTIVE instance at dispatch time retry now."""
+        found no ACTIVE instance at dispatch time retry now. A stale
+        activation (the instance crashed while warming, §8) is a no-op."""
+        if iid not in self.pools.all_ids() or \
+                self.pools.lifecycle_of(iid) is not Lifecycle.WARMING:
+            return
         self.pools.activate(iid)
         self._instance_ready(iid)
         while self._unplaced:
@@ -485,30 +572,40 @@ class RuntimeCore(ServingSystem):
             req.state = RequestState.MIGRATING
             self._migrating_from[rid] = iid
             self._kv_outbound[iid] += 1
+            self._migration_kv[rid] = w.context_len
             self.decisions["migrations"] += 1
             redispatch.append((rid, w.context_len, w.remaining_out))
         targets = set()
         evac_load = Counter()      # tentative KV per target within this batch
         for rid, kv, rem in redispatch:
-            req = self.handles[rid].req
-            dst = self._evacuation_target(kv, evac_load)
-            src = self._kv_source(rid)
-            if dst == src:
-                # the chosen destination already holds the KV (a queued-at-
-                # `iid` migration whose source is now the best target): no
-                # transfer — resume decode in place, like a LOCAL placement.
-                if self._kv_outbound[src] > 0:
-                    self._kv_outbound[src] -= 1
-                req.decode_instance = src
-                req.state = RequestState.DECODING
-                self.local_of(src).start_local_decode(rid, kv, rem)
-                self._decode_started(src)
-                continue
-            req.decode_instance = dst
-            self.local_of(dst).enqueue_migration(rid, kv, rem)
-            targets.add(dst)
+            self._route_evacuation(rid, kv, rem, evac_load, targets)
         for dst in targets:
             self.admit_migrations(dst)
+
+    def _route_evacuation(self, rid: int, kv: int, rem: int,
+                          evac_load: Counter, targets: set) -> None:
+        """Route one KV-holding migration item away from a retiring or
+        failed instance: pick a destination, or resume decode in place when
+        the chosen destination already holds the KV."""
+        req = self.handles[rid].req
+        dst = self._evacuation_target(kv, evac_load)
+        src = self._kv_source(rid)
+        if dst == src:
+            # the chosen destination already holds the KV (a queued-away
+            # migration whose source is now the best target): no transfer —
+            # resume decode in place, like a LOCAL placement.
+            if self._kv_outbound[src] > 0:
+                self._kv_outbound[src] -= 1
+            self._migrating_from.pop(rid, None)
+            self._migration_kv.pop(rid, None)
+            req.decode_instance = src
+            req.state = RequestState.DECODING
+            self.local_of(src).start_local_decode(rid, kv, rem)
+            self._decode_started(src)
+            return
+        req.decode_instance = dst
+        self.local_of(dst).enqueue_migration(rid, kv, rem)
+        targets.add(dst)
 
     def _evacuation_target(self, kv: int, evac_load: Counter) -> int:
         """Destination for work leaving a retiring instance: the least-loaded
@@ -537,13 +634,21 @@ class RuntimeCore(ServingSystem):
             if not self._retire_drained(iid):
                 continue
             self._retire_started.pop(iid)
-            self.pools.remove_instance(iid)
-            self.monitor.remove_instance(iid)
-            self.policy.on_instance_removed(iid)
-            self._instance_seconds_closed += now - self._spawned_at.pop(iid)
-            self._kv_outbound.pop(iid, None)
-            self._kv_inbound.pop(iid, None)
-            self._destroy_instance(iid)
+            self._finalize_instance(iid, now)
+        # failed corpses (§8) have nothing to drain — the substrate is gone
+        # and fail_instance already recovered the work; remove on sight
+        for iid in list(self._failed_pending):
+            self._failed_pending.pop(iid)
+            self._finalize_instance(iid, now)
+
+    def _finalize_instance(self, iid: int, now: float) -> None:
+        self.pools.remove_instance(iid)
+        self.monitor.remove_instance(iid)
+        self.policy.on_instance_removed(iid)
+        self._instance_seconds_closed += now - self._spawned_at.pop(iid)
+        self._kv_outbound.pop(iid, None)
+        self._kv_inbound.pop(iid, None)
+        self._destroy_instance(iid)
 
     def instance_seconds(self, now: float) -> float:
         """Σ per-instance alive time — the provisioning cost a static
@@ -551,10 +656,200 @@ class RuntimeCore(ServingSystem):
         return self._instance_seconds_closed + \
             sum(now - t for t in self._spawned_at.values())
 
+    # --------------------------------------------- fault domain (DESIGN.md §8)
+    def fail_instance(self, iid: int, now: float, *,
+                      recover: bool = True) -> Dict[str, int]:
+        """Fail-stop crash of ``iid``: the substrate and every resident KV
+        token are lost *instantly* — nothing drains. The runtime
+
+          1. moves the instance to FAILED (never schedulable again),
+          2. invalidates its prefix-index entries (pinned ones are doomed),
+          3. aborts every migration touching it: transfers in flight *from*
+             it lose their data (the request is recovered); transfers in
+             flight or queued *toward* it still have live KV at the source
+             and are re-routed to a surviving destination,
+          4. re-dispatches its lost prefill- and decode-phase requests —
+             decode victims re-prefill prompt + already-streamed tokens so
+             recovered greedy streams stay token-identical (§8.2) — and
+          5. asks the AutoScaler (elastic policies) for a replacement.
+
+        ``recover=False`` is the no-recovery strawman: lost requests are
+        stranded (``benchmarks/bench_faults.py`` quantifies the difference).
+        Returns a per-crash summary for tests/benchmarks."""
+        if iid not in self.pools.all_ids():
+            raise ValueError(f"unknown instance {iid}")
+        pool = self.pools.pool_of(iid)
+        self.pools.fail(iid)                   # raises if already failed
+        self.fault_stats["crashes"] += 1
+        self._retire_started.pop(iid, None)    # a retiring instance may crash
+        self._slowdowns.pop(iid, None)
+        loc = self.local_of(iid)
+        # ---- 1. inventory the lost work before any teardown
+        lost_prefill = list(loc.prefill_queue)
+        lost_decode = list(loc.decode_running)
+        queued_inbound = list(loc.migration_queue)   # KV lives elsewhere
+        outbound_flying, inbound_flying = [], []
+        for rid, (src, dst, kv) in list(self._transfers.items()):
+            if src == iid:
+                outbound_flying.append((rid, dst, kv))   # data lost mid-air
+            elif dst == iid:
+                inbound_flying.append((rid, src, kv))    # destination gone
+        queued_out = []          # queued at a live dst, KV source was iid
+        inbound_rids = {q[0] for q in queued_inbound}
+        for rid, kv in list(self._migration_kv.items()):
+            if rid in self._transfers or rid in inbound_rids:
+                continue
+            req = self.handles[rid].req
+            if req.state is RequestState.MIGRATING and \
+                    self._kv_source(rid) == iid:
+                queued_out.append((rid, req.decode_instance))
+        # resident KV minus reservations for transfers still in the air
+        # toward us — that data is intact at its source and gets rerouted,
+        # so it was never lost
+        self.fault_stats["kv_tokens_lost"] += max(
+            loc.kv_used - sum(kv for _, _, kv in inbound_flying), 0)
+        # ---- 2. cached prefixes are gone with the memory
+        if self.prefix_mgr is not None:
+            self.prefix_mgr.invalidate_instance(iid)
+        # ---- 3. abort migrations touching iid
+        for rid, dst, kv in outbound_flying:            # data lost mid-air
+            self._abort_transfer(rid, dst, kv)
+            self._transfers.pop(rid, None)
+            self._migration_kv.pop(rid, None)
+            if self._kv_inbound[dst] > 0:
+                self._kv_inbound[dst] -= 1
+            self.fault_stats["migrations_aborted"] += 1
+        for rid, src, kv in inbound_flying:             # KV intact at src
+            self._abort_transfer(rid, iid, kv)
+            self._transfers.pop(rid, None)
+            self.fault_stats["migrations_aborted"] += 1
+        for rid, dst in queued_out:                     # data never moved
+            q = self.local_of(dst).migration_queue
+            for item in [it for it in q if it[0] == rid]:
+                q.remove(item)
+            self._migration_kv.pop(rid, None)
+            self.fault_stats["migrations_aborted"] += 1
+        self._kv_outbound.pop(iid, None)
+        self._kv_inbound.pop(iid, None)
+        # ---- 4. substrate teardown; the corpse is removed next tick
+        self._failed_pending[iid] = now
+        self._on_instance_failed(iid)
+        loc.prefill_queue.clear()
+        loc.decode_running.clear()
+        loc.migration_queue.clear()
+        loc.retained.clear()
+        loc.kv_used = 0
+        # ---- 5. replacement before recovery, so that when the crash took
+        # the last ACTIVE instance the recovered requests have a WARMING
+        # one to wait for instead of being undispatchable
+        if self.autoscaler is not None:
+            if self.autoscaler.on_instance_failed(iid, pool, now) is not None:
+                self.fault_stats["replacements"] += 1
+        # ---- 6. recovery: KV-intact migrations re-route; KV-lost requests
+        # re-dispatch (scratch, or a surviving prefix holder via the normal
+        # §7 affinity path)
+        evac_load, targets = Counter(), set()
+        kv_lost_rids = lost_prefill + lost_decode + \
+            [rid for rid, _, _ in outbound_flying] + \
+            [rid for rid, _ in queued_out]
+        reroutes = [(rid, kv,
+                     self.handles[rid].req.output_len
+                     - len(self.handles[rid].tokens))
+                    for rid, _, kv in inbound_flying]
+        reroutes += queued_inbound
+        for rid, kv, rem in reroutes:
+            if self.pools.active_ids():
+                self._route_evacuation(rid, kv, rem, evac_load, targets)
+            else:
+                # no destination anywhere: give up the surviving copy and
+                # recover by re-prefill like a KV-lost request
+                src = self._kv_source(rid)
+                if src is not None:
+                    self._release_source_kv(src, rid, kv)
+                    if self._kv_outbound[src] > 0:
+                        self._kv_outbound[src] -= 1
+                self._migration_kv.pop(rid, None)
+                kv_lost_rids.append(rid)
+        for dst in targets:
+            self.admit_migrations(dst)
+        for rid in kv_lost_rids:
+            if recover:
+                self._recover_request(rid, now)
+            else:
+                self._migrating_from.pop(rid, None)
+                self._migration_kv.pop(rid, None)
+                src = self._prefix_src.pop(rid, None)
+                if src is not None and self.prefix_mgr is not None:
+                    self.prefix_mgr.unpin(src[0], src[1])
+                self.fault_stats["requests_lost"] += 1
+                self._request_lost(rid)
+        return {"lost_prefill": len(lost_prefill),
+                "lost_decode": len(lost_decode),
+                "rerouted": len(inbound_flying) + len(queued_inbound),
+                "recovered": len(kv_lost_rids) if recover else 0}
+
+    def _recover_request(self, rid: int, now: float) -> None:
+        """Re-dispatch a request whose KV was lost in a crash. Prefill-phase
+        victims simply restart. Decode-phase victims must not re-emit what
+        the user already saw: the context to rebuild is the prompt plus all
+        streamed tokens except the last (whose logits seed the next decode
+        step), so ``input_len`` absorbs those tokens — the recovery prefill
+        is then costed, prefix-matched and placed like any other request,
+        and ``after_prefill`` suppresses the duplicate emission."""
+        handle = self.handles[rid]
+        req = handle.req
+        self._prepare_recovery(handle)        # engine extends the real prompt
+        emitted = len(handle.tokens)
+        if emitted:
+            # tokens newly absorbed into the context since the last recovery
+            delta = emitted - max(req.resumed_tokens, 1)
+            req.input_len += delta
+            req.decoded_tokens -= delta       # they are prompt now (§7 keys)
+            req.resumed_tokens = emitted
+        req.recoveries += 1
+        req.state = RequestState.QUEUED
+        req.prefill_instance = None
+        req.decode_instance = None
+        req.cached_len = 0
+        req.prefill_done_tokens = 0
+        self._migrating_from.pop(rid, None)
+        src = self._prefix_src.pop(rid, None)
+        if src is not None and self.prefix_mgr is not None:
+            self.prefix_mgr.unpin(src[0], src[1])   # frees a doomed source
+        self.fault_stats["requests_recovered"] += 1
+        self._arrival_due(rid)
+
+    def apply_slowdown(self, iid: int, factor: float, until: float) -> None:
+        """A lagging instance (§3.2): iterations run ``factor`` slower until
+        the system clock passes ``until``."""
+        self._slowdowns[iid] = (factor, until)
+        self.fault_stats["slowdowns"] += 1
+
+    def slow_factor(self, iid: int, now: float) -> float:
+        ent = self._slowdowns.get(iid)
+        if ent is None:
+            return 1.0
+        factor, until = ent
+        if now >= until:
+            del self._slowdowns[iid]
+            return 1.0
+        return factor
+
+    def _check_undispatchable(self) -> None:
+        """Raise UndispatchableError when queued requests can never dispatch:
+        nothing ACTIVE, nothing WARMING (drain would otherwise hang)."""
+        if not self._unplaced:
+            return
+        if self.pools.active_ids() or self.pools.warming_ids():
+            return
+        raise UndispatchableError(self._unplaced, self.pools)
+
     # ------------------------------------------------ monitor-tick scrape
     def collect_stats(self, now: float) -> None:
         ready = getattr(self.policy, "prefill_ready_at", {})
         for iid in self.pools.all_ids():
+            if self.pools.lifecycle_of(iid) is Lifecycle.FAILED:
+                continue               # corpse (§8): substrate gone
             loc = self.local_of(iid)
             self.monitor.update_stats(InstanceStats(
                 instance_id=iid,
@@ -601,10 +896,18 @@ class RuntimeCore(ServingSystem):
             out["saved_prefill_s"] / full if full > 0 else 0.0
         return out
 
+    def fault_detail(self) -> Dict[str, float]:
+        """Fault/recovery accounting (§8); empty when no fault ever fired
+        (so fault-free reports stay byte-identical to pre-fault builds)."""
+        if not any(self.fault_stats.values()):
+            return {}
+        return dict(self.fault_stats)
+
     def report(self) -> ServeReport:
         return ServeReport(handles=list(self.handles.values()),
                            flip_detail=self.flip_counts(),
                            decisions=dict(self.decisions),
                            duration=self.clock.now(),
                            scaling=self.scaling_detail(),
-                           prefix=self.prefix_detail())
+                           prefix=self.prefix_detail(),
+                           faults=self.fault_detail())

@@ -48,6 +48,22 @@ TIERS: Dict[str, SLOTier] = {
     "batch": SLOTier("batch", ttft_scale=4.0, tpot_scale=4.0),
 }
 
+
+class UndispatchableError(RuntimeError):
+    """``drain()`` can never complete: requests are waiting for an ACTIVE
+    instance but every instance is FAILED or RETIRING and none is WARMING —
+    nothing will ever accept them. Raised instead of hanging until the
+    drain timeout (DESIGN.md §8). ``rids`` lists the stranded requests."""
+
+    def __init__(self, rids, pools):
+        self.rids = sorted(rids)
+        super().__init__(
+            f"drain() cannot complete: no ACTIVE or WARMING instance will "
+            f"ever accept rids {self.rids} "
+            f"({len(pools.retiring_ids())} retiring, "
+            f"{len(pools.failed_ids())} failed); scale up first or use an "
+            f"elastic policy")
+
 # on_token(handle, token_id_or_None, t): token ids are real ints on the
 # engine; the simulator streams ``None`` placeholders (it models timing, not
 # content). ``t`` is the system-clock time the token landed.
@@ -101,6 +117,10 @@ class ServeReport:
     # saved_prefill_s/saved_prefill_frac, evictions, invalidations. Empty
     # when the cache is off.
     prefix: Dict[str, float] = field(default_factory=dict)
+    # fault accounting (DESIGN.md §8): crashes, slowdowns, requests
+    # recovered/lost, kv_tokens_lost, re_prefill_tokens, migrations_aborted,
+    # replacements. Empty when no fault ever fired.
+    faults: Dict[str, float] = field(default_factory=dict)
 
     @property
     def flips(self) -> int:
@@ -157,6 +177,10 @@ class ServeReport:
             s += (f" prefix_hits={self.prefix['hits']:.0f}"
                   f"/{self.prefix['lookups']:.0f}"
                   f" saved_prefill={self.prefix['saved_prefill_frac']:.0%}")
+        if self.faults:
+            s += (f" crashes={self.faults['crashes']:.0f}"
+                  f" recovered={self.faults['requests_recovered']:.0f}"
+                  f" re_prefill_toks={self.faults['re_prefill_tokens']:.0f}")
         return s
 
 

@@ -56,7 +56,7 @@ class ArrowEngineCluster(RuntimeCore):
                  sched_cfg: Optional[SchedulerConfig] = None, seed: int = 0,
                  params=None, chunk_tokens: Optional[int] = None,
                  policy: str = "arrow", autoscaler_cfg=None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, fault_plan=None):
         import jax
         self.cfg = cfg
         self.capacity = capacity
@@ -79,7 +79,7 @@ class ArrowEngineCluster(RuntimeCore):
                            policy=policy, slo=slo, sched_cfg=sched_cfg,
                            predictor=predictor, clock=WallClock(),
                            autoscaler_cfg=autoscaler_cfg,
-                           prefix_cache=prefix_cache)
+                           prefix_cache=prefix_cache, fault_plan=fault_plan)
         self._pending: list = []                # heap: (arrival, rid)
         self._live: Dict[int, RequestHandle] = {}
         self._prompts: Dict[int, np.ndarray] = {}
@@ -126,6 +126,33 @@ class ArrowEngineCluster(RuntimeCore):
 
     def _arrival_due(self, rid: int) -> None:
         heapq.heappush(self._pending, (self.handles[rid].req.arrival, rid))
+
+    # ------------------------------------------------ fault hooks (§8)
+    def _on_instance_failed(self, iid: int) -> None:
+        # the EngineInstance — and with it the slot KV cache — dies here;
+        # the LocalScheduler bookkeeping was already inventoried
+        self.instances.pop(iid, None)
+
+    def _request_lost(self, rid: int) -> None:
+        # strawman: stranded for good — drop it from the serving loop and
+        # free its prompt (kept until finish for recovery, which never comes)
+        self._live.pop(rid, None)
+        self._prompts.pop(rid, None)
+
+    def _prepare_recovery(self, handle: RequestHandle) -> None:
+        """Crash recovery (§8): extend the stored prompt with the streamed
+        tokens not yet folded in, minus the last (its logits are what the
+        recovery prefill recomputes to seed the next decode step) — so the
+        re-prefill rebuilds the exact pre-crash KV and greedy decode
+        continues token-identically."""
+        req = handle.req
+        prompt = self._prompts.get(req.rid)
+        emitted = [t for t in handle.tokens if t is not None]
+        if prompt is None or not emitted:
+            return
+        folded = max(req.resumed_tokens - 1, 0)   # already in the prompt
+        tail = np.asarray(emitted[folded:len(emitted) - 1], np.int32)
+        self._prompts[req.rid] = np.concatenate([prompt, tail])
 
     # ------------------------------------- prefix cache / sessions (§7)
     def _release_retained(self, iid: int, rid: int) -> None:
@@ -191,21 +218,28 @@ class ArrowEngineCluster(RuntimeCore):
         if prompt is None:
             return None
         # resident KV = prompt + every generated token except the last
-        # (o_m is returned but never fed back into the cache)
-        gen = np.asarray([t for t in handle.tokens[:-1] if t is not None],
-                         np.int32)
+        # (o_m is returned but never fed back into the cache); a crash
+        # recovery (§8) already folded tokens[:resumed-1] into the prompt
+        folded = max(req.resumed_tokens - 1, 0)
+        gen = np.asarray([t for t in handle.tokens[folded:-1]
+                          if t is not None], np.int32)
         return content_keys(np.concatenate([prompt, gen]),
                             self.prefix_mgr.block)
 
     def _session_note_finish(self, handle: RequestHandle) -> None:
         req = handle.req
         if req.session_id is None:
+            if self.prefix_mgr is None:
+                # prompts are kept through decode for crash recovery (§8);
+                # with the cache off nothing else will free this one
+                self._prompts.pop(req.rid, None)
             return
         prompt = self._prompts.get(req.rid)
         if prompt is None:
             return
-        gen = np.asarray([t for t in handle.tokens if t is not None],
-                         np.int32)
+        folded = max(req.resumed_tokens - 1, 0)   # recovery extended prompt
+        gen = np.asarray([t for t in handle.tokens[folded:]
+                          if t is not None], np.int32)
         self._session_tail[req.session_id] = np.concatenate([prompt, gen])
         self._prompts.pop(req.rid, None)   # folded into the tail; free it
 
@@ -253,6 +287,8 @@ class ArrowEngineCluster(RuntimeCore):
 
     def step(self) -> bool:
         t = self.clock.now()
+        if self.fault_injector is not None:    # polled firing (§8)
+            self.fault_injector.poll(t)
         # arrivals due
         while self._pending and self._pending[0][0] <= t:
             _, rid = heapq.heappop(self._pending)
@@ -284,6 +320,7 @@ class ArrowEngineCluster(RuntimeCore):
                  else self.clock.now() + timeout)
         while (self._pending or self._live) and self.clock.now() < limit:
             self.step()
+            self._check_undispatchable()   # §8: raise, don't spin to timeout
             if not self._live and self._pending:
                 time.sleep(max(self._pending[0][0] - self.clock.now(), 0.0))
         return self.report()
@@ -313,6 +350,7 @@ class ArrowEngineCluster(RuntimeCore):
         if plan.is_empty:
             return
         t_start = self.clock.now()
+        slow = self.slow_factor(iid, t_start)    # injected lag (§8)
         # decode batch first
         done_tokens = inst.run_decode_iteration(plan.decode_rids)
         t_after = self.clock.now()
@@ -351,8 +389,8 @@ class ArrowEngineCluster(RuntimeCore):
             inst.local.complete_prefill_chunk(rid, ln)
             if tok is None:                        # more chunks to go
                 continue
-            if self.prefix_mgr is None and handle.req.session_id is None:
-                self._prompts.pop(rid, None)       # prefill done: free it
+            # (the prompt stays resident until finish — crash recovery §8
+            # may need to re-prefill it)
             # resync Eq.(2) bookkeeping against reality: predicted drain time
             # of the instance = now + predicted time of the remaining queue
             # (a cached prefix shrinks a queued request to its suffix)
@@ -367,3 +405,6 @@ class ArrowEngineCluster(RuntimeCore):
                 if rid not in inst.local.retained:
                     inst.drop(rid)
                 self._live.pop(rid, None)
+        if slow > 1.0:                           # lagging instance (§8)
+            time.sleep(min((slow - 1.0)
+                           * max(self.clock.now() - t_start, 0.0), 0.25))

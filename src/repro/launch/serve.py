@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.autoscaler import AutoScalerConfig
+from repro.core.faults import FaultPlan
 from repro.core.policies import POLICIES
 from repro.core.request import Request
 from repro.core.serving import ServeReport, ServingSystem, replay_trace
@@ -92,7 +93,8 @@ def run_engine(args) -> ServeReport:
                                  slo=SLO(args.ttft, args.tpot),
                                  policy=args.policy,
                                  autoscaler_cfg=autoscaler_cfg(args),
-                                 prefix_cache=args.prefix_cache == "on")
+                                 prefix_cache=args.prefix_cache == "on",
+                                 fault_plan=fault_plan(args))
     if args.trace:
         from repro.traces import load_trace
         trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
@@ -116,12 +118,20 @@ def run_sim(args) -> ServeReport:
                     n_prefill=max(args.instances // 2, 1),
                     policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot),
                     autoscaler_cfg=autoscaler_cfg(args),
-                    prefix_cache=args.prefix_cache == "on")
+                    prefix_cache=args.prefix_cache == "on",
+                    fault_plan=fault_plan(args))
     # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
     # time and must cover the whole trace
     return run_and_report(sim, trace, tier=args.tier,
                           label=f"serve-sim {args.arch} {trace_name} "
                                 f"x{args.rate} {args.policy}")
+
+
+def fault_plan(args) -> Optional[FaultPlan]:
+    """Parse ``--fault-plan`` (DESIGN.md §8); None = no injection."""
+    if args.fault_plan is None:
+        return None
+    return FaultPlan.parse(args.fault_plan)
 
 
 def autoscaler_cfg(args) -> Optional[AutoScalerConfig]:
@@ -164,6 +174,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="AutoScaler floor (elastic policies only)")
     ap.add_argument("--max-instances", type=int, default=None,
                     help="AutoScaler ceiling (elastic policies only)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="inject faults (DESIGN.md §8): ';'-separated "
+                         "events, e.g. 'crash@20;crash@45:target=3;"
+                         "slow@60:factor=4,duration=5'. Crashed instances "
+                         "lose their KV; the runtime recovers the lost "
+                         "requests (and an elastic policy replaces the "
+                         "instance)")
     ap.add_argument("--prefix-cache", choices=("on", "off"), default="off",
                     help="prefix-aware KV reuse (DESIGN.md §7): retain "
                          "finished contexts and prefill only the uncached "

@@ -25,6 +25,7 @@ from typing import Dict, List, Optional
 from repro.configs.base import ModelConfig
 from repro.core.clock import VirtualClock
 from repro.core.local_scheduler import LocalScheduler
+from repro.core.pools import Lifecycle
 from repro.core.request import Request
 from repro.core.runtime import DecodePlacement, RuntimeCore
 from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
@@ -64,12 +65,15 @@ class Simulator(RuntimeCore):
                  profile: InstanceProfile = InstanceProfile(),
                  profiles: Optional[Dict[int, InstanceProfile]] = None,
                  token_budget: int = 8192, flip_latency: float = 0.0,
-                 autoscaler_cfg=None, prefix_cache: bool = False):
+                 autoscaler_cfg=None, prefix_cache: bool = False,
+                 fault_plan=None):
         """``profiles`` (iid -> InstanceProfile) enables heterogeneous
         clusters (paper §8): per-instance cost models + a per-instance-fitted
         TTFT predictor; ``profile`` is the homogeneous default (elastic
         scale-ups always materialize from it). ``autoscaler_cfg`` tunes the
-        AutoScaler attached when ``policy`` is elastic (DESIGN.md §6)."""
+        AutoScaler attached when ``policy`` is elastic (DESIGN.md §6).
+        ``fault_plan`` (core/faults.py) schedules crash/slowdown injection
+        as exact virtual-clock events (DESIGN.md §8)."""
         self.cfg = cfg
         self._spawn_profile = profile
         self._token_budget = token_budget
@@ -98,7 +102,7 @@ class Simulator(RuntimeCore):
         self._init_runtime(ids, n_prefill=n_prefill, policy=policy, slo=slo,
                            sched_cfg=sched_cfg, predictor=predictor,
                            clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg,
-                           prefix_cache=prefix_cache)
+                           prefix_cache=prefix_cache, fault_plan=fault_plan)
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
@@ -109,6 +113,14 @@ class Simulator(RuntimeCore):
         self._seq = itertools.count()
         self._busy: Dict[int, bool] = {i: False for i in ids}
         self._tick_armed = False
+        # in-flight KV transfers carry a sequence token so a crash can
+        # invalidate the pending completion event (DESIGN.md §8)
+        self._xfer_seq = itertools.count(1)
+        self._live_xfer: Dict[int, int] = {}      # rid -> live seq
+        if self.fault_injector is not None:
+            # exact virtual-time firing: one event per scripted fault
+            for t in self.fault_injector.event_times():
+                self._push(t, self._on_fault_due)
 
         # Motivation experiment (§3.2 "lagging instance scheduling"): legacy
         # systems pay a reload/drain penalty per flip. Arrow's stateless
@@ -139,8 +151,19 @@ class Simulator(RuntimeCore):
         loc = self.locals[dst]
         loc.kv_used += kv
         dur = self.costs[dst].transfer_time(kv)
-        self._push(self._now + dur, self._on_migration_done, dst, rid, kv, rem)
+        seq = next(self._xfer_seq)
+        self._live_xfer[rid] = seq
+        self._push(self._now + dur, self._on_migration_done,
+                   dst, rid, kv, rem, seq)
         return True
+
+    def _abort_transfer(self, rid: int, dst: int, kv: int) -> None:
+        # crash abort (§8): undo the destination reservation; the pending
+        # completion event no longer matches the live seq and is dropped
+        loc = self.locals.get(dst)
+        if loc is not None:
+            loc.kv_used = max(0, loc.kv_used - kv)
+        self._live_xfer.pop(rid, None)
 
     def _release_source_kv(self, src: int, rid: int, kv: int) -> None:
         self.locals[src].release_prefill_kv(rid, kv)
@@ -181,6 +204,20 @@ class Simulator(RuntimeCore):
         del self._busy[iid]
         del self._flip_block[iid]
 
+    # ---------------------------------------------- fault hooks (§8)
+    def _on_instance_failed(self, iid: int) -> None:
+        # a running iteration dies with the instance: its completion event
+        # is stale (the handlers check lifecycle); the corpse's LocalScheduler
+        # stays until finalization so stat probes see an empty instance
+        self._busy[iid] = False
+
+    def _on_fault_due(self) -> None:
+        self.fault_injector.poll(self._now)
+
+    def _is_dead(self, iid: int) -> bool:
+        return iid not in self.locals or \
+            self.pools.lifecycle_of(iid) is Lifecycle.FAILED
+
     # --------------------------------------------------------- ServingSystem
     def submit(self, req: Request, *, prompt=None, tier: str = "standard",
                on_token: Optional[TokenCallback] = None,
@@ -211,6 +248,8 @@ class Simulator(RuntimeCore):
         limit = float("inf") if timeout is None else self._now + timeout
         while self._heap and self._heap[0][0] <= limit:
             self.step()
+            self._check_undispatchable()   # §8: raise, don't return short
+        self._check_undispatchable()
         return self.report()
 
     # ------------------------------------------------- deprecated batch shim
@@ -239,7 +278,7 @@ class Simulator(RuntimeCore):
 
     def _kick(self, iid: int) -> None:
         """Start an iteration if the instance is idle and has work."""
-        if iid not in self.locals:        # removed (retired) — stale event
+        if self._is_dead(iid):            # removed/failed — stale event
             return
         if self._busy[iid]:
             return
@@ -253,11 +292,14 @@ class Simulator(RuntimeCore):
             return
         chunks = [(start, ln) for _, start, ln in plan.prefill_chunks]
         ctx = [loc.decode_running[r].context_len for r in plan.decode_rids]
-        dur = self.costs[iid].iteration_time(chunks, ctx)
+        dur = self.costs[iid].iteration_time(chunks, ctx) \
+            * self.slow_factor(iid, self._now)       # injected lag (§8)
         self._busy[iid] = True
         self._push(self._now + dur, self._on_iteration_done, iid, plan, dur)
 
     def _on_iteration_done(self, iid: int, plan, dur: float) -> None:
+        if self._is_dead(iid):            # crashed mid-iteration (§8)
+            return
         loc = self.locals[iid]
         now = self._now
         # decode tokens out (streamed; the sim models timing, not content)
@@ -292,7 +334,11 @@ class Simulator(RuntimeCore):
         else:
             self.admit_migrations(target)
 
-    def _on_migration_done(self, dst: int, rid: int, kv: int, rem: int) -> None:
+    def _on_migration_done(self, dst: int, rid: int, kv: int, rem: int,
+                           seq: int = 0) -> None:
+        if self._live_xfer.get(rid) != seq:  # aborted by a crash (§8)
+            return
+        self._live_xfer.pop(rid, None)
         self.locals[dst].kv_used -= kv       # admit_migrated re-adds
         self.complete_migration(rid, dst, kv, rem, self._now)
 

@@ -1,0 +1,153 @@
+"""Cross-backend runtime invariant probe (ISSUE 4 satellite).
+
+``check_invariants(runtime)`` asserts structural properties that must hold
+between any two steps of either ``ServingSystem`` backend — the same probe
+runs against the discrete-event simulator and the real JAX engine, and the
+fault/chaos tests (tests/test_faults.py) assert it after *every* step:
+
+  1. **KV tokens conserved per instance** — each live LocalScheduler's
+     ``kv_used`` equals the sum of its visible obligations: queued prefill
+     footprints + decode contexts + retained prefixes + KV parked for
+     outbound migrations + reservations for transfers in flight toward it.
+  2. **Never schedule on non-ACTIVE** — WARMING instances hold no work at
+     all; FAILED corpses are empty and hold no KV; RETIRING instances have
+     an empty migration queue (evacuated at begin_retire, nothing new may
+     be enqueued); no live request points at a WARMING/FAILED instance.
+  3. **Prefix-pin refcounts sane** — pins are never negative, entries
+     doomed by invalidation are pinned (else they would have been freed),
+     and every live entry matches the owning scheduler's ``retained``
+     bookkeeping token-for-token.
+  4. **Per-request token streams strictly ordered** — timestamps increase
+     monotonically (strictly under the virtual clock), a request never
+     streams more than ``output_len`` tokens, and a finished request
+     streamed exactly ``output_len``.
+
+The probe reads runtime internals on purpose: it is a test instrument, not
+API surface.
+"""
+from __future__ import annotations
+
+from repro.core.clock import VirtualClock
+from repro.core.pools import Lifecycle
+from repro.core.request import RequestState
+
+
+def _fail(runtime, iid, msg):
+    life = {i: runtime.pools.lifecycle_of(i).value
+            for i in runtime.pools.all_ids()}
+    raise AssertionError(f"invariant violated on instance {iid}: {msg} "
+                         f"(lifecycles: {life})")
+
+
+def _expected_kv(runtime, iid, loc) -> int:
+    exp = sum(w.input_len for w in loc.prefill_queue.values())
+    exp += sum(w.context_len for w in loc.decode_running.values())
+    exp += sum(loc.retained.values())
+    # KV parked here as the source of a not-yet-landed migration
+    for rid, kv in runtime._migration_kv.items():
+        req = runtime.handles[rid].req
+        if req.state is RequestState.MIGRATING and \
+                runtime._kv_source(rid) == iid:
+            exp += kv
+    # destination reservations for transfers in the air toward this instance
+    exp += sum(kv for (_, dst, kv) in runtime._transfers.values()
+               if dst == iid)
+    return exp
+
+
+def check_invariants(runtime, *, streams: bool = True) -> None:
+    """Assert the runtime invariants; raises AssertionError with context.
+    ``streams=False`` skips the O(total-tokens) stream scan for per-step
+    probing of long runs (do a final full check at the end instead)."""
+    pools = runtime.pools
+    strict = isinstance(runtime.clock, VirtualClock)
+
+    # ---- per-instance: lifecycle-vs-work and KV conservation
+    for iid in pools.all_ids():
+        life = pools.lifecycle_of(iid)
+        if life is Lifecycle.FAILED:
+            continue                      # substrate gone; checked via handles
+        loc = runtime.local_of(iid)
+        if life is Lifecycle.WARMING:
+            if loc.prefill_queue or loc.decode_running or loc.migration_queue:
+                _fail(runtime, iid, "WARMING instance holds work")
+        if life is Lifecycle.RETIRING and loc.migration_queue:
+            _fail(runtime, iid, "RETIRING instance has queued migrations")
+        if loc.kv_used < 0:
+            _fail(runtime, iid, f"negative kv_used {loc.kv_used}")
+        exp = _expected_kv(runtime, iid, loc)
+        if loc.kv_used != exp:
+            _fail(runtime, iid,
+                  f"kv_used {loc.kv_used} != reconstructed {exp}")
+
+    # the schedulable sets must never contain a non-ACTIVE instance
+    for ids, name in ((pools.prefill_capable(), "prefill_capable"),
+                      (pools.decode_capable(), "decode_capable"),
+                      (pools.active_ids(), "active_ids")):
+        for iid in ids:
+            if pools.lifecycle_of(iid) is not Lifecycle.ACTIVE:
+                _fail(runtime, iid, f"non-ACTIVE instance in {name}")
+
+    # ---- per-request: placement targets and stream ordering
+    for rid, handle in runtime.handles.items():
+        req = handle.req
+        for attr in ("prefill_instance", "decode_instance"):
+            iid = getattr(req, attr)
+            if iid is None or req.state is RequestState.FINISHED:
+                continue
+            if iid in pools.all_ids() and pools.lifecycle_of(iid) in (
+                    Lifecycle.WARMING, Lifecycle.FAILED):
+                _fail(runtime, iid,
+                      f"live rid {rid} ({req.state.value}) points its "
+                      f"{attr} at a {pools.lifecycle_of(iid).value} instance")
+        if len(handle.tokens) > req.output_len:
+            raise AssertionError(
+                f"rid {rid} streamed {len(handle.tokens)} tokens > "
+                f"output_len {req.output_len}")
+        if req.state is RequestState.FINISHED and \
+                len(handle.tokens) != req.output_len:
+            raise AssertionError(
+                f"rid {rid} finished with {len(handle.tokens)} tokens, "
+                f"expected {req.output_len}")
+        if streams:
+            times = ([req.first_token_time] if req.first_token_time
+                     is not None else []) + list(req.token_times)
+            for a, b in zip(times, times[1:]):
+                if (b < a) or (strict and b <= a):
+                    raise AssertionError(
+                        f"rid {rid} token times not "
+                        f"{'strictly ' if strict else ''}ordered: "
+                        f"{a} then {b}")
+
+    # ---- prefix cache: pin/doom/retained consistency
+    mgr = runtime.prefix_mgr
+    if mgr is not None:
+        for iid, lru in mgr._lru.items():
+            for rid, entry in lru.items():
+                if entry.pins < 0:
+                    _fail(runtime, iid, f"entry ({iid},{rid}) pins < 0")
+                if entry.doomed:
+                    if entry.pins == 0:
+                        _fail(runtime, iid,
+                              f"doomed unpinned entry ({iid},{rid}) not freed")
+                    continue              # KV freed on last unpin
+                if (iid, rid) not in mgr.index.entries:
+                    _fail(runtime, iid,
+                          f"live entry ({iid},{rid}) missing from the trie")
+                alive = iid in pools.all_ids() and \
+                    pools.lifecycle_of(iid) is not Lifecycle.FAILED
+                if not alive:
+                    _fail(runtime, iid,
+                          f"live prefix entry on dead instance ({iid},{rid})")
+                got = runtime.local_of(iid).retained.get(rid)
+                if got != entry.kv_tokens:
+                    _fail(runtime, iid,
+                          f"entry ({iid},{rid}) kv {entry.kv_tokens} != "
+                          f"scheduler retained {got}")
+
+    # ---- migration bookkeeping counters can never underflow
+    for counter, name in ((runtime._kv_outbound, "_kv_outbound"),
+                          (runtime._kv_inbound, "_kv_inbound")):
+        for iid, v in counter.items():
+            if v < 0:
+                _fail(runtime, iid, f"{name} negative ({v})")

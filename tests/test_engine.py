@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from invariants import check_invariants
 
 from repro.configs import get_smoke_config
 from repro.core import Request, SLO
@@ -13,8 +14,10 @@ from repro.models import build_model
 
 # Engine runs are wall-clock driven: on a loaded CI machine jit compiles and
 # cooperative round-robin passes stretch. Budget generously — assertions
-# below are value/ordering based (token ids, monotone times), never exact
-# timings, so a slow machine can only time out, not produce a wrong pass.
+# below are value/ordering based (token ids, monotone times, invariant
+# probes), never exact timings and never absolute-seconds thresholds on the
+# scraped metrics (deflaked in ISSUE 2, re-audited in ISSUE 4), so a slow
+# machine can only time out, not produce a wrong pass.
 DRAIN_TIMEOUT = 300.0
 
 
@@ -153,12 +156,48 @@ def test_cluster_end_to_end_all_finish(setup):
     for sr in out:
         assert sr.req is not None and sr.req.finish_time is not None, sr.rid
         assert len(sr.output_tokens) == sr.max_new_tokens
-        assert sr.req.ttft is not None and sr.req.ttft >= 0
+        # ordering bounds only (wall clock): first token after arrival,
+        # finish after first token — never absolute-seconds thresholds
+        assert sr.req.arrival <= sr.req.first_token_time <= sr.req.finish_time
+    check_invariants(cluster)          # KV books balance after the drain
 
     # engine outputs must equal the single-model greedy reference
     for sr in out[:3]:
         ref = greedy_reference(cfg, model, params, sr.prompt, sr.max_new_tokens)
         assert sr.output_tokens == ref, sr.rid
+
+
+def test_engine_metrics_ordering_bounds_only(setup):
+    """Deflake audit (ISSUE 4 satellite): the engine's scraped metrics are
+    wall-clock and machine-load dependent, so this asserts only orderings,
+    monotonicity and non-negativity — a loaded CI machine shifts the values
+    but cannot break these bounds."""
+    cfg, model, params = setup
+    cluster = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                                 capacity=128, slo=SLO(ttft=5.0, tpot=2.0),
+                                 params=params)
+    times = {}
+    handles = [cluster.submit(Request(rid=i, arrival=0.0, input_len=16,
+                                      output_len=4),
+                              on_token=lambda h, tok, t:
+                              times.setdefault(h.rid, []).append(t))
+               for i in range(4)]
+    report = cluster.drain(timeout=DRAIN_TIMEOUT)
+    assert report.n_finished == 4
+    cluster.collect_stats(cluster.clock.now())
+    for iid in cluster.pools.all_ids():
+        s = cluster.monitor.get(iid)
+        assert s.avg_token_interval >= 0.0          # mean of real durations
+        assert 0 <= s.kv_tokens_used <= s.kv_tokens_capacity
+        assert s.running_tokens >= 0 and s.prefill_backlog_tokens >= 0
+    assert report.duration >= 0.0
+    assert report.scaling["instance_seconds"] >= 0.0
+    for h in handles:                               # stream times monotone
+        ts = times[h.rid]
+        assert len(ts) == h.req.output_len
+        assert all(a <= b for a, b in zip(ts, ts[1:]))
+        assert h.req.ttft is not None and h.req.tpot is not None
+        assert h.req.ttft >= 0.0 and h.req.tpot >= 0.0
 
 
 def test_retire_instance_migrates_resident_kv(setup):
@@ -210,6 +249,7 @@ def test_retire_instance_migrates_resident_kv(setup):
         assert toks == ref, f"rid {h.rid} stream diverged across retirement"
         ts = [t for _, t in events[h.rid]]
         assert all(a <= b for a, b in zip(ts, ts[1:]))  # ordering bound only
+    check_invariants(cluster)
     # a final monitor pass finalizes the drained retirement
     cluster.collect_stats(cluster.clock.now())
     assert victim not in cluster.instances

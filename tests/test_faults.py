@@ -1,0 +1,491 @@
+"""Fault-tolerant serving (ISSUE 4, DESIGN.md §8): FaultPlan grammar, the
+FAILED lifecycle, KV-loss recovery on both backends, migration aborts,
+AutoScaler replacement, the no-recovery strawman, the undispatchable-drain
+error, sim/engine fault parity, and the chaos acceptance run with the
+invariant probe asserted after every step."""
+import numpy as np
+import pytest
+from invariants import check_invariants
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import (AutoScalerConfig, FaultEvent, FaultInjector,
+                        FaultPlan, Lifecycle, Pool, Request, SLO,
+                        UndispatchableError)
+from repro.core.request import RequestState
+from repro.core.serving import replay_trace
+from repro.sim import Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+CFG = get_config("gemma-2b")
+
+
+# ------------------------------------------------------- FaultPlan grammar
+
+
+def test_fault_plan_parse_grammar():
+    p = FaultPlan.parse("crash@20; crash@45:target=3;"
+                        "slow@60:factor=4,duration=10")
+    assert [e.kind for e in p.events] == ["crash", "crash", "slow"]
+    assert p.events[0].target is None and p.events[1].target == 3
+    assert p.events[2].factor == 4.0 and p.events[2].duration == 10.0
+    with pytest.raises(ValueError, match="kind@time"):
+        FaultPlan.parse("crash")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("melt@3")
+    with pytest.raises(ValueError, match="unknown option"):
+        FaultPlan.parse("crash@3:sev=9")
+
+
+def test_fault_plan_random_is_seed_deterministic():
+    a = FaultPlan.random_crashes(3, 100.0, seed=7)
+    b = FaultPlan.random_crashes(3, 100.0, seed=7)
+    c = FaultPlan.random_crashes(3, 100.0, seed=8)
+    assert a.events == b.events and a.events != c.events
+    assert all(10.0 <= e.t <= 90.0 for e in a.events)
+
+
+# ------------------------------------------------- FAILED lifecycle state
+
+
+def test_failed_lifecycle_guards():
+    from repro.core import InstancePools
+    pools = InstancePools(range(4), n_prefill=2)
+    pools.fail(0)                                    # ACTIVE -> FAILED
+    assert pools.lifecycle_of(0) is Lifecycle.FAILED
+    assert 0 not in pools.members(Pool.PREFILL)
+    assert 0 not in pools.prefill_capable() + pools.decode_capable()
+    assert 0 not in pools.active_ids() and 0 in pools.all_ids()
+    assert pools.failed_ids() == [0]
+    with pytest.raises(ValueError, match="already failed"):
+        pools.fail(0)
+    with pytest.raises(ValueError, match="cannot flip"):
+        pools.flip_to_decode(0, has_pending_prefill=False)
+    pools.begin_retire(2)
+    pools.fail(2)                                    # RETIRING may crash too
+    pools.add_instance(9, Pool.DECODE, warming=True)
+    pools.fail(9)                                    # WARMING may crash too
+    for iid in (0, 2, 9):
+        pools.remove_instance(iid)                   # FAILED is removable
+    assert pools.failed_ids() == []
+    with pytest.raises(ValueError, match="unknown instance"):
+        pools.fail(77)
+
+
+# --------------------------------------------------- sim crash + recovery
+
+
+def mid_decode_sim(n_requests=4, output_len=8, **kw):
+    """2-instance arrow sim driven until every request decodes on instance 1
+    with >= 2 tokens streamed and none finished — the deterministic barrier
+    the parity test fires the crash from."""
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), **kw)
+    trace = [Request(rid=i, arrival=0.0, input_len=24, output_len=output_len)
+             for i in range(n_requests)]
+    handles = replay_trace(sim, trace)
+    for _ in range(100000):
+        if all(h.req.state is RequestState.DECODING
+               and h.req.decode_instance == 1
+               and 2 <= len(h.tokens) < output_len for h in handles):
+            break
+        assert sim.step(), "sim drained before the mid-decode barrier"
+    return sim, handles
+
+
+def test_sim_crash_recovers_all_requests_and_streams():
+    sim, handles = mid_decode_sim()
+    emitted_before = {h.rid: len(h.tokens) for h in handles}
+    summary = sim.fail_instance(1, sim.clock.now())
+    assert summary["lost_decode"] == 4 and summary["recovered"] == 4
+    assert sim.pools.lifecycle_of(1) is Lifecycle.FAILED
+    check_invariants(sim)
+    report = sim.drain()
+    assert report.n_finished == 4
+    for h in handles:
+        # nothing re-emitted, nothing dropped: exactly output_len tokens
+        assert len(h.tokens) == h.req.output_len
+        assert h.req.recoveries == 1
+        assert h.req.resumed_tokens == emitted_before[h.rid]
+        # the recovery re-prefilled prompt + streamed-minus-one tokens
+        assert h.req.input_len == 24 + emitted_before[h.rid] - 1
+    assert report.faults["crashes"] == 1
+    assert report.faults["requests_recovered"] == 4
+    assert report.faults["kv_tokens_lost"] > 0
+    check_invariants(sim)
+    sim.collect_stats(sim.clock.now())               # finalize the corpse
+    assert 1 not in sim.pools.all_ids() and 1 not in sim.locals
+
+
+def test_sim_crash_of_prefill_instance_restarts_queued_prefills():
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0))
+    handles = replay_trace(sim, [Request(rid=i, arrival=0.0, input_len=4096,
+                                         output_len=4) for i in range(3)])
+    for _ in range(10000):
+        if sim.locals[0].prefill_queue:
+            break
+        sim.step()
+    assert sim.locals[0].prefill_queue
+    sim.fail_instance(0, sim.clock.now())
+    check_invariants(sim)
+    report = sim.drain()
+    assert report.n_finished == 3
+    for h in handles:
+        assert len(h.tokens) == h.req.output_len
+        assert h.req.input_len == 4096          # no tokens streamed: scratch
+    assert report.faults["requests_recovered"] >= 1
+
+
+def test_crash_aborts_inflight_migrations_and_releases_bookkeeping():
+    """A transfer in the air when its *source* dies loses the data (the
+    request recovers by re-prefill); one toward a dead *destination* still
+    has live KV and re-routes. Either way ``_kv_outbound``/``_kv_inbound``/
+    ``_migrating_from`` are released — the invariant probe checks the books
+    reconcile."""
+    sim = Simulator(CFG, n_instances=3, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0))
+    h = sim.submit(Request(rid=0, arrival=0.0, input_len=512, output_len=4))
+    dst = None
+    for _ in range(100000):
+        alive = sim.step()
+        if h.req.state is RequestState.MIGRATING and 0 in sim._transfers:
+            dst = sim._transfers[0][1]
+            break
+        if not alive:
+            break
+    assert dst is not None, "no in-flight migration window observed"
+    # destination dies mid-air: KV at the source survives, request re-routes
+    kv_resident = sim.locals[dst].kv_used
+    reserved = sim._transfers[0][2]
+    sim.fail_instance(dst, sim.clock.now())
+    assert not sim._kv_inbound.get(dst)
+    if 0 in sim._transfers:                   # already re-routed in the air
+        assert sim._transfers[0][1] != dst
+    # the in-flight reservation is rerouted, not lost: only KV genuinely
+    # resident on the victim counts as destroyed
+    assert sim.report().faults["kv_tokens_lost"] == kv_resident - reserved
+    assert sim.report().faults["migrations_aborted"] == 1
+    check_invariants(sim)
+    report = sim.drain()
+    assert report.n_finished == 1 and len(h.tokens) == 4
+    assert h.req.recoveries == 0              # re-routed, not re-prefilled
+
+    # now the symmetric case: the *source* dies mid-air
+    sim2 = Simulator(CFG, n_instances=3, n_prefill=1, policy="arrow",
+                     slo=SLO(5.0, 2.0))
+    h2 = sim2.submit(Request(rid=0, arrival=0.0, input_len=512, output_len=4))
+    src = None
+    for _ in range(100000):
+        alive = sim2.step()
+        if h2.req.state is RequestState.MIGRATING and 0 in sim2._transfers:
+            src = sim2._transfers[0][0]
+            break
+        if not alive:
+            break
+    assert src is not None
+    sim2.fail_instance(src, sim2.clock.now())
+    assert h2.req.recoveries == 1             # data lost: re-prefilled
+    check_invariants(sim2)
+    report2 = sim2.drain()
+    assert report2.n_finished == 1 and len(h2.tokens) == 4
+
+
+def test_recovery_prefers_surviving_prefix_holder():
+    """§8.2: when the lost context shares a prefix with retained KV on a
+    *surviving* instance, recovery re-prefills only the uncached suffix."""
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), prefix_cache=True)
+    # the parent finishes at prefill (output_len=1), so its context is
+    # retained on the PREFILL-pool instance; the child then prefills there
+    # via §7 affinity but decodes on the other (decode-pool) instance
+    parent = sim.submit(Request(rid=0, arrival=0.0, input_len=128,
+                                output_len=1, session_id=0))
+    child = sim.submit(Request(rid=1, arrival=0.0, input_len=192,
+                               output_len=8, session_id=0, parent_rid=0,
+                               history_len=129))
+    for _ in range(100000):
+        alive = sim.step()
+        if parent.done and child.req.state is RequestState.DECODING and \
+                child.req.decode_instance is not None and \
+                len(child.tokens) >= 2:
+            break
+        if not alive:
+            break
+    holder = parent.req.prefill_instance
+    victim = child.req.decode_instance
+    assert parent.done and victim is not None and victim != holder
+    assert child.req.cached_len > 0, "child did not reuse the parent prefix"
+    assert sim.prefix_mgr.entries_on(holder), "parent prefix not retained"
+    sim.fail_instance(victim, sim.clock.now())
+    assert child.req.recoveries == 1
+    report = sim.drain()
+    assert report.n_finished == 2 and len(child.tokens) == 8
+    # the recovery dispatch hit the surviving holder: only the suffix was
+    # re-prefilled (strictly less than the full recovered context)
+    assert child.req.cached_len > 0
+    assert report.faults["re_prefill_tokens"] == \
+        child.req.input_len - child.req.cached_len
+    check_invariants(sim)
+
+
+def test_prefill_on_retiring_decodes_in_place_when_nothing_active():
+    """Crash takes the last ACTIVE instance while a retiring one is still
+    draining a prefill: decode placement has no schedulable candidate, so
+    the request decodes in place on its (retiring) prefill holder instead
+    of crashing the drain with NoSchedulableInstance."""
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0))
+    h = sim.submit(Request(rid=0, arrival=0.0, input_len=4096, output_len=4))
+    for _ in range(10000):
+        if sim.locals[0].prefill_queue:
+            break
+        sim.step()
+    assert sim.locals[0].prefill_queue
+    sim.begin_retire(0, sim.clock.now())      # prefill drains in place
+    sim.fail_instance(1, sim.clock.now())     # last ACTIVE gone
+    report = sim.drain()
+    assert report.n_finished == 1 and len(h.tokens) == 4
+    assert h.req.decode_instance == 0         # decoded on the retiring holder
+    check_invariants(sim)
+    sim.collect_stats(sim.clock.now())        # fully drained: retire closes
+    assert 0 not in sim.pools.all_ids()
+
+
+def test_autoscaler_spawns_replacement_within_bounds():
+    sim = Simulator(CFG, n_instances=4, n_prefill=2, policy="arrow_elastic",
+                    slo=SLO(3.0, 0.1),
+                    autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                    max_instances=4,
+                                                    warmup_s=2.0))
+    # at the ceiling: a crash frees a seat, so the replacement fits — and
+    # lands in the dead instance's pool
+    sim.fail_instance(0, 0.0)
+    assert sim.report().faults["replacements"] == 1
+    new = [i for i in sim.pools.all_ids()
+           if sim.pools.lifecycle_of(i) is Lifecycle.WARMING]
+    assert len(new) == 1 and sim.pools.pool_of(new[0]) is Pool.PREFILL
+    # every crash frees exactly the seat its replacement takes: live
+    # (non-failed) never exceeds the ceiling
+    sim.fail_instance(1, 0.0)
+    assert sim.report().faults["replacements"] == 2
+    assert len(sim.pools.all_ids()) - len(sim.pools.failed_ids()) <= 4
+    # a crashed WARMING replacement: its pending activation is stale and
+    # must be a no-op, and it must never be counted as capacity again
+    sim.fail_instance(new[0], 0.0)
+    sim.run_until(10.0)                        # activation event fires late
+    assert sim.pools.lifecycle_of(new[0]) is Lifecycle.FAILED  # not activated
+    sim.collect_stats(sim.clock.now())         # monitor tick buries corpses
+    assert new[0] not in sim.pools.all_ids()   # finalized, never activated
+    assert len(sim.pools.all_ids()) - len(sim.pools.failed_ids()) <= 4
+
+
+def test_slowdown_event_stretches_iterations():
+    def run(plan):
+        sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                        slo=SLO(5.0, 2.0), fault_plan=plan)
+        h = sim.submit(Request(rid=0, arrival=0.0, input_len=256,
+                               output_len=32))
+        sim.drain()
+        return sim, h.req.finish_time
+
+    _, base = run(None)
+    slowed, slow_t = run(FaultPlan.parse("slow@0:factor=10,duration=1000"))
+    assert slowed.report().faults["slowdowns"] == 1
+    assert slow_t > 2 * base                   # 10x iterations, same tokens
+
+
+def test_no_recovery_strawman_strands_requests():
+    sim, handles = mid_decode_sim()
+    sim.fail_instance(1, sim.clock.now(), recover=False)
+    report = sim.drain()                       # terminates — nothing hangs
+    assert report.n_finished == 0
+    assert report.faults["requests_lost"] == 4
+    assert report.faults["requests_recovered"] == 0
+    assert all(not h.done for h in handles)
+
+
+# ------------------------------------------ undispatchable drain() error
+
+
+def test_drain_raises_descriptive_error_when_everything_failed():
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(3.0, 0.1))
+    sim.fail_instance(0, 0.0)
+    sim.fail_instance(1, 0.0)
+    sim.submit(Request(rid=7, arrival=0.0, input_len=32, output_len=2))
+    with pytest.raises(UndispatchableError, match=r"\[7\].*2 failed") as ei:
+        sim.drain()
+    assert ei.value.rids == [7]
+
+
+def test_drain_raises_when_every_instance_is_retiring():
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(3.0, 0.1))
+    sim.begin_retire(0, 0.0)
+    sim.begin_retire(1, 0.0)
+    sim.submit(Request(rid=3, arrival=0.0, input_len=32, output_len=2))
+    with pytest.raises(UndispatchableError, match=r"\[3\].*2 retiring"):
+        sim.drain()
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def test_engine_drain_raises_instead_of_spinning_to_timeout(engine_setup):
+    from repro.engine import ArrowEngineCluster
+    cfg, params = engine_setup
+    eng = ArrowEngineCluster(cfg, n_instances=1, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params)
+    eng.fail_instance(0, eng.clock.now())
+    eng.submit(Request(rid=5, arrival=0.0, input_len=16, output_len=2))
+    with pytest.raises(UndispatchableError, match=r"\[5\]"):
+        eng.drain(timeout=300.0)               # raises immediately, no spin
+
+
+# --------------------------------------------------- sim/engine parity
+
+
+def greedy_reference(cfg, model, params, prompt, n_new):
+    import jax
+    import jax.numpy as jnp
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32)[None]}
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_capacity=128))(params, batch)
+    toks = [int(jnp.argmax(logits[0, len(prompt) - 1, :cfg.vocab_size]))]
+    step = jax.jit(model.decode)
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        db = {"token": jnp.asarray([[toks[-1]]], jnp.int32),
+              "pos": jnp.asarray([pos], jnp.int32)}
+        logits, cache = step(params, cache, db)
+        toks.append(int(jnp.argmax(logits[0, 0, :cfg.vocab_size])))
+        pos += 1
+    return toks
+
+
+def test_sim_engine_fault_parity(engine_setup):
+    """Acceptance (ISSUE 4 satellite): the same FaultPlan applied at the
+    same logical point of the same trace loses the same requests on both
+    backends — recovered-rid sets and fault counters match, and the
+    engine's recovered token ids equal the unfaulted greedy reference.
+    (The plan fires through the real FaultInjector at a state barrier —
+    every request mid-decode on instance 1 — because wall-clock timing of
+    the engine makes a purely time-triggered comparison meaningless.)"""
+    from repro.engine import ArrowEngineCluster
+    from repro.models import build_model
+    cfg, params = engine_setup
+    plan = FaultPlan(events=(FaultEvent(t=0.0, kind="crash", target=1),))
+    trace = [Request(rid=i, arrival=0.0, input_len=24, output_len=8)
+             for i in range(3)]
+    rng = np.random.default_rng(2)
+    prompts = {r.rid: rng.integers(1, cfg.vocab_size, size=24).astype(
+        np.int32) for r in trace}
+
+    def drive(system, handles):
+        for _ in range(100000):
+            if all(h.req.state is RequestState.DECODING
+                   and h.req.decode_instance == 1
+                   and 2 <= len(h.tokens) < 8 for h in handles):
+                break
+            assert system.step(), "backend drained before the barrier"
+        FaultInjector(plan, system).poll(system.clock.now())
+        return system.drain(timeout=300.0)
+
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0))
+    h_sim = replay_trace(sim, trace)
+    rep_sim = drive(sim, h_sim)
+
+    eng = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params)
+    h_eng = [eng.submit(Request(rid=r.rid, arrival=0.0, input_len=24,
+                                output_len=8), prompt=prompts[r.rid])
+             for r in trace]
+    rep_eng = drive(eng, h_eng)
+
+    for rep in (rep_sim, rep_eng):
+        assert rep.n_finished == len(trace)
+        assert rep.faults["crashes"] == 1
+        assert rep.faults["requests_recovered"] == len(trace)
+        assert rep.faults["requests_lost"] == 0
+    recovered = lambda hs: sorted(h.rid for h in hs if h.req.recoveries)  # noqa: E731
+    assert recovered(h_sim) == recovered(h_eng) == [0, 1, 2]
+    model = build_model(cfg)
+    for h in h_eng:                        # recovered ids == unfaulted greedy
+        ref = greedy_reference(cfg, model, params, prompts[h.rid], 8)
+        assert [t for t in h.tokens] == ref, f"rid {h.rid} diverged"
+
+
+# --------------------------------------------------- chaos acceptance
+
+
+def test_chaos_sim_spike_two_crashes_goodput_and_invariants():
+    """Acceptance (ISSUE 4): spike trace, two scripted crashes under
+    arrow_elastic — every request completes, the invariant probe never
+    fires across every step, and goodput stays >= 80% of the fault-free
+    run. Fully deterministic (virtual clock, seeded trace/plan)."""
+    p = TRACE_PRESETS["spike"]
+    slo = SLO(p.slo_ttft, p.slo_tpot)
+    trace = load_trace("spike", rate_scale=2.0, seed=0, duration=60)
+
+    def goodput(rep):
+        return sum(1 for h in rep.handles if h.meets_slo()) / \
+            max(rep.duration, 1e-9)
+
+    base = Simulator(CFG, n_instances=6, n_prefill=3, policy="arrow_elastic",
+                     slo=slo,
+                     autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                     max_instances=12))
+    replay_trace(base, trace)
+    rep_base = base.drain()
+    assert rep_base.n_finished == len(trace)
+
+    chaos = Simulator(CFG, n_instances=6, n_prefill=3,
+                      policy="arrow_elastic", slo=slo,
+                      autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                      max_instances=12),
+                      fault_plan=FaultPlan.parse("crash@15;crash@30"))
+    replay_trace(chaos, trace)
+    while chaos.step():
+        check_invariants(chaos, streams=False)   # probe after every step
+    check_invariants(chaos)                      # full probe incl. streams
+    rep = chaos.report()
+    assert rep.n_finished == len(trace), "a request was lost to the crashes"
+    assert rep.faults["crashes"] == 2
+    assert rep.faults["requests_recovered"] >= 1
+    assert rep.faults["replacements"] >= 1
+    assert goodput(rep) >= 0.8 * goodput(rep_base)
+
+
+def test_chaos_engine_timed_plan_streams_match_reference(engine_setup):
+    """Engine chaos: a timed FaultPlan crash lands wherever the wall clock
+    says — greedy content is schedule-independent, so whatever was lost,
+    every recovered stream must equal the unfaulted greedy reference."""
+    from repro.engine import ArrowEngineCluster
+    from repro.models import build_model
+    cfg, params = engine_setup
+    eng = ArrowEngineCluster(cfg, n_instances=3, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params,
+                             fault_plan=FaultPlan.parse("crash@0.5:target=1"))
+    rng = np.random.default_rng(9)
+    prompts = {i: rng.integers(1, cfg.vocab_size, size=20).astype(np.int32)
+               for i in range(4)}
+    handles = [eng.submit(Request(rid=i, arrival=0.0, input_len=20,
+                                  output_len=6), prompt=prompts[i])
+               for i in range(4)]
+    report = eng.drain(timeout=300.0)
+    check_invariants(eng)
+    assert report.n_finished == 4
+    assert report.faults["crashes"] == 1
+    model = build_model(cfg)
+    for h in handles:
+        ref = greedy_reference(cfg, model, params, prompts[h.rid], 6)
+        assert [t for t in h.tokens] == ref, f"rid {h.rid} diverged"
+    eng.collect_stats(eng.clock.now())
+    assert 1 not in eng.instances and 1 not in eng.pools.all_ids()

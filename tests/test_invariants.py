@@ -1,0 +1,113 @@
+"""The reusable invariant probe (tests/invariants.py) asserted after every
+step across seeded random traces on both backends (ISSUE 4 satellite). The
+chaos/fault tests in tests/test_faults.py reuse the same probe under
+injected crashes; here we establish it holds on healthy runs — and that it
+actually *fires* on corrupted state (a probe that can't fail proves
+nothing)."""
+import numpy as np
+import pytest
+from invariants import check_invariants
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import AutoScalerConfig, Request, SLO
+from repro.core.serving import replay_trace
+from repro.sim import Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+CFG = get_config("gemma-2b")
+
+
+def run_probed(sim, trace):
+    replay_trace(sim, trace)
+    steps = 0
+    while sim.step():
+        steps += 1
+        check_invariants(sim, streams=False)   # cheap probe every event
+    check_invariants(sim)                      # full probe incl. streams
+    report = sim.report()
+    assert report.n_finished == len(trace), "trace did not complete"
+    return report
+
+
+def test_sim_invariants_hold_on_random_trace():
+    p = TRACE_PRESETS["azure_code"]
+    trace = load_trace("azure_code", rate_scale=2.0, seed=3, duration=30)
+    sim = Simulator(CFG, n_instances=4, n_prefill=2, policy="arrow",
+                    slo=SLO(p.slo_ttft, p.slo_tpot))
+    run_probed(sim, trace)
+
+
+def test_sim_invariants_hold_under_elastic_scaling():
+    p = TRACE_PRESETS["spike"]
+    trace = load_trace("spike", rate_scale=6.0, seed=0, duration=60)
+    sim = Simulator(CFG, n_instances=3, n_prefill=1, policy="arrow_elastic",
+                    slo=SLO(p.slo_ttft, p.slo_tpot),
+                    autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                    max_instances=10,
+                                                    up_patience=1,
+                                                    cooldown_s=3.0,
+                                                    warmup_s=2.0))
+    rep = run_probed(sim, trace)
+    assert rep.scaling["scale_ups"] >= 1       # the probe saw lifecycle churn
+    assert rep.scaling["scale_downs"] >= 1
+
+
+def test_sim_invariants_hold_with_prefix_cache():
+    p = TRACE_PRESETS["multiturn"]
+    trace = load_trace("multiturn", rate_scale=2.0, seed=1, duration=60)
+    sim = Simulator(CFG, n_instances=4, n_prefill=2, policy="arrow",
+                    slo=SLO(p.slo_ttft, p.slo_tpot), prefix_cache=True)
+    rep = run_probed(sim, trace)
+    assert rep.prefix["hits"] >= 1             # pins/retention were exercised
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def test_engine_invariants_hold_step_by_step(engine_setup):
+    from repro.engine import ArrowEngineCluster
+    cfg, params = engine_setup
+    rng = np.random.default_rng(5)
+    trace = [Request(rid=i, arrival=0.02 * i,
+                     input_len=int(rng.integers(8, 48)),
+                     output_len=int(rng.integers(2, 6)))
+             for i in range(6)]
+    eng = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params)
+    replay_trace(eng, trace)
+    for _ in range(5000):
+        alive = eng.step()
+        check_invariants(eng, streams=False)
+        if not alive:
+            break
+    check_invariants(eng)
+    assert eng.report().n_finished == len(trace)
+
+
+def test_probe_fires_on_corrupted_kv_accounting():
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, slo=SLO(3.0, 0.1))
+    replay_trace(sim, [Request(0, 0.0, 64, 4)])
+    sim.drain()
+    check_invariants(sim)                      # healthy: passes
+    sim.locals[0].kv_used += 7                 # corrupt the books
+    with pytest.raises(AssertionError, match="kv_used"):
+        check_invariants(sim)
+
+
+def test_probe_fires_on_work_on_warming_instance():
+    from repro.core.pools import Pool
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow_elastic",
+                    slo=SLO(3.0, 0.1),
+                    autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                    max_instances=6))
+    iid = sim.scale_up(Pool.PREFILL, 0.0)      # WARMING (modeled delay)
+    check_invariants(sim)
+    sim.locals[iid].enqueue_prefill(99, 32)    # illegal: work while warming
+    with pytest.raises(AssertionError, match="WARMING"):
+        check_invariants(sim)
