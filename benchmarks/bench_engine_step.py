@@ -1,0 +1,146 @@
+"""Engine-step throughput (DESIGN.md §9): the fused+donated per-instance
+step vs the pre-fusion per-rid path.
+
+Both modes replay the *same* burst of mixed prefill+decode work (same seed,
+same prompts, same model params) through a real ArrowEngineCluster on CPU:
+
+  * legacy — the pre-PR path: one jitted decode over a functionally-copied
+    KV cache plus an eager logits fetch per iteration, one jitted call and
+    a host pos_map round-trip per prefill chunk, per-request
+    ``int(jnp.argmax(...))`` syncs at prefill completion.
+  * fused  — the whole LocalScheduler plan (decode batch + every prefill
+    chunk) as ONE jitted call per instance pass with donated KV buffers and
+    a single lazily-fetched token array.
+
+Greedy streams must be bit-identical across the two modes — the speedup is
+pure mechanics, not semantics. Engine tokens/s counts prefill + decoded
+tokens over the serving wall-clock.
+
+CSV contract: name,us_per_call,derived. Full run persists the comparison to
+<repo>/BENCH_engine.json (the start of the engine perf trajectory).
+
+  PYTHONPATH=src python benchmarks/bench_engine_step.py
+  PYTHONPATH=src python benchmarks/bench_engine_step.py --smoke   # CI: docs job
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+if __package__ in (None, ""):       # `python benchmarks/bench_engine_step.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import numpy as np
+
+from benchmarks.common import Timer, emit
+from repro.configs import get_smoke_config
+from repro.core import Request, SLO
+from repro.models import build_model
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def make_workload(cfg, n: int, seed: int = 0):
+    """Mixed prefill+decode burst: prompts 48-96 tokens, 8-24 new tokens."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(1, cfg.vocab_size,
+                              size=int(rng.integers(48, 97))).astype(np.int32)
+        reqs.append((prompt, int(rng.integers(8, 25))))
+    return reqs
+
+
+def run_mode(cfg, params, reqs, mode: str):
+    """One serving run; returns (tokens/s, {rid: stream}, report)."""
+    import jax  # noqa: F401  (engine import path needs the backend up)
+    from repro.engine import ArrowEngineCluster
+
+    cluster = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=8,
+                                 capacity=128, slo=SLO(ttft=5.0, tpot=2.0),
+                                 params=params, chunk_tokens=32,
+                                 step_mode=mode)
+    # warm-up batch: pay every jit compile outside the measured window
+    warm = [cluster.submit(Request(rid=10_000 + i, arrival=0.0,
+                                   input_len=len(p), output_len=m),
+                           prompt=p) for i, (p, m) in enumerate(reqs[:2])]
+    cluster.drain(timeout=300.0)
+    del warm
+    handles = [cluster.submit(Request(rid=i, arrival=0.0, input_len=len(p),
+                                      output_len=m), prompt=p)
+               for i, (p, m) in enumerate(reqs)]
+    with Timer() as t:
+        cluster.drain(timeout=600.0)
+    streams = {h.rid: [tok for tok in h.tokens] for h in handles}
+    tokens = sum(len(p) for p, _ in reqs) + sum(len(s) for s in streams.values())
+    return tokens / max(t.s, 1e-9), streams, tokens
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small run for CI: asserts stream identity and "
+                         "fused tokens/s >= the legacy baseline measured in "
+                         "the same run (relative check, no wall-clock "
+                         "thresholds); skips the JSON artifact")
+    args = ap.parse_args(argv)
+
+    import jax
+    cfg = get_smoke_config(args.arch)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    n = 6 if args.smoke else args.requests
+    reqs = make_workload(cfg, n)
+
+    tps_legacy, streams_legacy, tokens = run_mode(cfg, params, reqs, "legacy")
+    tps_fused, streams_fused, _ = run_mode(cfg, params, reqs, "fused")
+
+    assert streams_fused == streams_legacy, \
+        "fused step changed greedy token streams vs the per-rid baseline"
+    speedup = tps_fused / max(tps_legacy, 1e-9)
+    emit("engine_step_legacy_tokens_per_s", 1e6 / max(tps_legacy, 1e-9),
+         f"{tps_legacy:.1f} tok/s")
+    emit("engine_step_fused_tokens_per_s", 1e6 / max(tps_fused, 1e-9),
+         f"{tps_fused:.1f} tok/s")
+    emit("engine_step_fused_speedup", 0.0, f"{speedup:.2f}x")
+
+    if args.smoke:
+        assert speedup >= 1.0, \
+            f"fused step slower than the per-rid baseline ({speedup:.2f}x)"
+        print("engine-step smoke OK:", f"{speedup:.2f}x", file=sys.stderr)
+        return
+
+    # regression guard only: a loaded/slow box must not abort the whole
+    # benchmark suite (benchmarks/run.py) over a noisy ratio — the recorded
+    # artifact documents the >= 2x result on a quiet machine
+    assert speedup >= 1.0, \
+        f"fused step slower than the per-rid baseline ({speedup:.2f}x)"
+    if speedup < 2.0:
+        print(f"WARNING: speedup {speedup:.2f}x is under the 2x recorded in "
+              f"BENCH_engine.json — noisy machine? re-run quiet before "
+              f"updating the artifact", file=sys.stderr)
+    out = {
+        "workload": {"arch": args.arch, "n_requests": n,
+                     "prompt_tokens": "48-96", "new_tokens": "8-24",
+                     "chunk_tokens": 32, "instances": 2, "n_slots": 8,
+                     "capacity": 128, "seed": 0},
+        "tokens_total": tokens,
+        "legacy_tokens_per_s": round(tps_legacy, 1),
+        "fused_tokens_per_s": round(tps_fused, 1),
+        "speedup": round(speedup, 2),
+        "streams_identical": True,
+        "note": "CPU, interpret-free reference attention both sides; the "
+                "delta is fusion + donation + single lazy token fetch "
+                "(DESIGN.md §9)",
+    }
+    (ROOT / "BENCH_engine.json").write_text(json.dumps(out, indent=1) + "\n")
+    print(f"BENCH_engine.json: {out['legacy_tokens_per_s']} -> "
+          f"{out['fused_tokens_per_s']} tok/s ({out['speedup']}x)",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

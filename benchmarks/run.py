@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   (ours)   bench_elastic           elastic vs static provisioning (DESIGN §6)
   (ours)   bench_prefix            prefix-aware KV reuse on multi-turn (DESIGN §7)
   (ours)   bench_faults            goodput under crashes vs no-recovery (DESIGN §8)
+  (ours)   bench_engine_step       fused+donated engine step vs per-rid path (DESIGN §9)
   (ours)   bench_kernels           Pallas kernels (interpret) vs jnp oracle
   (ours)   roofline                terms from the dry-run records, if present
 """
@@ -23,7 +24,8 @@ def main() -> None:
     duration = "60" if fast else "120"
 
     from benchmarks import (bench_ablation, bench_e2e, bench_elastic,
-                            bench_faults, bench_flip_latency, bench_kernels,
+                            bench_engine_step, bench_faults,
+                            bench_flip_latency, bench_kernels,
                             bench_load_difference, bench_prefix,
                             bench_scalability, bench_trace_stats)
     print("name,us_per_call,derived")
@@ -36,6 +38,7 @@ def main() -> None:
     bench_elastic.main(["--duration", duration])
     bench_prefix.main(["--duration", duration])
     bench_faults.main([])
+    bench_engine_step.main([])
     bench_kernels.main()
     try:
         from benchmarks import roofline

@@ -87,6 +87,12 @@ class ModelConfig:
     hybrid: Optional[HybridConfig] = None
     encoder: Optional[EncoderConfig] = None
     dtype: str = "bfloat16"
+    # Attention implementation on the dense serving path (DESIGN.md §9):
+    # "reference" = pure-jnp sdpa with explicit masks; "pallas" = the
+    # flash_prefill / paged_attention kernels (interpret-mode on CPU,
+    # Mosaic on TPU). The pallas path assumes the serving engine's
+    # contiguously-valid KV prefix contract and no logit_softcap.
+    attn_impl: str = "reference"
     source: str = ""                     # citation
     # Dry-run only: fully unroll the layer scan so compiled.cost_analysis()
     # and the collective-bytes sum count every layer (XLA reports while-loop

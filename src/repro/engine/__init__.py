@@ -1,3 +1,4 @@
 from repro.engine.cluster import ArrowEngineCluster, ServeRequest  # noqa: F401
-from repro.engine.instance import EngineInstance  # noqa: F401
+from repro.engine.instance import (ChunkWork, EngineInstance,  # noqa: F401
+                                   NoFreeSlots)
 from repro.engine.kv_slots import SlotKVCache  # noqa: F401

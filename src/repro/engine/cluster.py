@@ -12,6 +12,12 @@ shared ``RuntimeCore`` (core/runtime.py) — so the engine runs the same
 baseline policies (``colocated``, ``minimal_load``, ...) and replays the same
 traces as the simulator, and streams real token ids through per-request
 ``on_token`` callbacks as they land.
+
+Each cooperative pass is two-phase (DESIGN.md §9): every instance's fused
+step — its full decode batch plus all planned prefill chunks, one jitted
+call with donated KV buffers — is dispatched before any token array is
+fetched, so the instances' device steps overlap and each pays a single
+blocking transfer per pass.
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ from repro.core.prefix_index import content_keys, lineage_keys
 from repro.core.runtime import DecodePlacement, RuntimeCore
 from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
                                 TokenCallback)
-from repro.engine.instance import EngineInstance
+from repro.engine.instance import ChunkWork, EngineInstance, NoFreeSlots
 from repro.models import build_model
 
 
@@ -56,19 +62,22 @@ class ArrowEngineCluster(RuntimeCore):
                  sched_cfg: Optional[SchedulerConfig] = None, seed: int = 0,
                  params=None, chunk_tokens: Optional[int] = None,
                  policy: str = "arrow", autoscaler_cfg=None,
-                 prefix_cache: bool = False, fault_plan=None):
+                 prefix_cache: bool = False, fault_plan=None,
+                 step_mode: str = "fused"):
         import jax
         self.cfg = cfg
         self.capacity = capacity
         self.n_slots = n_slots
         self.chunk_tokens = chunk_tokens
+        self.step_mode = step_mode
         if params is None:
             model = build_model(cfg)
             params = model.init(jax.random.PRNGKey(seed))
         self.params = params           # shared by reference across instances
         self.instances: Dict[int, EngineInstance] = {
             i: EngineInstance(i, cfg, params, n_slots=n_slots,
-                              capacity=capacity, chunk_tokens=chunk_tokens)
+                              capacity=capacity, chunk_tokens=chunk_tokens,
+                              step_mode=step_mode)
             for i in range(n_instances)}
         # real profiling pass on instance 0 (instances are homogeneous here)
         samples = self.instances[0].profile_prefill()
@@ -249,13 +258,16 @@ class ArrowEngineCluster(RuntimeCore):
 
     # ------------------------------------- elastic lifecycle hooks (§6)
     def _create_instance(self, iid: int) -> float:
-        """Spawn a real EngineInstance; params are shared by reference, so
-        the cost is the jit/KV-cache setup — which happens right here, i.e.
-        the warm-up is real elapsed wall-clock, and the instance is ACTIVE
-        the moment construction returns."""
+        """Spawn a real EngineInstance; params are shared by reference and
+        the fused-step jits are module-level keyed on the (hashable) config
+        (DESIGN.md §9), so a spawn starts with a warm jit cache — the cost
+        is the KV-cache allocation, which happens right here, i.e. the
+        warm-up is real elapsed wall-clock, and the instance is ACTIVE the
+        moment construction returns."""
         self.instances[iid] = EngineInstance(
             iid, self.cfg, self.params, n_slots=self.n_slots,
-            capacity=self.capacity, chunk_tokens=self.chunk_tokens)
+            capacity=self.capacity, chunk_tokens=self.chunk_tokens,
+            step_mode=self.step_mode)
         return 0.0
 
     def _destroy_instance(self, iid: int) -> None:
@@ -300,9 +312,17 @@ class ArrowEngineCluster(RuntimeCore):
         # lists — elastic retirement may remove instances mid-pass
         for dst in list(self.instances):
             self.admit_migrations(dst)
-        # one iteration per instance (cooperative round-robin)
+        # one iteration per instance, two-phase (DESIGN.md §9): dispatch
+        # every instance's fused step before fetching any tokens, so the
+        # device-side steps overlap and each instance pays exactly one
+        # blocking transfer per pass
+        dispatched = []
         for iid, inst in list(self.instances.items()):
-            self._step_instance(iid, inst)
+            dispatched.append((iid, inst, self._dispatch_instance(iid, inst)))
+        for iid, inst, ctx in dispatched:
+            if ctx is None or iid not in self.instances:
+                continue
+            self._finalize_instance_step(iid, inst, ctx)
         # monitor tick
         now = self.clock.now()
         if now - self._last_tick >= self.sched_cfg.monitor_interval:
@@ -345,15 +365,62 @@ class ArrowEngineCluster(RuntimeCore):
         return reqs
 
     # ---------------------------------------------------------- internals
-    def _step_instance(self, iid: int, inst: EngineInstance) -> None:
+    def _dispatch_instance(self, iid: int, inst: EngineInstance):
+        """Phase 1: admit the plan's chunks (slot allocation / cached-prefix
+        seeding) and launch the instance's fused step without blocking."""
         plan = inst.local.plan_iteration()
         if plan.is_empty:
-            return
+            return None
         t_start = self.clock.now()
+        chunks = []
+        # the legacy baseline is the *pre-fusion* path faithfully: it
+        # processed at most one prefill chunk per cooperative pass
+        plan_chunks = (plan.prefill_chunks[:1] if self.step_mode == "legacy"
+                       else plan.prefill_chunks)
+        for rid, start, ln in plan_chunks:
+            handle = self._live.get(rid)
+            if handle is None:
+                continue
+            if rid not in inst.kv.slot_of:         # first chunk: need a slot
+                if not inst.kv.free and not (
+                        self.prefix_mgr is not None
+                        and self.prefix_mgr.evict_one(iid) is not None):
+                    continue                       # no slot: retry next round
+                try:
+                    if start > 0:
+                        # prefix reuse (§7): seed the fresh slot with the
+                        # cached prefix, then compute only the suffix chunks
+                        src = self._prefix_src[rid]
+                        inst.begin_cached_prefill(rid, src[1], start)
+                    else:
+                        inst.alloc_slot(rid)
+                except NoFreeSlots:
+                    continue                       # stays queued; retry later
+            prompt = self._prompts[rid]
+            chunks.append(ChunkWork(rid, start, ln,
+                                    prompt[start:start + ln],
+                                    handle.req.input_len))
+        pending = inst.dispatch_step(plan.decode_rids, chunks)
+        if pending is None:
+            return None
+        # t_disp closes this instance's own dispatch span; the finalize span
+        # is measured separately so an instance's iteration duration (the
+        # TPOT signal) and any injected slowdown never absorb the *other*
+        # instances' dispatch/finalize work done in between
+        return pending, chunks, t_start, self.clock.now()
+
+    def _finalize_instance_step(self, iid: int, inst: EngineInstance,
+                                ctx) -> None:
+        """Phase 2: the step's one blocking token fetch + host bookkeeping
+        (stream emission, decode/prefill completion, Eq.(2) resync)."""
+        pending, chunks, t_start, t_disp = ctx
         slow = self.slow_factor(iid, t_start)    # injected lag (§8)
-        # decode batch first
-        done_tokens = inst.run_decode_iteration(plan.decode_rids)
+        t_fin0 = self.clock.now()
+        done_tokens, chunk_tokens = inst.finalize_step(pending)
         t_after = self.clock.now()
+        # this instance's own work: its dispatch span + its blocking fetch
+        # (the device compute overlapped the other instances' phases)
+        span = (t_disp - t_start) + (t_after - t_fin0)
         for rid, tok in done_tokens.items():
             handle = self._live.get(rid)
             if handle is None:
@@ -366,27 +433,17 @@ class ArrowEngineCluster(RuntimeCore):
                 self._live.pop(rid, None)
         if done_tokens:
             self.monitor.record_iteration(iid, t_after, len(done_tokens),
-                                          t_after - t_start)
-        # chunked prefill (§5.4): one chunk per iteration, decode-first batch
-        for rid, start, ln in plan.prefill_chunks[:1]:
-            handle = self._live.get(rid)
+                                          span)
+        # chunked prefill (§5.4): the fused step ran *every* chunk of the
+        # plan; finalize_step reports them in dispatch order
+        by_rid = dict(chunk_tokens)
+        for cw in chunks:
+            handle = self._live.get(cw.rid)
             if handle is None:
                 continue
-            if rid not in inst.kv.slot_of:         # first chunk: need a slot
-                if not inst.kv.free and not (
-                        self.prefix_mgr is not None
-                        and self.prefix_mgr.evict_one(iid) is not None):
-                    continue                       # no slot: retry next round
-                if start > 0:
-                    # prefix reuse (§7): seed the fresh slot with the cached
-                    # prefix, then compute only the suffix chunks
-                    src = self._prefix_src[rid]
-                    inst.begin_cached_prefill(rid, src[1], start)
-            prompt = self._prompts[rid]
-            tok = inst.run_prefill_chunk(rid, prompt[start:start + ln],
-                                         start, handle.req.input_len)
+            tok = by_rid.get(cw.rid)
             t_fin = self.clock.now()
-            inst.local.complete_prefill_chunk(rid, ln)
+            inst.local.complete_prefill_chunk(cw.rid, cw.length)
             if tok is None:                        # more chunks to go
                 continue
             # (the prompt stays resident until finish — crash recovery §8
@@ -401,10 +458,11 @@ class ArrowEngineCluster(RuntimeCore):
             if placement is DecodePlacement.FINISHED:
                 # release the prefill's kv_used accounting (mirror of the
                 # sim path); a retained prefix re-added its own tokens
-                inst.local.release_prefill_kv(rid, handle.req.input_len)
-                if rid not in inst.local.retained:
-                    inst.drop(rid)
-                self._live.pop(rid, None)
+                inst.local.release_prefill_kv(cw.rid, handle.req.input_len)
+                if cw.rid not in inst.local.retained:
+                    inst.drop(cw.rid)
+                self._live.pop(cw.rid, None)
         if slow > 1.0:                           # lagging instance (§8)
             time.sleep(min((slow - 1.0)
-                           * max(self.clock.now() - t_start, 0.0), 0.25))
+                           * max(self.clock.now() - t_fin0 + (t_disp - t_start),
+                                 0.0), 0.25))

@@ -1,0 +1,125 @@
+"""Fused per-instance engine step: one jitted call with donated KV buffers
+(DESIGN.md §9).
+
+Every function here takes the ``ModelConfig`` as a *static* jit argument
+(it is a frozen, hashable dataclass), so traces are shared across all
+``EngineInstance``s of a cluster — and across clusters — instead of each
+instance re-jitting its own closures. An elastic spawn (§6) therefore
+starts with a warm jit cache.
+
+The SlotKVCache slabs (``k``, ``v``, ``pos_map``) are **donated**: XLA
+aliases them with the corresponding outputs, so the multi-MB cache updates
+in place every step instead of being functionally copied. Callers must
+immediately replace their references with the returned slabs
+(``SlotKVCache.swap``) — the donated inputs are dead after the call.
+
+Token selection (greedy argmax) stays on device; each entry point returns a
+single stacked int32 token array per step, which the instance fetches with
+one blocking transfer at finalize time so concurrent instances' steps
+overlap.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import dense
+
+
+def _decode_core(cfg, params, k, v, pos_map, tokens, pos):
+    """Batched decode over every slot (active rows carry real tokens,
+    parked slots get the dummy write at their own next position — see
+    EngineInstance.dispatch_step). Returns per-slot argmax tokens."""
+    x = dense.embed_tokens(cfg, params, tokens)
+    logits, cache = dense.decode_step(
+        cfg, params, {"k": k, "v": v, "pos_map": pos_map}, x, pos)
+    toks = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1).astype(jnp.int32)
+    return toks, cache["k"], cache["v"], cache["pos_map"]
+
+
+def _chunk_scan(cfg, params, k, v, pos_map, toks, slots, offsets, lens):
+    """Run every prefill chunk of the plan against its own slot, scanned
+    sequentially inside the jit (chunks target distinct slots, so the order
+    only matters vs the decode dummy-writes, which ran first). ``toks`` is
+    (N, Sq) bucket-padded chunk tokens; ``slots``/``offsets``/``lens`` are
+    (N,) i32. Pad-position invalidation is folded in here — no host copy of
+    the pos_map remains (ISSUE 5 satellite). Returns the per-chunk argmax
+    at each chunk's last real token (meaningful only for final chunks; the
+    host decides which)."""
+    C = pos_map.shape[1]
+    Sq = toks.shape[1]
+    idx = jnp.arange(C, dtype=jnp.int32)
+
+    def body(carry, xs):
+        k, v, pos_map = carry
+        t, s, off, ln = xs
+        x = dense.embed_tokens(cfg, params, t[None])
+        sub = {"k": lax.dynamic_slice_in_dim(k, s, 1, 1),
+               "v": lax.dynamic_slice_in_dim(v, s, 1, 1),
+               "pos_map": lax.dynamic_slice_in_dim(pos_map, s, 1, 0)}
+        logits, sub = dense.prefill_chunk(cfg, params, sub, x, off)
+        # bucket padding [off+ln, off+Sq) never becomes valid KV
+        row = jnp.where((idx >= off + ln) & (idx < off + Sq), -1,
+                        sub["pos_map"][0])
+        k = lax.dynamic_update_slice_in_dim(k, sub["k"], s, 1)
+        v = lax.dynamic_update_slice_in_dim(v, sub["v"], s, 1)
+        pos_map = lax.dynamic_update_slice_in_dim(pos_map, row[None], s, 0)
+        tok = jnp.argmax(lax.dynamic_index_in_dim(
+            logits[0, :, :cfg.vocab_size], jnp.maximum(ln - 1, 0), 0,
+            keepdims=False)).astype(jnp.int32)
+        return (k, v, pos_map), tok
+
+    (k, v, pos_map), ctoks = lax.scan(body, (k, v, pos_map),
+                                      (toks, slots, offsets, lens))
+    return ctoks, k, v, pos_map
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
+def decode_only(cfg, params, k, v, pos_map, tokens, pos):
+    """Decode batch, no prefill chunks. -> ((B,) tokens, k, v, pos_map)."""
+    return _decode_core(cfg, params, k, v, pos_map, tokens, pos)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
+def chunks_only(cfg, params, k, v, pos_map, toks, slots, offsets, lens):
+    """Prefill chunks, no decode. -> ((N,) tokens, k, v, pos_map)."""
+    return _chunk_scan(cfg, params, k, v, pos_map, toks, slots, offsets, lens)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
+def mixed_step(cfg, params, k, v, pos_map, tokens, pos, toks, slots, offsets,
+               lens):
+    """The LocalScheduler's full mixed plan — decode batch first (matching
+    the pre-fusion execution order, so parked-slot dummy writes land before
+    chunks overwrite them), then every prefill chunk — as ONE jitted call.
+    -> ((B+N,) stacked tokens, k, v, pos_map)."""
+    dtoks, k, v, pos_map = _decode_core(cfg, params, k, v, pos_map, tokens,
+                                        pos)
+    ctoks, k, v, pos_map = _chunk_scan(cfg, params, k, v, pos_map, toks,
+                                       slots, offsets, lens)
+    return jnp.concatenate([dtoks, ctoks]), k, v, pos_map
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
+def prefill_place(cfg, params, k, v, pos_map, tokens, slot, length):
+    """Whole-prompt prefill fused with the slot placement that previously
+    ran as host-level ``.at[].set`` copies: forward the padded prompt,
+    write its KV into ``slot``, select o_1 — one call, donated buffers.
+    -> (o_1 token scalar, k, v, pos_map)."""
+    C = k.shape[2]
+    S = tokens.shape[0]
+    x = dense.embed_tokens(cfg, params, tokens[None])
+    logits, cache = dense.forward_seq(cfg, params, x, jnp.arange(S),
+                                      cache_capacity=C)
+    k = lax.dynamic_update_slice(k, cache["k"][:, :1], (0, slot, 0, 0, 0))
+    v = lax.dynamic_update_slice(v, cache["v"][:, :1], (0, slot, 0, 0, 0))
+    idx = jnp.arange(C, dtype=jnp.int32)
+    row = jnp.where(idx < length, idx, -1)
+    pos_map = lax.dynamic_update_slice_in_dim(pos_map, row[None], slot, 0)
+    tok = jnp.argmax(lax.dynamic_index_in_dim(
+        logits[0, :, :cfg.vocab_size], jnp.maximum(length - 1, 0), 0,
+        keepdims=False)).astype(jnp.int32)
+    return tok, k, v, pos_map

@@ -1,11 +1,24 @@
 """A stateless engine instance: real JAX compute (dense-family models), a
 slot-granular KV cache and the Arrow local scheduler. "Stateless" in the
 paper's sense — the instance carries no prefill/decode role; it executes
-whatever sub-requests the global scheduler hands it."""
+whatever sub-requests the global scheduler hands it.
+
+Execution model (DESIGN.md §9): the LocalScheduler's mixed plan — the full
+decode batch plus every prefill chunk — runs as ONE jitted call with
+donated KV buffers (``repro.engine.fused_step``). ``dispatch_step`` launches
+the call and returns immediately with the device-side token array;
+``finalize_step`` performs the step's single blocking transfer and advances
+the host bookkeeping, so a cluster can dispatch every instance before
+fetching any — instances' steps overlap. ``step_mode="legacy"`` preserves
+the pre-fusion per-rid path (per-request ``int(jnp.argmax(...))`` syncs,
+functional cache copies, host pos_map round-trips) as the benchmark
+baseline (benchmarks/bench_engine_step.py).
+"""
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,22 +26,87 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.local_scheduler import LocalScheduler
+from repro.engine import fused_step as fs
 from repro.engine.kv_slots import SlotKVCache
 from repro.models import build_model
+
+
+class NoFreeSlots(RuntimeError):
+    """Typed admission failure: the slot cache is full. Raised instead of
+    the old ``assert slot is not None`` crash so callers (the cluster, the
+    profiler) can keep the request queued and retry once a slot frees or a
+    retained prefix is evicted."""
+
+    def __init__(self, iid: int, rid: int):
+        super().__init__(f"instance {iid}: no free KV slot for rid {rid}")
+        self.iid = iid
+        self.rid = rid
+
+
+@dataclass
+class ChunkWork:
+    """One prefill chunk of a fused step."""
+
+    rid: int
+    offset: int
+    length: int               # real tokens in the chunk
+    tokens: np.ndarray        # the chunk's token ids, shape (length,)
+    total_len: int            # the request's full prompt length
+
+
+class PendingStep:
+    """A dispatched step whose token array still lives on device. Groups
+    are (chunks, device_tokens) pairs: the first carries the decode batch's
+    per-slot tokens stacked ahead of its chunk tokens. ``fetch`` is the
+    step's one blocking transfer."""
+
+    def __init__(self, decode_rids: List[int],
+                 groups: List[Tuple[List[ChunkWork], Any]]):
+        self.decode_rids = decode_rids
+        self.groups = groups
+
+    def fetch(self) -> List[np.ndarray]:
+        parts = [arr for _, arr in self.groups]
+        if len(parts) == 1:
+            return [np.asarray(parts[0])]
+        # several padded-width groups: concatenate on device so the step
+        # still pays exactly one blocking transfer
+        flat = np.asarray(jnp.concatenate(parts))
+        out, i = [], 0
+        for p in parts:
+            out.append(flat[i:i + p.shape[0]])
+            i += p.shape[0]
+        return out
+
+
+class _EagerStep:
+    """Legacy-mode stand-in: results were computed synchronously."""
+
+    def __init__(self, decode_out: Dict[int, int],
+                 chunk_out: List[Tuple[int, Optional[int]]]):
+        self.decode_out = decode_out
+        self.chunk_out = chunk_out
+
+
+def _bucket32(n: int, cap: int) -> int:
+    return min(-(-n // 32) * 32, cap)
 
 
 class EngineInstance:
     def __init__(self, iid: int, cfg: ModelConfig, params, *,
                  n_slots: int = 8, capacity: int = 256,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 step_mode: str = "fused"):
         assert cfg.family in ("dense",), \
             "real engine path supports dense-family; other families are " \
             "served via the simulator cost model (DESIGN.md §2)"
+        assert step_mode in ("fused", "legacy"), step_mode
         self.iid = iid
         self.cfg = cfg
         self.params = params
         self.model = build_model(cfg)
         self.capacity = capacity
+        self.step_mode = step_mode
         self.kv = SlotKVCache(cfg.n_layers, n_slots, capacity,
                               cfg.n_kv_heads, cfg.head_dim_,
                               jnp.dtype(cfg.dtype))
@@ -36,31 +114,50 @@ class EngineInstance:
             iid, token_budget=chunk_tokens or capacity,
             mixed_chunk_budget=chunk_tokens or 2048,
             kv_capacity_tokens=n_slots * capacity)
-        self._prefill_fn = jax.jit(
-            lambda p, b: self.model.prefill(p, b, cache_capacity=capacity))
-        self._decode_fn = jax.jit(self.model.decode)
-        from repro.models import dense as _dense
-        self._chunk_fn = jax.jit(
-            lambda p, cache, x, off: _dense.prefill_chunk(cfg, p, cache, x, off))
+        if step_mode == "legacy":
+            # pre-fusion per-instance jits (the benchmark baseline)
+            self._prefill_fn = jax.jit(
+                lambda p, b: self.model.prefill(p, b, cache_capacity=capacity))
+            self._decode_fn = jax.jit(self.model.decode)
+            from repro.models import dense as _dense
+            self._chunk_fn = jax.jit(
+                lambda p, cache, x, off: _dense.prefill_chunk(cfg, p, cache,
+                                                              x, off))
         # request bookkeeping
         self.last_token: Dict[int, int] = {}
         self.generated: Dict[int, List[int]] = {}
 
+    # ------------------------------------------------------------- slots
+    def alloc_slot(self, rid: int) -> int:
+        slot = self.kv.alloc(rid)
+        if slot is None:
+            raise NoFreeSlots(self.iid, rid)
+        return slot
+
     # ----------------------------------------------------------- prefill
     def run_prefill(self, rid: int, prompt: np.ndarray) -> int:
         """Whole-prompt prefill; returns the first output token (o_1).
-        Prompts are right-padded to 32-token buckets so jit traces are reused
-        across lengths (causal masking keeps the live positions exact)."""
+        Prompts are right-padded to 32-token buckets so jit traces are
+        reused across lengths (causal masking keeps the live positions
+        exact). Raises :class:`NoFreeSlots` when the cache is full."""
         S = len(prompt)
-        S_pad = min(-(-S // 32) * 32, self.capacity)
+        S_pad = _bucket32(S, self.capacity)
         padded = np.zeros((S_pad,), np.int32)
         padded[:S] = prompt
-        batch = {"tokens": jnp.asarray(padded)[None]}
-        logits, cache = self._prefill_fn(self.params, batch)
-        slot = self.kv.alloc(rid)
-        assert slot is not None, "no free KV slots"
-        self.kv.place(rid, cache["k"][:, 0], cache["v"][:, 0], S)
-        tok = int(jnp.argmax(logits[0, S - 1, :self.cfg.vocab_size]))
+        self.alloc_slot(rid)
+        if self.step_mode == "legacy":
+            batch = {"tokens": jnp.asarray(padded)[None]}
+            logits, cache = self._prefill_fn(self.params, batch)
+            self.kv.place(rid, cache["k"][:, 0], cache["v"][:, 0], S)
+            tok = int(jnp.argmax(logits[0, S - 1, :self.cfg.vocab_size]))
+        else:
+            s = self.kv.slot_of[rid]
+            tok_arr, k, v, pm = fs.prefill_place(
+                self.cfg, self.params, *self.kv.slabs(),
+                jnp.asarray(padded), s, S)
+            self.kv.swap(k, v, pm)
+            self.kv.len_of[rid] = S
+            tok = int(tok_arr)
         self.last_token[rid] = tok
         self.generated[rid] = [tok]
         return tok
@@ -69,61 +166,162 @@ class EngineInstance:
                              cached_len: int) -> None:
         """Prefix reuse (DESIGN.md §7): seed ``rid``'s slot with the first
         ``cached_len`` positions of ``src_rid``'s retained KV; subsequent
-        ``run_prefill_chunk`` calls start at ``offset == cached_len``."""
-        slot = self.kv.alloc(rid)
-        assert slot is not None, "no free KV slots for cached prefill"
+        chunks start at ``offset == cached_len``."""
+        self.alloc_slot(rid)
         self.kv.copy_prefix(src_rid, rid, cached_len)
 
     def run_prefill_chunk(self, rid: int, chunk: np.ndarray, offset: int,
                           total_len: int) -> Optional[int]:
         """Chunked prefill (§5.4): process prompt tokens [offset, offset+len)
         against this request's slot cache. Returns o_1 on the final chunk,
-        else None. Chunk lengths are bucketed to 32 for jit reuse."""
-        from repro.models import dense as _dense
-        if offset == 0:
-            slot = self.kv.alloc(rid)
-            assert slot is not None, "no free KV slots"
-        s = self.kv.slot_of[rid]
-        ln = len(chunk)
-        ln_pad = min(-(-ln // 32) * 32, self.capacity - offset)
-        padded = np.zeros((ln_pad,), np.int32)
-        padded[:ln] = chunk
-        x = _dense.embed_tokens(self.cfg, self.params,
-                                jnp.asarray(padded)[None])
-        sub = {"k": self.kv.k[:, s:s + 1], "v": self.kv.v[:, s:s + 1],
-               "pos_map": self.kv.pos_map[s:s + 1]}
-        logits, sub = self._chunk_fn(self.params, sub, x,
-                                     jnp.int32(offset))
-        # write back; invalidate pad positions in the pos_map
-        pm = np.array(sub["pos_map"][0])          # writable copy
-        pm[offset + ln: offset + ln_pad] = -1
-        self.kv.k = self.kv.k.at[:, s].set(sub["k"][:, 0])
-        self.kv.v = self.kv.v.at[:, s].set(sub["v"][:, 0])
-        self.kv.pos_map = self.kv.pos_map.at[s].set(jnp.asarray(pm))
-        # progress marker (also keeps the batched dummy-write in
-        # run_decode_iteration aimed at the next — about to be overwritten —
-        # position while this request is mid-prefill)
-        self.kv.len_of[rid] = offset + ln
-        if offset + ln >= total_len:
-            self.kv.len_of[rid] = total_len
-            tok = int(jnp.argmax(logits[0, ln - 1, :self.cfg.vocab_size]))
-            self.last_token[rid] = tok
-            self.generated[rid] = [tok]
-            return tok
-        return None
+        else None. (Single-chunk convenience over dispatch/finalize.)"""
+        if rid not in self.kv.slot_of:
+            if offset != 0:
+                # a mid-prompt chunk against an unseeded slot would attend
+                # garbage — fail loudly (seed via begin_cached_prefill or
+                # earlier chunks), matching the pre-fusion KeyError
+                raise KeyError(
+                    f"rid {rid} has no KV slot at chunk offset {offset}")
+            self.alloc_slot(rid)
+        cw = ChunkWork(rid, offset, len(chunk),
+                       np.asarray(chunk, np.int32), total_len)
+        pending = self.dispatch_step([], [cw])
+        _, chunk_out = self.finalize_step(pending)
+        return chunk_out[0][1]
 
     # ------------------------------------------------------------ decode
     def run_decode_iteration(self, rids: List[int]) -> Dict[int, int]:
-        """One token for each running request. Returns rid -> token."""
+        """One token for each running request. Returns rid -> token.
+        (Decode-only convenience over dispatch/finalize.)"""
         if not rids:
             return {}
+        pending = self.dispatch_step(list(rids), [])
+        decode_out, _ = self.finalize_step(pending)
+        return decode_out
+
+    # ------------------------------------------------------- fused step
+    def dispatch_step(self, decode_rids: List[int],
+                      chunks: Sequence[ChunkWork]):
+        """Launch this instance's whole iteration — the decode batch plus
+        every prefill chunk — on device and return without blocking. The
+        KV slabs are donated into the call and swapped for the aliased
+        outputs immediately; token ids stay on device until
+        :meth:`finalize_step`."""
+        if not decode_rids and not chunks:
+            return None
+        if self.step_mode == "legacy":
+            return self._legacy_step(decode_rids, chunks)
+        dec_args = None
+        if decode_rids:
+            B = self.kv.n_slots
+            tokens = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            # Inactive-but-occupied slots (e.g. parked awaiting migration)
+            # still get a batched dummy write; aim it at the slot's own next
+            # position, which any real future decode/chunk overwrites before
+            # attending to it.
+            for rid, s in self.kv.slot_of.items():
+                pos[s] = min(self.kv.len_of.get(rid, 0), self.capacity - 1)
+            for rid in decode_rids:
+                s = self.kv.slot_of[rid]
+                tokens[s, 0] = self.last_token[rid]
+                pos[s] = self.kv.len_of[rid]
+            dec_args = (jnp.asarray(tokens), jnp.asarray(pos))
+        groups: List[Tuple[List[ChunkWork], Any]] = []
+        for gi, (Sq, group) in enumerate(self._group_chunks(chunks)):
+            n = len(group)
+            ctoks = np.zeros((n, Sq), np.int32)
+            slots = np.zeros((n,), np.int32)
+            offsets = np.zeros((n,), np.int32)
+            lens = np.zeros((n,), np.int32)
+            for i, cw in enumerate(group):
+                ctoks[i, :cw.length] = cw.tokens
+                slots[i] = self.kv.slot_of[cw.rid]
+                offsets[i] = cw.offset
+                lens[i] = cw.length
+            c_args = (jnp.asarray(ctoks), jnp.asarray(slots),
+                      jnp.asarray(offsets), jnp.asarray(lens))
+            if gi == 0 and dec_args is not None:
+                toks, k, v, pm = fs.mixed_step(
+                    self.cfg, self.params, *self.kv.slabs(), *dec_args,
+                    *c_args)
+            else:
+                toks, k, v, pm = fs.chunks_only(
+                    self.cfg, self.params, *self.kv.slabs(), *c_args)
+            self.kv.swap(k, v, pm)
+            groups.append((group, toks))
+        if not groups and dec_args is not None:
+            toks, k, v, pm = fs.decode_only(
+                self.cfg, self.params, *self.kv.slabs(), *dec_args)
+            self.kv.swap(k, v, pm)
+            groups.append(([], toks))
+        return PendingStep(list(decode_rids), groups)
+
+    def finalize_step(self, pending) -> Tuple[Dict[int, int],
+                                              List[Tuple[int, Optional[int]]]]:
+        """Fetch the step's stacked token array (the one blocking transfer)
+        and advance host bookkeeping. Returns (decode rid->token, per-chunk
+        (rid, o_1|None) in dispatch order)."""
+        if pending is None:
+            return {}, []
+        if isinstance(pending, _EagerStep):
+            return pending.decode_out, pending.chunk_out
+        decode_out: Dict[int, int] = {}
+        chunk_out: List[Tuple[int, Optional[int]]] = []
+        arrays = pending.fetch()
+        for gi, ((group, _), a) in enumerate(zip(pending.groups, arrays)):
+            base = 0
+            if gi == 0 and pending.decode_rids:
+                for rid in pending.decode_rids:
+                    s = self.kv.slot_of[rid]
+                    tok = int(a[s])
+                    self.kv.advance(rid)
+                    self.last_token[rid] = tok
+                    self.generated[rid].append(tok)
+                    decode_out[rid] = tok
+                base = self.kv.n_slots
+            for i, cw in enumerate(group):
+                end = cw.offset + cw.length
+                if end >= cw.total_len:
+                    self.kv.len_of[cw.rid] = cw.total_len
+                    tok = int(a[base + i])
+                    self.last_token[cw.rid] = tok
+                    self.generated[cw.rid] = [tok]
+                    chunk_out.append((cw.rid, tok))
+                else:
+                    self.kv.len_of[cw.rid] = end
+                    chunk_out.append((cw.rid, None))
+        return decode_out, chunk_out
+
+    def _group_chunks(self, chunks: Sequence[ChunkWork]
+                      ) -> List[Tuple[int, List[ChunkWork]]]:
+        """Group the plan's chunks by padded width so each group scans with
+        one static shape. A chunk's width is its 32-bucket clipped to the
+        slot tail (offset + width <= capacity), so the in-jit
+        dynamic_update_slice can never clamp; in the common case every
+        chunk shares one bucket and the step is a single call."""
+        by_w: Dict[int, List[ChunkWork]] = {}
+        for cw in chunks:
+            w = min(_bucket32(cw.length, self.capacity),
+                    self.capacity - cw.offset)
+            by_w.setdefault(w, []).append(cw)
+        return [(w, g) for w, g in by_w.items()]
+
+    # -------------------------------------------------- legacy baseline
+    def _legacy_step(self, decode_rids: List[int],
+                     chunks: Sequence[ChunkWork]) -> _EagerStep:
+        decode_out = self._legacy_decode(decode_rids) if decode_rids else {}
+        chunk_out = [(cw.rid, self._legacy_chunk(cw)) for cw in chunks]
+        return _EagerStep(decode_out, chunk_out)
+
+    def _legacy_decode(self, rids: List[int]) -> Dict[int, int]:
+        """Pre-fusion decode, kept verbatim as the bench baseline: the
+        full-cache functional copy (no donation) plus an eager logits
+        fetch per iteration."""
         B = self.kv.n_slots
         tokens = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
-        # Inactive-but-occupied slots (e.g. parked awaiting migration) still
-        # get a batched dummy write; aim it at the slot's own next position,
-        # which any real future decode overwrites before attending to it.
         for rid, s in self.kv.slot_of.items():
             pos[s] = min(self.kv.len_of.get(rid, 0), self.capacity - 1)
         for rid in rids:
@@ -136,7 +334,8 @@ class EngineInstance:
                                         self.kv.as_model_cache(), batch)
         self.kv.update_from_model_cache(cache)
         out: Dict[int, int] = {}
-        arg = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size], axis=-1))
+        arg = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size],
+                                    axis=-1))
         for rid in rids:
             s = self.kv.slot_of[rid]
             tok = int(arg[s])
@@ -146,17 +345,51 @@ class EngineInstance:
             out[rid] = tok
         return out
 
+    def _legacy_chunk(self, cw: ChunkWork) -> Optional[int]:
+        """Pre-fusion chunked prefill: per-chunk host pos_map round-trip
+        (writable np copy + three ``.at[].set`` writes back)."""
+        from repro.models import dense as _dense
+        rid, offset, ln = cw.rid, cw.offset, cw.length
+        s = self.kv.slot_of[rid]
+        ln_pad = min(-(-ln // 32) * 32, self.capacity - offset)
+        padded = np.zeros((ln_pad,), np.int32)
+        padded[:ln] = cw.tokens
+        x = _dense.embed_tokens(self.cfg, self.params,
+                                jnp.asarray(padded)[None])
+        sub = {"k": self.kv.k[:, s:s + 1], "v": self.kv.v[:, s:s + 1],
+               "pos_map": self.kv.pos_map[s:s + 1]}
+        logits, sub = self._chunk_fn(self.params, sub, x, jnp.int32(offset))
+        # write back; invalidate pad positions in the pos_map
+        pm = np.array(sub["pos_map"][0])          # writable copy
+        pm[offset + ln: offset + ln_pad] = -1
+        self.kv.k = self.kv.k.at[:, s].set(sub["k"][:, 0])
+        self.kv.v = self.kv.v.at[:, s].set(sub["v"][:, 0])
+        self.kv.pos_map = self.kv.pos_map.at[s].set(jnp.asarray(pm))
+        self.kv.len_of[rid] = offset + ln
+        if offset + ln >= cw.total_len:
+            self.kv.len_of[rid] = cw.total_len
+            tok = int(jnp.argmax(logits[0, ln - 1, :self.cfg.vocab_size]))
+            self.last_token[rid] = tok
+            self.generated[rid] = [tok]
+            return tok
+        return None
+
     # --------------------------------------------------------- transfer
     def export_kv(self, rid: int):
         k, v, L = self.kv.extract(rid)
-        return np.asarray(k), np.asarray(v), L, self.last_token[rid], \
-            self.generated[rid]
+        return k, v, L, self.last_token[rid], self.generated[rid]
 
     def import_kv(self, rid: int, k, v, L: int, last_token: int,
                   generated: List[int]) -> bool:
-        slot = self.kv.alloc(rid)
-        if slot is None:
+        if self.kv.alloc(rid) is None:
             return False
+        # bucket-pad the context so the jitted place sees few shapes
+        k = np.asarray(k)
+        v = np.asarray(v)
+        S_pad = _bucket32(k.shape[1], self.capacity)
+        if k.shape[1] < S_pad:
+            pad = [(0, 0), (0, S_pad - k.shape[1]), (0, 0), (0, 0)]
+            k, v = np.pad(k, pad), np.pad(v, pad)
         self.kv.place(rid, jnp.asarray(k), jnp.asarray(v), L)
         self.last_token[rid] = last_token
         self.generated[rid] = list(generated)
@@ -171,7 +404,10 @@ class EngineInstance:
     def profile_prefill(self, lengths=(16, 32, 64, 128)) -> List[Tuple[int, float]]:
         """Real wall-clock profiling pass for the TTFT predictor (paper §5.3:
         'profiles each instance's prefill processing capability when the
-        cluster is first launched')."""
+        cluster is first launched'). Raises :class:`NoFreeSlots` when asked
+        to profile an instance whose slot cache is already full."""
+        if not self.kv.free:
+            raise NoFreeSlots(self.iid, -1)
         samples = []
         for L in lengths:
             if L > self.capacity:

@@ -5,13 +5,64 @@ Layout mirrors the model cache ({"k","v": (L, B_slots, C, Hk, D), "pos_map":
 engine's unit of admission (the Pallas paged_attention kernel gives the
 page-granular variant; at engine scale on CPU, slot granularity keeps the
 JAX arrays static-shaped while remaining a faithful continuous-batching
-memory manager)."""
+memory manager).
+
+All mutating slot operations (place / copy_prefix / release) are jitted
+module-level functions with **donated** slab arguments, so they update the
+cache buffers in place instead of the host-level ``.at[].set`` full-array
+copies they replaced (DESIGN.md §9). ``extract`` stacks k and v into one
+device array so a KV export costs a single blocking transfer.
+"""
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _kv_place(k, v, pos_map, k_seq, v_seq, slot, length):
+    """Write k_seq/v_seq (L, S, Hk, D), S <= C, into ``slot``; positions
+    [length, C) are marked invalid (S may exceed ``length`` by padding)."""
+    k = lax.dynamic_update_slice(k, k_seq[:, None], (0, slot, 0, 0, 0))
+    v = lax.dynamic_update_slice(v, v_seq[:, None], (0, slot, 0, 0, 0))
+    idx = jnp.arange(pos_map.shape[1], dtype=jnp.int32)
+    row = jnp.where(idx < length, idx, -1)
+    pos_map = lax.dynamic_update_slice_in_dim(pos_map, row[None], slot, 0)
+    return k, v, pos_map
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _kv_copy_prefix(k, v, pos_map, src, dst, length):
+    """Duplicate ``src``'s slot into ``dst``; only [0, length) becomes
+    valid (the copied tail beyond ``length`` is masked garbage that the
+    suffix chunks overwrite)."""
+    k = lax.dynamic_update_slice_in_dim(
+        k, lax.dynamic_slice_in_dim(k, src, 1, 1), dst, 1)
+    v = lax.dynamic_update_slice_in_dim(
+        v, lax.dynamic_slice_in_dim(v, src, 1, 1), dst, 1)
+    idx = jnp.arange(pos_map.shape[1], dtype=jnp.int32)
+    row = jnp.where(idx < length, idx, -1)
+    pos_map = lax.dynamic_update_slice_in_dim(pos_map, row[None], dst, 0)
+    return k, v, pos_map
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _kv_clear_row(pos_map, slot):
+    row = jnp.full((1, pos_map.shape[1]), -1, jnp.int32)
+    return lax.dynamic_update_slice_in_dim(pos_map, row, slot, 0)
+
+
+@jax.jit
+def _kv_extract_stack(k, v, slot):
+    """Stack a slot's k and v into one (2, L, C, Hk, D) array — a KV
+    export is then a single device transfer."""
+    return jnp.stack([lax.dynamic_index_in_dim(k, slot, 1, keepdims=False),
+                      lax.dynamic_index_in_dim(v, slot, 1, keepdims=False)])
 
 
 class SlotKVCache:
@@ -37,19 +88,27 @@ class SlotKVCache:
     def release(self, rid: int) -> None:
         s = self.slot_of.pop(rid)
         self.len_of.pop(rid, None)
-        self.pos_map = self.pos_map.at[s].set(-1)
+        self.pos_map = _kv_clear_row(self.pos_map, s)
         self.free.append(s)
+
+    # -------------------------------------------------------------- slabs
+    def slabs(self):
+        """The donated arguments of a fused step. The caller owns putting
+        the returned slabs back via :meth:`swap` — after a donating call
+        the previous buffers are dead."""
+        return self.k, self.v, self.pos_map
+
+    def swap(self, k, v, pos_map) -> None:
+        self.k, self.v, self.pos_map = k, v, pos_map
 
     # ------------------------------------------------------------- write
     def place(self, rid: int, k_seq, v_seq, length: int) -> None:
         """k_seq/v_seq (L, S, Hk, D) from a prefill cache (len S >= length)."""
         s = self.slot_of[rid]
         S = min(length, self.capacity)
-        self.k = self.k.at[:, s, :S].set(k_seq[:, :S])
-        self.v = self.v.at[:, s, :S].set(v_seq[:, :S])
-        pm = np.full(self.capacity, -1, np.int32)
-        pm[:S] = np.arange(S)
-        self.pos_map = self.pos_map.at[s].set(jnp.asarray(pm))
+        self.swap(*_kv_place(self.k, self.v, self.pos_map,
+                             k_seq[:, :self.capacity], v_seq[:, :self.capacity],
+                             s, S))
         self.len_of[rid] = length
 
     def copy_prefix(self, src_rid: int, dst_rid: int, length: int) -> None:
@@ -60,18 +119,16 @@ class SlotKVCache:
         s = self.slot_of[src_rid]
         d = self.slot_of[dst_rid]
         L = min(length, self.len_of[src_rid], self.capacity)
-        self.k = self.k.at[:, d, :L].set(self.k[:, s, :L])
-        self.v = self.v.at[:, d, :L].set(self.v[:, s, :L])
-        pm = np.full(self.capacity, -1, np.int32)
-        pm[:L] = np.arange(L)
-        self.pos_map = self.pos_map.at[d].set(jnp.asarray(pm))
+        self.swap(*_kv_copy_prefix(self.k, self.v, self.pos_map, s, d, L))
         self.len_of[dst_rid] = L
 
     def extract(self, rid: int):
-        """For KV transfer to another instance: (k (L,S,Hk,D), v, length)."""
+        """For KV transfer to another instance: (k (L,S,Hk,D), v, length)
+        as host arrays — one stacked device transfer."""
         s = self.slot_of[rid]
         L = self.len_of[rid]
-        return self.k[:, s, :L], self.v[:, s, :L], L
+        kv = np.asarray(_kv_extract_stack(self.k, self.v, s))
+        return kv[0, :, :L], kv[1, :, :L], L
 
     def as_model_cache(self):
         return {"k": self.k, "v": self.v, "pos_map": self.pos_map}

@@ -1,3 +1,5 @@
-from repro.kernels.flash_prefill.flash_prefill import flash_prefill  # noqa: F401
-from repro.kernels.flash_prefill.ops import flash_prefill_op  # noqa: F401
+from repro.kernels.flash_prefill.flash_prefill import (flash_prefill,  # noqa: F401
+                                                       flash_prefill_dyn)
+from repro.kernels.flash_prefill.ops import (flash_chunk_op,  # noqa: F401
+                                             flash_prefill_op, flash_seq_op)
 from repro.kernels.flash_prefill.ref import flash_prefill_ref  # noqa: F401

@@ -29,9 +29,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            bq: int, bk: int, q_offset: int, window: Optional[int],
-            causal: bool, sm_scale: float, num_kv_blocks: int):
+def _kernel_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 bq: int, bk: int, q_offset, window: Optional[int],
+                 causal: bool, sm_scale: float, num_kv_blocks: int):
+    """Shared online-softmax body. ``q_offset`` is either a Python int
+    (static variant) or an i32 scalar read from SMEM scalar-prefetch memory
+    (dynamic variant — chunked prefill passes the chunk offset as a traced
+    value so jit traces are reused across offsets)."""
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -88,6 +92,26 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, q_offset: int, window: Optional[int],
+            causal: bool, sm_scale: float, num_kv_blocks: int):
+    """Static-offset variant (whole-prompt prefill; offset known at trace)."""
+    _kernel_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                 bq=bq, bk=bk, q_offset=q_offset, window=window,
+                 causal=causal, sm_scale=sm_scale, num_kv_blocks=num_kv_blocks)
+
+
+def _dyn_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, bq: int, bk: int, window: Optional[int], causal: bool,
+                sm_scale: float, num_kv_blocks: int):
+    """Dynamic-offset variant: the chunk offset rides in scalar-prefetch
+    SMEM, so the serving engine's fused step reuses one trace across all
+    chunk offsets (DESIGN.md §9)."""
+    _kernel_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                 bq=bq, bk=bk, q_offset=qoff_ref[0], window=window,
+                 causal=causal, sm_scale=sm_scale, num_kv_blocks=num_kv_blocks)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("q_offset", "window", "causal", "bq", "bk", "interpret"))
@@ -124,3 +148,51 @@ def flash_prefill(q, k, v, *, q_offset: int = 0, window: Optional[int] = None,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "causal", "bq", "bk", "interpret"))
+def flash_prefill_dyn(q, k, v, q_offset, *, window: Optional[int] = None,
+                      causal: bool = True, bq: int = 128, bk: int = 128,
+                      interpret: bool = False):
+    """Like :func:`flash_prefill`, but ``q_offset`` is a traced i32 scalar
+    (0-d array or Python int) delivered to the kernel via scalar prefetch —
+    chunked prefill against a growing KV prefix retraces only on new chunk
+    *shapes*, never on new offsets."""
+    B, H, Sq, D = q.shape
+    Hk, T = k.shape[1], k.shape[2]
+    bq = min(bq, Sq)
+    bk = min(bk, T)
+    assert Sq % bq == 0 and T % bk == 0, (Sq, bq, T, bk)
+    grid = (B, H, Sq // bq, T // bk)
+    G = H // Hk
+
+    kernel = functools.partial(
+        _dyn_kernel, bq=bq, bk=bk, window=window, causal=causal,
+        sm_scale=1.0 / math.sqrt(D), num_kv_blocks=T // bk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik, qo: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, qo: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, qo: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik, qo: (b, h, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+    )
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qoff, q, k, v)

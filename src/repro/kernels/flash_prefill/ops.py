@@ -10,11 +10,19 @@ from typing import Optional
 
 import jax
 
-from repro.kernels.flash_prefill.flash_prefill import flash_prefill
+from repro.kernels.flash_prefill.flash_prefill import (flash_prefill,
+                                                       flash_prefill_dyn)
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _block_size(n: int, cap: int = 128) -> int:
+    """Largest power-of-two divisor of ``n``, capped at ``cap`` (the MXU
+    tile). The engine pads sequences to 32-token buckets, so this is >= 32
+    on the serving path; odd generic shapes degrade gracefully."""
+    return min(cap, n & -n)
 
 
 def flash_prefill_op(q, k, v, *, q_offset: int = 0,
@@ -29,4 +37,34 @@ def flash_prefill_op(q, k, v, *, q_offset: int = 0,
     vt = v.transpose(0, 2, 1, 3)
     o = flash_prefill(qt, kt, vt, q_offset=q_offset, window=window,
                       causal=causal, bq=bq, bk=bk, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def flash_seq_op(q, k, v, *, window: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+    """Full-sequence causal attention in model layout — q (B,S,H,D);
+    k,v (B,T,Hk,D) -> (B,S,H,D) with block sizes derived from the shapes
+    (the serving engine's prompts are padded to 32-token buckets)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    S, T = q.shape[1], k.shape[1]
+    return flash_prefill_op(q, k, v, q_offset=T - S, window=window,
+                            causal=True, bq=_block_size(S), bk=_block_size(T),
+                            interpret=interpret)
+
+
+def flash_chunk_op(q, k, v, q_offset, *, window: Optional[int] = None,
+                   interpret: Optional[bool] = None):
+    """Chunked-prefill attention in model layout with a *traced* chunk
+    offset — q (B,Sq,H,D) at absolute positions [q_offset, q_offset+Sq);
+    k,v (B,C,Hk,D) the full slot cache, positions [0, q_offset) assumed
+    contiguously valid (the engine's KV prefix contract, DESIGN.md §9).
+    Returns (B,Sq,H,D)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    Sq, C = q.shape[1], k.shape[1]
+    o = flash_prefill_dyn(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), q_offset, window=window,
+                          causal=True, bq=_block_size(Sq), bk=_block_size(C),
+                          interpret=interpret)
     return o.transpose(0, 2, 1, 3)

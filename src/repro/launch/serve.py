@@ -83,7 +83,7 @@ def list_policies() -> None:
 
 def run_engine(args) -> ServeReport:
     from repro.engine import ArrowEngineCluster
-    cfg = get_smoke_config(args.arch)
+    cfg = get_smoke_config(args.arch).replace(attn_impl=args.attn_impl)
     if cfg.family != "dense":
         raise SystemExit("--mode engine supports dense-family archs; use "
                          "--mode sim for the rest (DESIGN.md §2)")
@@ -181,6 +181,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "lose their KV; the runtime recovers the lost "
                          "requests (and an elastic policy replaces the "
                          "instance)")
+    ap.add_argument("--attn-impl", choices=("reference", "pallas"),
+                    default="reference",
+                    help="engine-mode attention implementation (DESIGN.md "
+                         "§9): 'reference' = pure-jnp sdpa; 'pallas' = the "
+                         "flash_prefill/paged_attention kernels (interpret "
+                         "mode on CPU — validates the kernel contract, not "
+                         "CPU speed). Greedy streams are identical either "
+                         "way; sim mode ignores this flag")
     ap.add_argument("--prefix-cache", choices=("on", "off"), default="off",
                     help="prefix-aware KV reuse (DESIGN.md §7): retain "
                          "finished contexts and prefill only the uncached "

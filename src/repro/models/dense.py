@@ -20,6 +20,20 @@ from repro.configs.base import ModelConfig
 from repro.models import common as cm
 
 
+def _use_pallas(cfg: ModelConfig) -> bool:
+    """The serving engine's kernel switch (DESIGN.md §9). Softcapped logits
+    (gemma) have no kernel variant yet — fail loudly rather than silently
+    diverging from the reference numerics."""
+    if cfg.attn_impl == "reference":
+        return False
+    if cfg.attn_impl != "pallas":
+        raise ValueError(f"unknown attn_impl {cfg.attn_impl!r}")
+    if cfg.logit_softcap:
+        raise NotImplementedError(
+            "attn_impl='pallas' does not support logit_softcap")
+    return True
+
+
 def init_params(cfg: ModelConfig, key):
     dtype = jnp.dtype(cfg.dtype)
     kg = cm.KeyGen(key)
@@ -38,14 +52,19 @@ def init_params(cfg: ModelConfig, key):
 
 
 def _block(cfg: ModelConfig, p, x, cos, sin, rope_dim, mask, kv_cache=None,
-           slot=None):
+           slot=None, attn=None):
     """One transformer block. Returns (x, (k, v)) where k/v are either the
-    full-seq kv (prefill/train) or the updated cache slabs (decode)."""
+    full-seq kv (prefill/train) or the updated cache slabs (decode).
+    ``attn`` overrides the reference sdpa (the Pallas kernel closures built
+    by forward_seq/decode_step when cfg.attn_impl == "pallas")."""
     h = cm.apply_norm(cfg, p["ln1"], x)
     q, k, v = cm.attention_qkv(cfg, p["attn"], h, cos, sin, rope_dim)
     if kv_cache is None:
         q, k, v = cm.constrain_seq_attention(cfg, q, k, v)
-        o = cm.sdpa(q, k, v, mask, cfg.logit_softcap)
+        if attn is not None:
+            o = attn(q, k, v)
+        else:
+            o = cm.sdpa(q, k, v, mask, cfg.logit_softcap)
         out_kv = (k, v)
     else:
         ck, cv = kv_cache
@@ -53,7 +72,10 @@ def _block(cfg: ModelConfig, p, x, cos, sin, rope_dim, mask, kv_cache=None,
         bidx = jnp.arange(B)
         ck = ck.at[bidx, slot].set(k[:, 0])
         cv = cv.at[bidx, slot].set(v[:, 0])
-        o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
+        if attn is not None:
+            o = attn(q, ck, cv)
+        else:
+            o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
         out_kv = (ck, cv)
     x = x + o @ p["attn"]["wo"]
     h = cm.apply_norm(cfg, p["ln2"], x)
@@ -69,9 +91,16 @@ def forward_seq(cfg: ModelConfig, params, x, positions, *, mrope_positions=None,
     x = cm.constrain_batch(cfg, x)
     cos, sin, rope_dim = cm.rope_for(cfg, positions, mrope_positions)
     mask = cm.causal_mask(S, S, window=window)
+    attn = None
+    if _use_pallas(cfg):
+        from repro.kernels.flash_prefill import flash_seq_op
+
+        def attn(q, k, v):
+            o = flash_seq_op(q, k, v, window=window)
+            return o.reshape(B, S, -1)
 
     def body(x, lp):
-        x, kv = _block(cfg, lp, x, cos, sin, rope_dim, mask)
+        x, kv = _block(cfg, lp, x, cos, sin, rope_dim, mask, attn=attn)
         return cm.constrain_batch(cfg, x), kv
 
     if remat:
@@ -105,7 +134,13 @@ def forward_seq(cfg: ModelConfig, params, x, positions, *, mrope_positions=None,
 def decode_step(cfg: ModelConfig, params, cache, x, pos, *, mrope_positions=None,
                 window: Optional[int] = None):
     """x (B,1,d) new-token embeddings; pos (B,) absolute positions.
-    Returns (logits (B,1,V), new_cache)."""
+    Returns (logits (B,1,V), new_cache).
+
+    With ``cfg.attn_impl == "pallas"`` the per-layer attention runs the
+    paged_attention kernel over the slot cache viewed as contiguous pages;
+    that path assumes a non-ring cache whose positions [0, pos] are valid
+    (the serving engine's contract) and masks by context length instead of
+    the pos_map."""
     B = x.shape[0]
     x = cm.constrain_batch(cfg, x)
     C = cache["k"].shape[2]
@@ -113,11 +148,30 @@ def decode_step(cfg: ModelConfig, params, cache, x, pos, *, mrope_positions=None
     pos_map = cache["pos_map"].at[jnp.arange(B), slot].set(pos.astype(jnp.int32))
     mask = cm.decode_mask(pos_map, pos, window=window)
     cos, sin, rope_dim = cm.rope_for(cfg, pos[:, None], mrope_positions)
+    attn = None
+    if _use_pallas(cfg):
+        if window is not None:
+            raise NotImplementedError(
+                "attn_impl='pallas' decode has no sliding-window variant")
+        from repro.kernels.flash_prefill.ops import _block_size
+        from repro.kernels.paged_attention import paged_attention_op
+        page = _block_size(C)             # pages tile the slot's capacity
+        MP = C // page
+        page_table = (jnp.arange(B)[:, None] * MP
+                      + jnp.arange(MP)[None, :]).astype(jnp.int32)
+        lengths = (pos + 1).astype(jnp.int32)
+
+        def attn(q, ck, cv):
+            Hk, D = ck.shape[2], ck.shape[3]
+            kp = ck.reshape(B * MP, page, Hk, D)
+            vp = cv.reshape(B * MP, page, Hk, D)
+            o = paged_attention_op(q[:, 0], kp, vp, page_table, lengths)
+            return o.reshape(B, 1, -1)
 
     def body(x, xs):
         lp, ck, cv = xs
         x, (ck, cv) = _block(cfg, lp, x, cos, sin, rope_dim, mask,
-                             kv_cache=(ck, cv), slot=slot)
+                             kv_cache=(ck, cv), slot=slot, attn=attn)
         return x, (ck, cv)
 
     x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]),
@@ -136,6 +190,11 @@ def prefill_chunk(cfg: ModelConfig, params, cache, x, offset, *,
     integer ``offset`` across the batch rows being filled.
 
     Returns (logits (B,Sq,V), new_cache).
+
+    With ``cfg.attn_impl == "pallas"`` attention runs the flash_prefill
+    kernel (dynamic-offset variant, so ``offset`` stays traced) against the
+    whole cache with positional causal masking; positions [0, offset) must
+    be contiguously valid (the engine's KV prefix contract, DESIGN.md §9).
     """
     B, Sq, _ = x.shape
     x = cm.constrain_batch(cfg, x)
@@ -146,6 +205,13 @@ def prefill_chunk(cfg: ModelConfig, params, cache, x, offset, *,
         (0, offset))
     mask = cm.chunk_mask(pos_map, positions, window=window)
     cos, sin, rope_dim = cm.rope_for(cfg, positions, mrope_positions)
+    attn = None
+    if _use_pallas(cfg):
+        from repro.kernels.flash_prefill import flash_chunk_op
+
+        def attn(q, ck, cv):
+            o = flash_chunk_op(q, ck, cv, offset, window=window)
+            return o.reshape(B, Sq, -1)
 
     def body(x, xs):
         lp, ck, cv = xs
@@ -153,7 +219,10 @@ def prefill_chunk(cfg: ModelConfig, params, cache, x, offset, *,
         q, k, v = cm.attention_qkv(cfg, lp["attn"], h, cos, sin, rope_dim)
         ck = lax.dynamic_update_slice(ck, k, (0, offset, 0, 0))
         cv = lax.dynamic_update_slice(cv, v, (0, offset, 0, 0))
-        o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
+        if attn is not None:
+            o = attn(q, ck, cv)
+        else:
+            o = cm.sdpa(q, ck, cv, mask, cfg.logit_softcap)
         x = x + o @ lp["attn"]["wo"]
         x = x + cm.mlp(cfg, lp["mlp"], cm.apply_norm(cfg, lp["ln2"], x))
         return x, (ck, cv)

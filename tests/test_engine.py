@@ -9,15 +9,19 @@ from invariants import check_invariants
 
 from repro.configs import get_smoke_config
 from repro.core import Request, SLO
-from repro.engine import ArrowEngineCluster, EngineInstance, ServeRequest
+from repro.engine import (ArrowEngineCluster, EngineInstance, NoFreeSlots,
+                          ServeRequest)
 from repro.models import build_model
 
 # Engine runs are wall-clock driven: on a loaded CI machine jit compiles and
 # cooperative round-robin passes stretch. Budget generously — assertions
 # below are value/ordering based (token ids, monotone times, invariant
 # probes), never exact timings and never absolute-seconds thresholds on the
-# scraped metrics (deflaked in ISSUE 2, re-audited in ISSUE 4), so a slow
-# machine can only time out, not produce a wrong pass.
+# scraped metrics (deflaked in ISSUE 2, re-audited in ISSUE 4 and again in
+# ISSUE 5 — which also had to deflake the *fast*-engine direction: never
+# assume N engine steps cover a given wall-clock span, the fused step makes
+# empty steps microsecond-cheap), so machine speed can only time out, not
+# produce a wrong pass.
 DRAIN_TIMEOUT = 300.0
 
 
@@ -255,3 +259,193 @@ def test_retire_instance_migrates_resident_kv(setup):
     assert victim not in cluster.instances
     assert victim not in cluster.pools.all_ids()
     assert report.scaling["n_instances"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5: typed slot-exhaustion error (no more `assert slot is not None`)
+# ---------------------------------------------------------------------------
+
+
+def test_no_free_slots_is_typed_not_assert(setup):
+    cfg, model, params = setup
+    inst = EngineInstance(0, cfg, params, n_slots=2, capacity=64)
+    prompt = np.arange(1, 17, dtype=np.int32)
+    inst.run_prefill(1, prompt)
+    inst.run_prefill(2, prompt)
+    with pytest.raises(NoFreeSlots) as ei:
+        inst.run_prefill(3, prompt)
+    assert ei.value.iid == 0 and ei.value.rid == 3
+    with pytest.raises(NoFreeSlots):
+        inst.begin_cached_prefill(4, 1, 8)
+    with pytest.raises(NoFreeSlots):
+        inst.profile_prefill()
+    # import keeps its soft-failure contract (migration manager retries)
+    k, v, L, last, gen = inst.export_kv(1)
+    assert inst.import_kv(5, k, v, L, last, gen) is False
+    inst.drop(1)                                   # a slot frees up ...
+    assert inst.run_prefill(3, prompt) is not None  # ... and admission works
+
+
+def test_cluster_queues_on_full_slots_and_finishes(setup):
+    """Slot exhaustion must queue, not crash: more concurrent requests than
+    KV slots; the cluster retries admission each pass until slots free."""
+    cfg, model, params = setup
+    cluster = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=2,
+                                 capacity=64, slo=SLO(ttft=5.0, tpot=2.0),
+                                 params=params)
+    rng = np.random.default_rng(12)
+    prompts = {i: rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)
+               for i in range(6)}
+    handles = [cluster.submit(Request(rid=i, arrival=0.0, input_len=24,
+                                      output_len=3), prompt=prompts[i])
+               for i in range(6)]
+    report = cluster.drain(timeout=DRAIN_TIMEOUT)
+    assert report.n_finished == 6
+    check_invariants(cluster)
+    for h in handles[:2]:
+        ref = greedy_reference(cfg, model, params, prompts[h.rid], 3)
+        assert [t for t in h.tokens] == ref
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5: fused step vs the pre-fusion per-rid path — bit-identical streams
+# ---------------------------------------------------------------------------
+
+
+def test_fused_step_matches_legacy_streams(setup):
+    """step_mode='fused' (one donated jitted call per instance pass) and
+    step_mode='legacy' (the pre-PR per-rid path) must produce bit-identical
+    greedy streams on the same request set."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(21)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=int(rng.integers(8, 40)))
+             .astype(np.int32), int(rng.integers(2, 6))) for _ in range(5)]
+    streams = {}
+    for mode in ("legacy", "fused"):
+        cluster = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1,
+                                     n_slots=4, capacity=128,
+                                     slo=SLO(ttft=5.0, tpot=2.0),
+                                     params=params, chunk_tokens=16,
+                                     step_mode=mode)
+        handles = [cluster.submit(Request(rid=i, arrival=0.0,
+                                          input_len=len(p), output_len=n),
+                                  prompt=p)
+                   for i, (p, n) in enumerate(reqs)]
+        cluster.drain(timeout=DRAIN_TIMEOUT)
+        streams[mode] = {h.rid: list(h.tokens) for h in handles}
+        check_invariants(cluster)
+    assert streams["fused"] == streams["legacy"]
+    for i, (p, n) in enumerate(reqs):               # and both match the oracle
+        assert streams["fused"][i] == greedy_reference(cfg, model, params,
+                                                       p, n)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 5: Pallas kernels on the serving path — greedy-stream parity with the
+# reference attention on prefill, chunked prefill, cached-prefix prefill and
+# batched decode (interpret mode on CPU; same kernel contract as Mosaic/TPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pallas_pair(setup):
+    """(reference instance, pallas instance) over the same params — params
+    are attn_impl-independent, so any stream divergence is the kernels'."""
+    cfg, model, params = setup
+    ref = EngineInstance(0, cfg, params, n_slots=4, capacity=64)
+    pal = EngineInstance(1, cfg.replace(attn_impl="pallas"), params,
+                         n_slots=4, capacity=64)
+    return cfg, ref, pal
+
+
+def _decode_stream(inst, rid, ctx_len, n):
+    inst.local.start_local_decode(rid, ctx_len, n)
+    return [inst.run_decode_iteration([rid])[rid] for _ in range(n)]
+
+
+def test_pallas_prefill_decode_parity(pallas_pair):
+    cfg, ref, pal = pallas_pair
+    prompt = np.arange(1, 33, dtype=np.int32)
+    t_ref = ref.run_prefill(10, prompt)
+    t_pal = pal.run_prefill(10, prompt)
+    assert t_ref == t_pal
+    s_ref = _decode_stream(ref, 10, len(prompt), 5)
+    s_pal = _decode_stream(pal, 10, len(prompt), 5)
+    assert s_ref == s_pal
+    ref.drop(10), pal.drop(10)
+
+
+def test_pallas_chunked_prefill_parity(pallas_pair):
+    cfg, ref, pal = pallas_pair
+    prompt = np.arange(3, 51, dtype=np.int32)      # 48 tokens, 16-token chunks
+    toks = {}
+    for name, inst in (("ref", ref), ("pal", pal)):
+        tok = None
+        for off in range(0, len(prompt), 16):
+            tok = inst.run_prefill_chunk(11, prompt[off:off + 16], off,
+                                         len(prompt))
+        toks[name] = [tok] + _decode_stream(inst, 11, len(prompt), 4)
+        inst.drop(11)
+    assert toks["ref"] == toks["pal"]
+
+
+def test_pallas_cached_prefix_prefill_parity(pallas_pair):
+    cfg, ref, pal = pallas_pair
+    base = np.arange(5, 37, dtype=np.int32)        # 32-token parent context
+    full = np.concatenate([base, np.arange(100, 116, dtype=np.int32)])
+    toks = {}
+    for name, inst in (("ref", ref), ("pal", pal)):
+        inst.run_prefill(20, base)                 # the retained "parent"
+        inst.begin_cached_prefill(21, 20, len(base))
+        tok = inst.run_prefill_chunk(21, full[len(base):], len(base),
+                                     len(full))
+        toks[name] = [tok] + _decode_stream(inst, 21, len(full), 4)
+        inst.drop(20), inst.drop(21)
+    assert toks["ref"] == toks["pal"]
+
+
+def test_pallas_batched_decode_parity(pallas_pair):
+    cfg, ref, pal = pallas_pair
+    p1 = np.arange(1, 25, dtype=np.int32)
+    p2 = np.arange(30, 62, dtype=np.int32)
+    toks = {}
+    for name, inst in (("ref", ref), ("pal", pal)):
+        t1, t2 = inst.run_prefill(31, p1), inst.run_prefill(32, p2)
+        inst.local.start_local_decode(31, len(p1), 4)
+        inst.local.start_local_decode(32, len(p2), 4)
+        g1, g2 = [t1], [t2]
+        for _ in range(4):
+            out = inst.run_decode_iteration([31, 32])
+            g1.append(out[31])
+            g2.append(out[32])
+        toks[name] = (g1, g2)
+        inst.drop(31), inst.drop(32)
+    assert toks["ref"] == toks["pal"]
+
+
+def test_pallas_cluster_end_to_end_matches_reference(setup):
+    """Whole serving loop under attn_impl='pallas': invariant probe after
+    every step, every stream equal to the (reference-attention) greedy
+    oracle — kernels validated inside the fused step, not just in
+    isolation (tests/test_kernels.py)."""
+    cfg, model, params = setup
+    cluster = ArrowEngineCluster(cfg.replace(attn_impl="pallas"),
+                                 n_instances=2, n_prefill=1, n_slots=4,
+                                 capacity=64, slo=SLO(ttft=5.0, tpot=2.0),
+                                 params=params, chunk_tokens=16)
+    rng = np.random.default_rng(17)
+    prompts = {i: rng.integers(1, cfg.vocab_size, size=40).astype(np.int32)
+               for i in range(3)}
+    handles = [cluster.submit(Request(rid=i, arrival=0.0, input_len=40,
+                                      output_len=3), prompt=prompts[i])
+               for i in range(3)]
+    import time as _time
+    deadline = _time.time() + DRAIN_TIMEOUT
+    while cluster.step() and _time.time() < deadline:
+        check_invariants(cluster, streams=False)   # probe after each step
+    report = cluster.report()
+    assert report.n_finished == 3
+    check_invariants(cluster)
+    for h in handles:
+        ref = greedy_reference(cfg, model, params, prompts[h.rid], 3)
+        assert [t for t in h.tokens] == ref, f"rid {h.rid}"

@@ -466,26 +466,34 @@ def test_chaos_sim_spike_two_crashes_goodput_and_invariants():
 def test_chaos_engine_timed_plan_streams_match_reference(engine_setup):
     """Engine chaos: a timed FaultPlan crash lands wherever the wall clock
     says — greedy content is schedule-independent, so whatever was lost,
-    every recovered stream must equal the unfaulted greedy reference."""
+    every recovered stream must equal the unfaulted greedy reference.
+    The main wave decodes long enough that the crash usually lands mid-
+    serving, and a late straggler arrival guarantees the fault poll still
+    fires even on a machine fast enough to drain the wave first (the fused
+    step made this a real possibility — never assume the engine is slow)."""
     from repro.engine import ArrowEngineCluster
     from repro.models import build_model
     cfg, params = engine_setup
     eng = ArrowEngineCluster(cfg, n_instances=3, n_prefill=1, n_slots=4,
                              capacity=128, slo=SLO(5.0, 2.0), params=params,
-                             fault_plan=FaultPlan.parse("crash@0.5:target=1"))
+                             fault_plan=FaultPlan.parse("crash@0.1:target=1"))
     rng = np.random.default_rng(9)
     prompts = {i: rng.integers(1, cfg.vocab_size, size=20).astype(np.int32)
-               for i in range(4)}
-    handles = [eng.submit(Request(rid=i, arrival=0.0, input_len=20,
-                                  output_len=6), prompt=prompts[i])
-               for i in range(4)]
+               for i in range(5)}
+    out_len = {i: 32 for i in range(4)}
+    out_len[4] = 4                               # the straggler backstop
+    handles = [eng.submit(Request(rid=i, arrival=0.0 if i < 4 else 0.5,
+                                  input_len=20, output_len=out_len[i]),
+                          prompt=prompts[i])
+               for i in range(5)]
     report = eng.drain(timeout=300.0)
     check_invariants(eng)
-    assert report.n_finished == 4
+    assert report.n_finished == 5
     assert report.faults["crashes"] == 1
     model = build_model(cfg)
     for h in handles:
-        ref = greedy_reference(cfg, model, params, prompts[h.rid], 6)
+        ref = greedy_reference(cfg, model, params, prompts[h.rid],
+                               out_len[h.rid])
         assert [t for t in h.tokens] == ref, f"rid {h.rid} diverged"
     eng.collect_stats(eng.clock.now())
     assert 1 not in eng.instances and 1 not in eng.pools.all_ids()

@@ -25,8 +25,8 @@ import subprocess
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-DOCS = ["README.md", "DESIGN.md", "docs/OPERATOR.md", "docs/SCHEDULING.md",
-        "ROADMAP.md", "PAPER.md"]
+DOCS = ["README.md", "DESIGN.md", "EXPERIMENTS.md", "docs/OPERATOR.md",
+        "docs/SCHEDULING.md", "ROADMAP.md", "PAPER.md"]
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 RUN_MARKER = "<!-- ci:run -->"
 FLAGS_DOC = "docs/OPERATOR.md"
