@@ -16,8 +16,11 @@ Greedy streams must be bit-identical across the two modes — the speedup is
 pure mechanics, not semantics. Engine tokens/s counts prefill + decoded
 tokens over the serving wall-clock.
 
-CSV contract: name,us_per_call,derived. Full run persists the comparison to
-<repo>/BENCH_engine.json (the start of the engine perf trajectory).
+CSV contract: name,us_per_call,derived. Full run *appends* a ``{pr, ...}``
+entry to the ``trajectory`` list in <repo>/BENCH_engine.json — the perf
+history ROADMAP.md asks for ("tokens/s per PR") accumulates instead of
+being overwritten; pass ``--pr N`` to label the entry (default: last
+recorded pr + 1, or re-stamp with the same number to replace a noisy run).
 
   PYTHONPATH=src python benchmarks/bench_engine_step.py
   PYTHONPATH=src python benchmarks/bench_engine_step.py --smoke   # CI: docs job
@@ -78,10 +81,31 @@ def run_mode(cfg, params, reqs, mode: str):
     return tokens / max(t.s, 1e-9), streams, tokens
 
 
+def load_trajectory(path: pathlib.Path) -> dict:
+    """Read BENCH_engine.json, migrating the pre-PR-6 flat single-run shape
+    into ``{"workload": ..., "trajectory": [entry...]}``."""
+    if not path.exists():
+        return {"workload": None, "trajectory": []}
+    doc = json.loads(path.read_text())
+    if "trajectory" in doc:
+        return doc
+    # legacy flat artifact (written by PR 5): keep it as the first point
+    entry = {k: doc[k] for k in ("tokens_total", "legacy_tokens_per_s",
+                                 "fused_tokens_per_s", "speedup",
+                                 "streams_identical") if k in doc}
+    entry["pr"] = 5
+    return {"workload": doc.get("workload"), "trajectory": [entry],
+            "note": doc.get("note")}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--pr", type=int, default=None,
+                    help="trajectory label for this run; default = last "
+                         "recorded pr + 1. Re-using a number replaces that "
+                         "entry (re-measure after a noisy run)")
     ap.add_argument("--smoke", action="store_true",
                     help="small run for CI: asserts stream identity and "
                          "fused tokens/s >= the legacy baseline measured in "
@@ -122,24 +146,32 @@ def main(argv=None) -> None:
         print(f"WARNING: speedup {speedup:.2f}x is under the 2x recorded in "
               f"BENCH_engine.json — noisy machine? re-run quiet before "
               f"updating the artifact", file=sys.stderr)
-    out = {
-        "workload": {"arch": args.arch, "n_requests": n,
-                     "prompt_tokens": "48-96", "new_tokens": "8-24",
-                     "chunk_tokens": 32, "instances": 2, "n_slots": 8,
-                     "capacity": 128, "seed": 0},
+    path = ROOT / "BENCH_engine.json"
+    doc = load_trajectory(path)
+    doc["workload"] = {"arch": args.arch, "n_requests": n,
+                       "prompt_tokens": "48-96", "new_tokens": "8-24",
+                       "chunk_tokens": 32, "instances": 2, "n_slots": 8,
+                       "capacity": 128, "seed": 0}
+    doc.setdefault("note", "CPU, interpret-free reference attention both "
+                           "sides; the delta is fusion + donation + single "
+                           "lazy token fetch (DESIGN.md §9)")
+    pr = args.pr if args.pr is not None else (
+        max((e["pr"] for e in doc["trajectory"]), default=5) + 1)
+    entry = {
+        "pr": pr,
         "tokens_total": tokens,
         "legacy_tokens_per_s": round(tps_legacy, 1),
         "fused_tokens_per_s": round(tps_fused, 1),
         "speedup": round(speedup, 2),
         "streams_identical": True,
-        "note": "CPU, interpret-free reference attention both sides; the "
-                "delta is fusion + donation + single lazy token fetch "
-                "(DESIGN.md §9)",
     }
-    (ROOT / "BENCH_engine.json").write_text(json.dumps(out, indent=1) + "\n")
-    print(f"BENCH_engine.json: {out['legacy_tokens_per_s']} -> "
-          f"{out['fused_tokens_per_s']} tok/s ({out['speedup']}x)",
-          file=sys.stderr)
+    doc["trajectory"] = sorted(
+        [e for e in doc["trajectory"] if e.get("pr") != pr] + [entry],
+        key=lambda e: e["pr"])
+    path.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"BENCH_engine.json[pr={pr}]: {entry['legacy_tokens_per_s']} -> "
+          f"{entry['fused_tokens_per_s']} tok/s ({entry['speedup']}x; "
+          f"{len(doc['trajectory'])} trajectory points)", file=sys.stderr)
 
 
 if __name__ == "__main__":

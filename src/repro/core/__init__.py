@@ -21,4 +21,9 @@ from repro.core.serving import (RequestHandle, ServeReport, ServingSystem,  # no
                                 SLOTier, TIERS, UndispatchableError,
                                 replay_trace)
 from repro.core.slo import SLO, SchedulerConfig  # noqa: F401
+from repro.core.tenants import (AdmissionConfig,  # noqa: F401
+                                AdmissionController, AdmissionDecision,
+                                Admitted, CreditLedger, CreditLedgerConfig,
+                                Deferred, Rejected, RetryQueue, Tenant,
+                                TenantRegistry, default_registry)
 from repro.core.ttft_predictor import TTFTPredictor  # noqa: F401

@@ -41,6 +41,34 @@ from typing import List, Optional
 from repro.core.pools import Pool
 
 
+def prefill_pressure(runtime, now: float) -> float:
+    """Eq. (2) restated as a dimensionless pressure: mean predicted
+    prefill-queue drain delay over the prefill-capable instances, normalized
+    by the TTFT scheduling budget. ``inf`` when no instance can take
+    prefills. Shared by the AutoScaler and the admission watermark guard
+    (core/tenants.py)."""
+    ids = runtime.pools.prefill_capable()
+    if not ids:
+        return float("inf")
+    budget = max(runtime.sched_cfg.ttft_threshold_frac * runtime.slo.ttft,
+                 1e-9)
+    ready = getattr(runtime.policy, "prefill_ready_at", {})
+    delays = [max(ready.get(i, 0.0) - now, 0.0) for i in ids]
+    return (sum(delays) / len(delays)) / budget
+
+
+def decode_pressure(runtime) -> float:
+    """Eq. (1) restated: total decode running-tokens over the aggregate Max
+    Running Tokens of the decode-capable instances. ``inf`` when no instance
+    can decode."""
+    ids = runtime.pools.decode_capable()
+    if not ids:
+        return float("inf")
+    cap = len(ids) * max(runtime.sched_cfg.max_running_tokens, 1)
+    running = sum(runtime.monitor.get(i).running_tokens for i in ids)
+    return running / cap
+
+
 @dataclass(frozen=True)
 class AutoScalerConfig:
     """Elasticity knobs. Defaults favour stability over reaction speed; see
@@ -100,23 +128,10 @@ class AutoScaler:
 
     # ------------------------------------------------------------- signals
     def _prefill_pressure(self, now: float) -> float:
-        rt = self.runtime
-        ids = rt.pools.prefill_capable()
-        if not ids:
-            return float("inf")
-        budget = max(rt.sched_cfg.ttft_threshold_frac * rt.slo.ttft, 1e-9)
-        ready = getattr(rt.policy, "prefill_ready_at", {})
-        delays = [max(ready.get(i, 0.0) - now, 0.0) for i in ids]
-        return (sum(delays) / len(delays)) / budget
+        return prefill_pressure(self.runtime, now)
 
     def _decode_pressure(self) -> float:
-        rt = self.runtime
-        ids = rt.pools.decode_capable()
-        if not ids:
-            return float("inf")
-        cap = len(ids) * max(rt.sched_cfg.max_running_tokens, 1)
-        running = sum(rt.monitor.get(i).running_tokens for i in ids)
-        return running / cap
+        return decode_pressure(self.runtime)
 
     def signals(self, now: float) -> ScaleSignals:
         rt = self.runtime

@@ -17,6 +17,8 @@ class PrefillWork:
     done: int = 0                 # chunked progress (starts at the cached
     #                               prefix length under prefix reuse, §7)
     cached: int = 0               # tokens served from a cached prefix
+    tenant: Optional[str] = None  # submitting tenant (§10); None = implicit
+    weight: float = 1.0           # tenant share weight for WDRR dispatch
 
     @property
     def remaining(self) -> int:
@@ -61,15 +63,24 @@ class LocalScheduler:
         # rid -> resident kv tokens. Counts toward kv_used, not decode load.
         self.retained: Dict[int, int] = {}
         self.kv_used = 0
+        # WDRR deficit counters (§10): tenant -> unspent token allowance,
+        # carried across iterations so long-run prefill dispatch converges
+        # to the tenants' share weights. Only populated while requests of
+        # more than one tenant share the queue.
+        self._drr_deficit: Dict[Optional[str], float] = {}
 
     # ------------------------------------------------------------ enqueues
-    def enqueue_prefill(self, rid: int, input_len: int,
-                        cached: int = 0) -> None:
+    def enqueue_prefill(self, rid: int, input_len: int, cached: int = 0,
+                        tenant: Optional[str] = None,
+                        weight: float = 1.0) -> None:
         """``cached`` prefix tokens come from a retained KV (copy-on-extend)
         — chunking starts at ``cached``, but the request's KV footprint is
-        the full ``input_len`` (the copy is its own)."""
+        the full ``input_len`` (the copy is its own). ``tenant``/``weight``
+        feed the WDRR dispatch order (§10) when several tenants share the
+        queue."""
         self.prefill_queue[rid] = PrefillWork(rid, input_len, done=cached,
-                                              cached=cached)
+                                              cached=cached, tenant=tenant,
+                                              weight=weight)
         self.kv_used += input_len
 
     def enqueue_migration(self, rid: int, kv_tokens: int, remaining_out: int) -> None:
@@ -115,7 +126,16 @@ class LocalScheduler:
 
     def plan_iteration(self) -> IterationPlan:
         """Chunked-prefill continuous batching: decode first, then prefill
-        chunks up to the token budget (Sarathi-style stall-free batching)."""
+        chunks up to the token budget (Sarathi-style stall-free batching).
+
+        When requests of more than one tenant share the prefill queue, the
+        chunk order runs weighted deficit round-robin across per-tenant
+        FIFO groups (§10) — each round a tenant's deficit grows by
+        ``mixed_chunk_budget × weight`` and its head-of-line chunks are
+        served while the deficit covers them, so a starved tenant's
+        head-of-line beats a flooder's backlog at exactly its share ratio.
+        With zero or one tenant present the plan is the plain FIFO scan
+        (identical to the pre-tenancy scheduler)."""
         plan = IterationPlan()
         budget = self.token_budget
         slots = self.max_batch
@@ -127,15 +147,58 @@ class LocalScheduler:
             budget -= 1
         if plan.decode_rids:
             budget = min(budget, self.mixed_chunk_budget)
-        for rid, w in self.prefill_queue.items():
-            if slots == 0 or budget <= 0:
-                break
-            chunk = min(w.remaining, budget)
-            if chunk <= 0:
-                continue
-            plan.prefill_chunks.append((rid, w.done, chunk))
-            budget -= chunk
-            slots -= 1
+
+        groups: "OrderedDict[Optional[str], List[PrefillWork]]" = OrderedDict()
+        for w in self.prefill_queue.values():
+            groups.setdefault(w.tenant, []).append(w)
+        if len(groups) <= 1:
+            self._drr_deficit.clear()
+            for rid, w in self.prefill_queue.items():
+                if slots == 0 or budget <= 0:
+                    break
+                chunk = min(w.remaining, budget)
+                if chunk <= 0:
+                    continue
+                plan.prefill_chunks.append((rid, w.done, chunk))
+                budget -= chunk
+                slots -= 1
+            return plan
+
+        # ---- WDRR across per-tenant groups (one chunk per rid per plan)
+        for t in list(self._drr_deficit):
+            if t not in groups:
+                del self._drr_deficit[t]       # departed tenant: reset
+        heads = {t: 0 for t in groups}
+        active = list(groups)
+        quantum = self.mixed_chunk_budget
+        rounds = 0
+        while budget > 0 and slots > 0 and active and rounds < 64:
+            rounds += 1
+            for t in list(active):
+                if budget <= 0 or slots <= 0:
+                    break
+                wl = groups[t]
+                weight = max(wl[0].weight, 1e-3)
+                # accrue, capped so an absent-then-returning tenant cannot
+                # hoard more than one full iteration's worth of allowance
+                self._drr_deficit[t] = min(
+                    self._drr_deficit.get(t, 0.0) + quantum * weight,
+                    float(max(self.token_budget, quantum)))
+                while heads[t] < len(wl) and budget > 0 and slots > 0:
+                    w = wl[heads[t]]
+                    chunk = min(w.remaining, budget)
+                    if chunk <= 0:
+                        heads[t] += 1
+                        continue
+                    if self._drr_deficit[t] < chunk:
+                        break              # wait for the next round's quantum
+                    plan.prefill_chunks.append((w.rid, w.done, chunk))
+                    self._drr_deficit[t] -= chunk
+                    budget -= chunk
+                    slots -= 1
+                    heads[t] += 1
+                if heads[t] >= len(wl):
+                    active.remove(t)
         return plan
 
     # ------------------------------------------------------ state advance

@@ -18,6 +18,9 @@ class RequestState(enum.Enum):
     MIGRATING = "migrating"          # waiting for / doing KV-cache transfer
     DECODING = "decoding"
     FINISHED = "finished"
+    REJECTED = "rejected"            # admission turned it away (§10): the
+    #                                  request never entered scheduling or
+    #                                  KV accounting and never will
 
 
 @dataclass
@@ -34,6 +37,11 @@ class Request:
     session_id: Optional[int] = None
     parent_rid: Optional[int] = None
     history_len: int = 0             # tokens shared with the parent's context
+
+    # multi-tenancy (DESIGN.md §10): which client submitted this request;
+    # None means the implicit single tenant (admission treats it as
+    # "anonymous")
+    tenant_id: Optional[str] = None
 
     # scheduling bookkeeping
     prefill_instance: Optional[int] = None

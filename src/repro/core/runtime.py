@@ -58,6 +58,9 @@ from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
                                 ServingSystem, TIERS, TokenCallback,
                                 UndispatchableError)
 from repro.core.slo import SLO, SchedulerConfig
+from repro.core.tenants import (DEFAULT_TENANT, AdmissionConfig,
+                                AdmissionController, Deferred, Rejected,
+                                TenantRegistry)
 from repro.core.ttft_predictor import TTFTPredictor
 
 
@@ -78,6 +81,8 @@ class RuntimeCore(ServingSystem):
                       prefix_cache: bool = False,
                       prefix_block: int = DEFAULT_BLOCK,
                       fault_plan: Optional[FaultPlan] = None,
+                      tenants: Optional[TenantRegistry] = None,
+                      admission=False,
                       ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
@@ -145,6 +150,15 @@ class RuntimeCore(ServingSystem):
             # memory belongs to the new duty, and correctness stays trivial
             self.pools.on_flip = \
                 lambda iid, frm, to: self.prefix_mgr.invalidate_instance(iid)
+        # ---- multi-tenancy + admission control (DESIGN.md §10)
+        self.tenants: Optional[TenantRegistry] = tenants
+        self.admission_ctl: Optional[AdmissionController] = None
+        if admission:
+            if self.tenants is None:
+                self.tenants = TenantRegistry()   # auto-registering roster
+            cfg = admission if isinstance(admission, AdmissionConfig) \
+                else AdmissionConfig()
+            self.admission_ctl = AdmissionController(self, self.tenants, cfg)
         self.autoscaler: Optional[AutoScaler] = None
         if getattr(self.policy, "elastic", False):
             self.autoscaler = AutoScaler(
@@ -175,6 +189,17 @@ class RuntimeCore(ServingSystem):
         """Re-deliver a deferred request (gated on its parent, or unplaced
         while no instance was ACTIVE) into the backend's arrival path."""
         raise NotImplementedError
+
+    def _schedule_retry(self, rid: int, at: float) -> None:
+        """Admission deferred ``rid`` (§10): re-deliver it into the arrival
+        path at system-clock time ``at`` — strictly later than now, unlike
+        ``_arrival_due`` which re-delivers immediately."""
+        raise NotImplementedError
+
+    def _request_rejected(self, rid: int) -> None:
+        """Admission rejected ``rid`` for good (§10): drop any backend-side
+        bookkeeping (the engine pops its synthesized prompt; the sim holds
+        nothing). The request never entered scheduling or KV accounting."""
 
     def _prepare_dispatch(self, handle: RequestHandle, now: float) -> None:
         """Called once per request right before placement, after any parent
@@ -286,12 +311,28 @@ class RuntimeCore(ServingSystem):
     # ---------------------------------------------------- request tracking
     def _register(self, req: Request, tier: str,
                   on_token: Optional[TokenCallback],
-                  on_finish: Optional[FinishCallback]) -> RequestHandle:
+                  on_finish: Optional[FinishCallback],
+                  tenant_id: Optional[str] = None) -> RequestHandle:
+        if req.rid in self.handles:
+            raise ValueError(f"rid {req.rid} already submitted")
+        if tenant_id is not None:
+            req.tenant_id = tenant_id
+        if self.tenants is not None:
+            if req.tenant_id is not None:
+                # a registered tenant's declared tier overrides the
+                # call-site default; unknown tenants auto-register as
+                # standard/1.0
+                tier = self.tenants.ensure(req.tenant_id).tier
+            else:
+                # untagged requests in a tenanted run share the anonymous
+                # bucket so admission charges, WDRR labels, and per-tenant
+                # report rows all agree; the call-site tier is kept
+                req.tenant_id = DEFAULT_TENANT
+                self.tenants.ensure(DEFAULT_TENANT)
+            self.tenants.note_submit(req.tenant_id)
         if tier not in TIERS:
             raise ValueError(f"unknown SLO tier {tier!r}; "
                              f"choose from {sorted(TIERS)}")
-        if req.rid in self.handles:
-            raise ValueError(f"rid {req.rid} already submitted")
         handle = RequestHandle(req=req, slo=TIERS[tier].apply(self.slo),
                                tier=tier, on_token=on_token,
                                on_finish=on_finish)
@@ -304,13 +345,30 @@ class RuntimeCore(ServingSystem):
         """Place ``handle``'s prefill (Algorithm 1 + §7 prefix affinity).
         Returns the instance, or None when the request was deferred: a
         multi-turn follow-up whose parent has not finished yet (released in
-        ``finish``), or no ACTIVE instance exists (released on the next
+        ``finish``), admission parked it in the RetryQueue or rejected it
+        outright (§10 — before placement, so rejected requests never touch
+        KV accounting), or no ACTIVE instance exists (released on the next
         ``activate_instance``)."""
         req = handle.req
         if req.parent_rid is not None:
             parent = self.handles.get(req.parent_rid)
             if parent is not None and not parent.done:
+                if parent.rejected:
+                    # the conversation cannot continue without the parent's
+                    # answer: cascade the typed rejection to the follow-up
+                    self._reject(handle,
+                                 self.admission_ctl.cascade(handle, now),
+                                 now)
+                    return None
                 self._gated.setdefault(req.parent_rid, []).append(req.rid)
+                return None
+        if self.admission_ctl is not None:
+            decision = self.admission_ctl.consider(handle, now)
+            if isinstance(decision, Rejected):
+                self._reject(handle, decision, now)
+                return None
+            if isinstance(decision, Deferred):
+                self._schedule_retry(req.rid, decision.retry_at)
                 return None
         self._prepare_dispatch(handle, now)
         hits = None
@@ -343,8 +401,18 @@ class RuntimeCore(ServingSystem):
                     cached, req.input_len - cached)
         req.prefill_instance = iid
         req.state = RequestState.PREFILLING
+        # tenant labels reach the scheduler only when a registry is armed:
+        # a registry-less run stays exact legacy FIFO even on a
+        # tenant-labelled trace (WDRR is part of the tenancy subsystem, §10)
+        tenant = weight = None
+        if self.tenants is not None and req.tenant_id is not None:
+            tenant = req.tenant_id
+            t = self.tenants.get(req.tenant_id)
+            weight = t.weight if t is not None else 1.0
         self.local_of(iid).enqueue_prefill(req.rid, req.input_len,
-                                           cached=cached)
+                                           cached=cached,
+                                           tenant=tenant,
+                                           weight=weight or 1.0)
         self.decisions["prefill"] += 1
         if req.recoveries:
             # recovery recompute (§8): tokens prefilled again because a
@@ -365,10 +433,30 @@ class RuntimeCore(ServingSystem):
         if handle.on_token is not None:
             handle.on_token(handle, token, now)
 
+    def _reject(self, handle: RequestHandle, decision, now: float) -> None:
+        """Admission turned ``handle`` away (§10): terminal, typed, and
+        outside every scheduling/KV structure — the request was never
+        placed, so there is nothing to unwind. Children gated on it are
+        released (they cascade through ``dispatch_prefill``), and
+        ``on_finish`` fires so callers waiting on the handle observe the
+        terminal state (check ``handle.rejected``)."""
+        req = handle.req
+        req.state = RequestState.REJECTED
+        handle.rejection = decision
+        self._request_rejected(req.rid)
+        for rid in self._gated.pop(req.rid, []):
+            child = self.handles[rid]
+            child.req.arrival = max(child.req.arrival, now)
+            self._arrival_due(rid)
+        if handle.on_finish is not None:
+            handle.on_finish(handle)
+
     def finish(self, handle: RequestHandle, now: float) -> None:
         handle.req.finish_time = now
         handle.req.state = RequestState.FINISHED
         self._recent_finish.append(handle.meets_slo())
+        if self.tenants is not None and handle.req.tenant_id is not None:
+            self.tenants.note_finish(handle.req.tenant_id, handle.meets_slo())
         self._session_note_finish(handle)
         if self.prefix_mgr is not None:
             self._maybe_retain(handle)
@@ -862,6 +950,8 @@ class RuntimeCore(ServingSystem):
                 kv_tokens_capacity=loc.kv_capacity,
             ))
         self.policy.on_monitor_tick(now)
+        if self.tenants is not None:
+            self.tenants.on_tick(now)        # credit accrual (§10)
         if self.autoscaler is not None:
             self.autoscaler.on_monitor_tick(now)
         self._maybe_finalize_retires(now)
@@ -903,6 +993,42 @@ class RuntimeCore(ServingSystem):
             return {}
         return dict(self.fault_stats)
 
+    def admission_detail(self) -> Dict[str, float]:
+        """Admission-control accounting (§10); empty when admission is off
+        (so tenant-less reports stay byte-identical to pre-tenancy builds)."""
+        if self.admission_ctl is None:
+            return {}
+        return dict(self.admission_ctl.stats)
+
+    def tenant_detail(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant report rows (§10); empty without a tenant registry.
+        A tenant with zero finished requests gets ``None`` metrics (callers
+        render 'n/a', never divide by zero)."""
+        if self.tenants is None:
+            return {}
+        by_tenant: Dict[str, list] = {}
+        for h in self.handles.values():
+            if h.req.tenant_id is not None:
+                by_tenant.setdefault(h.req.tenant_id, []).append(h)
+        out: Dict[str, Dict[str, float]] = {}
+        for tid in self.tenants.ids():
+            hs = by_tenant.get(tid, [])
+            sub = ServeReport(handles=hs)      # reuse percentile machinery
+            tenant = self.tenants.get(tid)
+            row = {
+                "tier": tenant.tier,
+                "weight": tenant.weight,
+                "attainment": (sum(1 for h in hs if h.meets_slo()) / len(hs)
+                               if hs else None),
+                "p99_ttft": sub.percentile("ttft", 0.99),
+                "p99_tpot": sub.percentile("tpot", 0.99),
+                "credits": self.tenants.credits(tid),
+                "violation_ewma": self.tenants.violation_ewma(tid),
+            }
+            row.update(self.tenants.counters.get(tid, {}))
+            out[tid] = row
+        return out
+
     def report(self) -> ServeReport:
         return ServeReport(handles=list(self.handles.values()),
                            flip_detail=self.flip_counts(),
@@ -910,4 +1036,6 @@ class RuntimeCore(ServingSystem):
                            duration=self.clock.now(),
                            scaling=self.scaling_detail(),
                            prefix=self.prefix_detail(),
-                           faults=self.fault_detail())
+                           faults=self.fault_detail(),
+                           admission=self.admission_detail(),
+                           per_tenant=self.tenant_detail())

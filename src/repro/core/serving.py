@@ -22,6 +22,7 @@ API (DESIGN.md §1.3).
 from __future__ import annotations
 
 import abc
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -81,10 +82,21 @@ class RequestHandle:
     on_token: Optional[TokenCallback] = None
     on_finish: Optional[FinishCallback] = None
     tokens: List[Optional[int]] = field(default_factory=list)
+    # set iff admission turned the request away (a tenants.Rejected with
+    # reason + retry_after); the request is terminal and never scheduled
+    rejection: Optional[object] = None
 
     @property
     def rid(self) -> int:
         return self.req.rid
+
+    @property
+    def tenant_id(self) -> Optional[str]:
+        return self.req.tenant_id
+
+    @property
+    def rejected(self) -> bool:
+        return self.rejection is not None
 
     @property
     def done(self) -> bool:
@@ -121,6 +133,23 @@ class ServeReport:
     # recovered/lost, kv_tokens_lost, re_prefill_tokens, migrations_aborted,
     # replacements. Empty when no fault ever fired.
     faults: Dict[str, float] = field(default_factory=dict)
+    # admission accounting (DESIGN.md §10): admitted, deferred, retries,
+    # rejected, shed. Empty when admission control is off.
+    admission: Dict[str, float] = field(default_factory=dict)
+    # per-tenant surface (DESIGN.md §10): tenant_id -> {tier, weight,
+    # submitted, admitted, deferred, rejected, shed, finished, attainment,
+    # p99_ttft, p99_tpot, credits, violation_ewma}. Empty when no tenant
+    # registry is attached.
+    per_tenant: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    #: every field name ``summary()`` can emit, in emission order —
+    #: tools/check_docs.py diffs this against DESIGN.md's report-schema
+    #: table, so extending summary() without documenting it fails CI.
+    SUMMARY_FIELDS = ("finished", "p50_ttft", "p90_ttft", "p90_tpot",
+                      "attainment", "flips", "scale_ups", "scale_downs",
+                      "instance_s", "prefix_hits", "saved_prefill",
+                      "crashes", "recovered", "re_prefill_toks",
+                      "admitted", "rejected", "shed", "tenants")
 
     @property
     def flips(self) -> int:
@@ -142,23 +171,33 @@ class ServeReport:
             return 1.0
         return sum(1 for h in self.handles if h.meets_slo()) / len(self.handles)
 
-    def attainment_by_tier(self) -> Dict[str, float]:
-        out: Dict[str, float] = {}
-        for tier in sorted({h.tier for h in self.handles}):
+    def attainment_by_tier(self, tiers: Optional[List[str]] = None,
+                           ) -> Dict[str, Optional[float]]:
+        """Attainment per SLO tier. By default only tiers that actually
+        received requests appear; pass ``tiers`` to force specific rows,
+        where a tier with zero requests maps to ``None`` (rendered "n/a" by
+        callers, never a ZeroDivisionError)."""
+        out: Dict[str, Optional[float]] = {}
+        names = (sorted({h.tier for h in self.handles}) if tiers is None
+                 else list(tiers))
+        for tier in names:
             hs = [h for h in self.handles if h.tier == tier]
-            out[tier] = sum(1 for h in hs if h.meets_slo()) / len(hs)
+            out[tier] = (sum(1 for h in hs if h.meets_slo()) / len(hs)
+                         if hs else None)
         return out
 
     def percentile(self, metric: str, q: float) -> Optional[float]:
         """q-quantile of ``metric`` ('ttft'/'tpot') over the requests where
         it is already observable (TTFT exists once o_1 streamed, TPOT once
-        finished); ``None`` when no sample exists yet (callers print 'n/a',
-        never crash)."""
+        finished), using standard nearest-rank (ceil(q·n), 1-based);
+        ``None`` when no sample exists yet (callers print 'n/a', never
+        crash)."""
         vals = sorted(v for h in self.handles
                       if (v := getattr(h, metric)) is not None)
         if not vals:
             return None
-        return vals[min(int(q * len(vals)), len(vals) - 1)]
+        rank = max(math.ceil(q * len(vals)), 1)       # 1-based nearest rank
+        return vals[min(rank, len(vals)) - 1]
 
     def summary(self) -> str:
         def ms(v: Optional[float]) -> str:
@@ -181,7 +220,33 @@ class ServeReport:
             s += (f" crashes={self.faults['crashes']:.0f}"
                   f" recovered={self.faults['requests_recovered']:.0f}"
                   f" re_prefill_toks={self.faults['re_prefill_tokens']:.0f}")
+        if self.admission:
+            s += (f" admitted={self.admission.get('admitted', 0):.0f}"
+                  f" rejected={self.admission.get('rejected', 0):.0f}"
+                  f" shed={self.admission.get('shed', 0):.0f}")
+        if self.per_tenant:
+            s += f" tenants={len(self.per_tenant)}"
         return s
+
+    def tenant_summary(self) -> str:
+        """One line per tenant (DESIGN.md §10); tenants with zero finished
+        requests render 'n/a' metrics, never crash."""
+        def fmt(v, spec=".2f", scale=1.0, suffix=""):
+            return "n/a" if v is None else f"{v * scale:{spec}}{suffix}"
+
+        lines = []
+        for tid in sorted(self.per_tenant):
+            t = self.per_tenant[tid]
+            lines.append(
+                f"  {tid:<12} tier={t.get('tier', '?'):<11} "
+                f"att={fmt(t.get('attainment'))} "
+                f"p99_ttft={fmt(t.get('p99_ttft'), '.1f', 1e3, 'ms')} "
+                f"p99_tpot={fmt(t.get('p99_tpot'), '.1f', 1e3, 'ms')} "
+                f"adm={t.get('admitted', 0):.0f}/{t.get('submitted', 0):.0f} "
+                f"rej={t.get('rejected', 0):.0f} "
+                f"shed={t.get('shed', 0):.0f} "
+                f"credits={t.get('credits', 0.0):.1f}")
+        return "\n".join(lines)
 
 
 class ServingSystem(abc.ABC):
@@ -195,12 +260,16 @@ class ServingSystem(abc.ABC):
 
     @abc.abstractmethod
     def submit(self, req: Request, *, prompt=None, tier: str = "standard",
+               tenant_id: Optional[str] = None,
                on_token: Optional[TokenCallback] = None,
                on_finish: Optional[FinishCallback] = None) -> RequestHandle:
         """Register ``req`` to arrive at ``req.arrival`` (system-clock
         seconds). ``prompt`` is the token array for real-compute backends;
         backends that only model timing ignore it, and the engine synthesizes
-        a deterministic prompt of ``req.input_len`` tokens when omitted."""
+        a deterministic prompt of ``req.input_len`` tokens when omitted.
+        ``tenant_id`` attributes the request to a registered tenant (falls
+        back to ``req.tenant_id``, then to the implicit single tenant); when
+        the tenant declares an SLO tier it overrides the default ``tier``."""
 
     @abc.abstractmethod
     def step(self) -> bool:
@@ -234,7 +303,7 @@ def replay_trace(system: ServingSystem, trace: List[Request], *,
         req = Request(rid=r.rid, arrival=r.arrival * time_scale,
                       input_len=r.input_len, output_len=r.output_len,
                       session_id=r.session_id, parent_rid=r.parent_rid,
-                      history_len=r.history_len)
+                      history_len=r.history_len, tenant_id=r.tenant_id)
         handles.append(system.submit(req, tier=tier, on_token=on_token,
                                      on_finish=on_finish))
     return handles

@@ -63,7 +63,7 @@ class ArrowEngineCluster(RuntimeCore):
                  params=None, chunk_tokens: Optional[int] = None,
                  policy: str = "arrow", autoscaler_cfg=None,
                  prefix_cache: bool = False, fault_plan=None,
-                 step_mode: str = "fused"):
+                 step_mode: str = "fused", tenants=None, admission=False):
         import jax
         self.cfg = cfg
         self.capacity = capacity
@@ -88,7 +88,8 @@ class ArrowEngineCluster(RuntimeCore):
                            policy=policy, slo=slo, sched_cfg=sched_cfg,
                            predictor=predictor, clock=WallClock(),
                            autoscaler_cfg=autoscaler_cfg,
-                           prefix_cache=prefix_cache, fault_plan=fault_plan)
+                           prefix_cache=prefix_cache, fault_plan=fault_plan,
+                           tenants=tenants, admission=admission)
         self._pending: list = []                # heap: (arrival, rid)
         self._live: Dict[int, RequestHandle] = {}
         self._prompts: Dict[int, np.ndarray] = {}
@@ -135,6 +136,17 @@ class ArrowEngineCluster(RuntimeCore):
 
     def _arrival_due(self, rid: int) -> None:
         heapq.heappush(self._pending, (self.handles[rid].req.arrival, rid))
+
+    def _schedule_retry(self, rid: int, at: float) -> None:
+        """Admission deferred ``rid`` (§10): re-enter the arrival heap at a
+        strictly future wall-clock time (NOT the original arrival — that is
+        already due and would spin inside the current step's pop loop)."""
+        heapq.heappush(self._pending, (max(at, self.clock.now() + 1e-6), rid))
+
+    def _request_rejected(self, rid: int) -> None:
+        """Admission rejected ``rid`` (§10): free its synthesized prompt —
+        it never entered scheduling, so there is nothing else to unwind."""
+        self._prompts.pop(rid, None)
 
     # ------------------------------------------------ fault hooks (§8)
     def _on_instance_failed(self, iid: int) -> None:
@@ -275,7 +287,7 @@ class ArrowEngineCluster(RuntimeCore):
 
     # --------------------------------------------------------- ServingSystem
     def submit(self, req: Request, *, prompt: Optional[np.ndarray] = None,
-               tier: str = "standard",
+               tier: str = "standard", tenant_id: Optional[str] = None,
                on_token: Optional[TokenCallback] = None,
                on_finish: Optional[FinishCallback] = None) -> RequestHandle:
         """``req.arrival`` is wall-clock seconds after the serving loop
@@ -287,7 +299,8 @@ class ArrowEngineCluster(RuntimeCore):
             rng = np.random.default_rng(0xA44 + req.rid)
             prompt = rng.integers(1, self.cfg.vocab_size,
                                   size=n).astype(np.int32)
-        handle = self._register(req, tier, on_token, on_finish)
+        handle = self._register(req, tier, on_token, on_finish,
+                                tenant_id=tenant_id)
         if prompt is not None:
             req.input_len = len(prompt)
             self._prompts[req.rid] = np.asarray(prompt, np.int32)

@@ -48,7 +48,11 @@ def run_and_report(system: ServingSystem, trace: List[Request], *,
     by_tier = report.attainment_by_tier()
     if len(by_tier) > 1:
         print(f"[{label}] attainment by tier: " +
-              " ".join(f"{k}={v:.2f}" for k, v in by_tier.items()))
+              " ".join("{}={}".format(k, "n/a" if v is None else f"{v:.2f}")
+                       for k, v in by_tier.items()))
+    if report.per_tenant:
+        print(f"[{label}] per-tenant:")
+        print(report.tenant_summary())
     return report
 
 
@@ -63,7 +67,10 @@ def list_traces() -> None:
                           f"[{p.spike_window[0]:.0%},{p.spike_window[1]:.0%})",
                  "diurnal": f"diurnal x{p.shape_mult:g} peak",
                  "sessions": f"sessions ~{p.turns_mean:g} turns, "
-                             f"think {p.think_mean:g}s"}[p.rate_shape]
+                             f"think {p.think_mean:g}s",
+                 "tenants": f"{p.n_tenants}+flood x{p.shape_mult:g} over "
+                            f"[{p.spike_window[0]:.0%},"
+                            f"{p.spike_window[1]:.0%})"}[p.rate_shape]
         print(f"{p.name:<12} {p.duration:>5.0f} {p.base_rate:>5.1f}/s "
               f"{p.in_median:>7.0f} {p.out_median:>8.0f} {p.in_out_corr:>5.2f} "
               f"{p.slo_ttft:>8.2f}s {p.slo_tpot:>8.3f}s  {shape}")
@@ -94,7 +101,9 @@ def run_engine(args) -> ServeReport:
                                  policy=args.policy,
                                  autoscaler_cfg=autoscaler_cfg(args),
                                  prefix_cache=args.prefix_cache == "on",
-                                 fault_plan=fault_plan(args))
+                                 fault_plan=fault_plan(args),
+                                 tenants=tenant_registry(args),
+                                 admission=args.admission == "on")
     if args.trace:
         from repro.traces import load_trace
         trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
@@ -119,7 +128,9 @@ def run_sim(args) -> ServeReport:
                     policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot),
                     autoscaler_cfg=autoscaler_cfg(args),
                     prefix_cache=args.prefix_cache == "on",
-                    fault_plan=fault_plan(args))
+                    fault_plan=fault_plan(args),
+                    tenants=tenant_registry(args),
+                    admission=args.admission == "on")
     # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
     # time and must cover the whole trace
     return run_and_report(sim, trace, tier=args.tier,
@@ -132,6 +143,17 @@ def fault_plan(args) -> Optional[FaultPlan]:
     if args.fault_plan is None:
         return None
     return FaultPlan.parse(args.fault_plan)
+
+
+def tenant_registry(args):
+    """Build the ``--tenants`` roster (DESIGN.md §10); None = the implicit
+    single tenant. ``--admission on`` without ``--tenants`` still arms the
+    controller (every request lands on the auto-registered 'anonymous'
+    tenant)."""
+    if args.tenants is None:
+        return None
+    from repro.core.tenants import default_registry
+    return default_registry(args.tenants)
 
 
 def autoscaler_cfg(args) -> Optional[AutoScalerConfig]:
@@ -193,6 +215,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="prefix-aware KV reuse (DESIGN.md §7): retain "
                          "finished contexts and prefill only the uncached "
                          "suffix of multi-turn / repeated prompts")
+    ap.add_argument("--tenants", type=int, default=None,
+                    help="multi-tenant serving (DESIGN.md §10): register N "
+                         "well-behaved tenants t0..t{N-1} (tiers cycling "
+                         "interactive/standard/batch) plus the adversarial "
+                         "'flood' tenant the 'tenants' trace preset drives; "
+                         "requests carry tenant ids from the trace")
+    ap.add_argument("--admission", choices=("on", "off"), default="off",
+                    help="credit-based admission control (DESIGN.md §10): "
+                         "watermark guard over cluster pressure — admit "
+                         "all below the low watermark, credit-gate with "
+                         "deadline-aware retries between watermarks, shed "
+                         "above the high watermark")
     ap.add_argument("--list-traces", action="store_true",
                     help="print the trace-preset table and exit")
     ap.add_argument("--list-policies", action="store_true",

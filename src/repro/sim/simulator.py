@@ -66,14 +66,17 @@ class Simulator(RuntimeCore):
                  profiles: Optional[Dict[int, InstanceProfile]] = None,
                  token_budget: int = 8192, flip_latency: float = 0.0,
                  autoscaler_cfg=None, prefix_cache: bool = False,
-                 fault_plan=None):
+                 fault_plan=None, tenants=None, admission=False):
         """``profiles`` (iid -> InstanceProfile) enables heterogeneous
         clusters (paper §8): per-instance cost models + a per-instance-fitted
         TTFT predictor; ``profile`` is the homogeneous default (elastic
         scale-ups always materialize from it). ``autoscaler_cfg`` tunes the
         AutoScaler attached when ``policy`` is elastic (DESIGN.md §6).
         ``fault_plan`` (core/faults.py) schedules crash/slowdown injection
-        as exact virtual-clock events (DESIGN.md §8)."""
+        as exact virtual-clock events (DESIGN.md §8). ``tenants`` attaches a
+        ``TenantRegistry`` (core/tenants.py); ``admission`` (bool or an
+        ``AdmissionConfig``) arms the watermark admission controller
+        (DESIGN.md §10)."""
         self.cfg = cfg
         self._spawn_profile = profile
         self._token_budget = token_budget
@@ -102,7 +105,8 @@ class Simulator(RuntimeCore):
         self._init_runtime(ids, n_prefill=n_prefill, policy=policy, slo=slo,
                            sched_cfg=sched_cfg, predictor=predictor,
                            clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg,
-                           prefix_cache=prefix_cache, fault_plan=fault_plan)
+                           prefix_cache=prefix_cache, fault_plan=fault_plan,
+                           tenants=tenants, admission=admission)
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
@@ -177,6 +181,12 @@ class Simulator(RuntimeCore):
         re-enter the arrival path at the current virtual time."""
         self._push(self._now, self._on_arrival, rid)
 
+    def _schedule_retry(self, rid: int, at: float) -> None:
+        """Admission deferred ``rid`` (§10): exact virtual-time retry event.
+        These events also keep the monitor tick armed, so credit accrual
+        continues while requests wait."""
+        self._push(max(at, self._now), self._on_arrival, rid)
+
     # ------------------------------------- elastic lifecycle hooks (§6)
     def _create_instance(self, iid: int) -> float:
         """Materialize a new instance from the homogeneous InstanceProfile;
@@ -220,9 +230,11 @@ class Simulator(RuntimeCore):
 
     # --------------------------------------------------------- ServingSystem
     def submit(self, req: Request, *, prompt=None, tier: str = "standard",
+               tenant_id: Optional[str] = None,
                on_token: Optional[TokenCallback] = None,
                on_finish: Optional[FinishCallback] = None) -> RequestHandle:
-        handle = self._register(req, tier, on_token, on_finish)
+        handle = self._register(req, tier, on_token, on_finish,
+                                tenant_id=tenant_id)
         self.requests[req.rid] = req
         self._push(max(req.arrival, self._now), self._on_arrival, req.rid)
         if not self._tick_armed:

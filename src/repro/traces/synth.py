@@ -34,6 +34,12 @@ Preset provenance and target moments (at ``rate_scale=1.0``):
               fresh user message                                           exp. think gap
                                                                            (mean 12 s)
 
+  tenants     synthetic multi-tenancy       2.0/s   1200    150      0.50  Poisson per tenant
+              study (DESIGN.md §10): 4                                     (rate/5 each); the
+              well-behaved tenants plus                                    "flood" tenant
+              one adversarial flooder                                      ramps 10x over
+                                                                           t∈[45%,70%)
+
   *  multiturn's base_rate counts *sessions* per second; the request rate
      is ~turns_mean higher.
   ** first-turn prompt median; a follow-up prompt is the whole previous
@@ -89,6 +95,11 @@ class TracePreset:
     turns_mean: float = 4.0        # geometric mean turns per session
     followup_median: float = 96.0  # fresh user-message tokens per follow-up
     think_mean: float = 12.0       # exp. think-time gap between turns (s)
+    # tenancy-preset knobs (rate_shape == "tenants", DESIGN.md §10):
+    # n_tenants well-behaved tenants t0..t{n-1} share base_rate evenly; one
+    # adversarial "flood" tenant starts at the same per-tenant rate and
+    # ramps shape_mult× inside spike_window.
+    n_tenants: int = 4
 
     def rate_at(self, t: float) -> float:
         """Deterministic request rate (req/s) at trace time ``t`` for the
@@ -152,6 +163,17 @@ TRACE_PRESETS: Dict[str, TracePreset] = {
         slo_ttft=2.0, slo_tpot=0.1,
         rate_shape="sessions", turns_mean=4.0, followup_median=96.0,
         think_mean=12.0),
+    # ---- multi-tenant preset (DESIGN.md §10): heterogeneous tenants plus
+    # one adversarial flooder ramping 10× mid-trace — the workload where
+    # credit-based admission + WDRR dispatch pay. Exercised by
+    # benchmarks/bench_tenants.py and tests/test_tenants.py.
+    "tenants": TracePreset(
+        "tenants", duration=600.0, base_rate=2.0,
+        in_median=1200.0, in_sigma=0.9, out_median=150.0, out_sigma=0.7,
+        in_out_corr=0.5, max_input=8192, max_output=1024,
+        slo_ttft=2.5, slo_tpot=0.12,
+        rate_shape="tenants", shape_mult=10.0, spike_window=(0.45, 0.7),
+        n_tenants=4),
 }
 
 
@@ -245,6 +267,48 @@ def _session_trace(rng: np.random.Generator, p: TracePreset,
     return flat
 
 
+def _tenant_trace(rng: np.random.Generator, p: TracePreset,
+                  rate_scale: float) -> List[Request]:
+    """Multi-tenant workload (DESIGN.md §10): ``n_tenants`` well-behaved
+    tenants each drive a homogeneous Poisson stream at ``base_rate /
+    n_tenants``; an adversarial "flood" tenant starts at the same
+    per-tenant rate and ramps ``shape_mult``× inside ``spike_window``
+    (Lewis–Shedler thinning). Lengths are the usual correlated lognormals;
+    rids are assigned in global arrival order and every request carries its
+    ``tenant_id``."""
+    per = p.base_rate / max(p.n_tenants, 1)
+    a, b = p.spike_window
+    labelled: List[Tuple[float, str]] = []
+    for i in range(p.n_tenants):
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / per)
+            if t >= p.duration:
+                break
+            labelled.append((t, f"t{i}"))
+    lam_max = per * max(p.shape_mult, 1.0)
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / lam_max)
+        if t >= p.duration:
+            break
+        inside = a * p.duration <= t < b * p.duration
+        if rng.random() * lam_max <= per * (p.shape_mult if inside else 1.0):
+            labelled.append((t, "flood"))
+    labelled.sort(key=lambda x: x[0])
+    n = len(labelled)
+    rho = p.in_out_corr
+    z = rng.standard_normal((n, 2))
+    z_out = rho * z[:, 0] + math.sqrt(max(1 - rho * rho, 0.0)) * z[:, 1]
+    in_len = np.clip(np.exp(math.log(p.in_median) + p.in_sigma * z[:, 0]),
+                     16, p.max_input).astype(int)
+    out_len = np.clip(np.exp(math.log(p.out_median) + p.out_sigma * z_out),
+                      1, p.max_output).astype(int)
+    return [Request(rid=i, arrival=float(labelled[i][0]) / rate_scale,
+                    input_len=int(in_len[i]), output_len=int(out_len[i]),
+                    tenant_id=labelled[i][1]) for i in range(n)]
+
+
 def load_trace(name: str, rate_scale: float = 1.0, *, seed: int = 0,
                duration: float | None = None) -> List[Request]:
     """Generate the named trace, then replay it at ``rate_scale``× speed by
@@ -257,6 +321,8 @@ def load_trace(name: str, rate_scale: float = 1.0, *, seed: int = 0,
     rng = np.random.default_rng(zlib.crc32(f"{name}:{seed}".encode()))
     if p.rate_shape == "sessions":
         return _session_trace(rng, p, rate_scale)
+    if p.rate_shape == "tenants":
+        return _tenant_trace(rng, p, rate_scale)
     times = _arrivals(rng, p, p.base_rate) / rate_scale
     n = len(times)
     # correlated lognormal lengths

@@ -91,6 +91,20 @@ def check_invariants(runtime, *, streams: bool = True) -> None:
     # ---- per-request: placement targets and stream ordering
     for rid, handle in runtime.handles.items():
         req = handle.req
+        if req.state is RequestState.REJECTED:
+            # admission-rejected requests (§10) were turned away before
+            # placement: they must hold nothing, anywhere, ever
+            if (req.prefill_instance is not None
+                    or req.decode_instance is not None
+                    or handle.tokens or req.finish_time is not None
+                    or handle.rejection is None):
+                raise AssertionError(
+                    f"rejected rid {rid} holds scheduling state "
+                    f"(prefill={req.prefill_instance} "
+                    f"decode={req.decode_instance} "
+                    f"tokens={len(handle.tokens)} "
+                    f"rejection={handle.rejection!r})")
+            continue
         for attr in ("prefill_instance", "decode_instance"):
             iid = getattr(req, attr)
             if iid is None or req.state is RequestState.FINISHED:

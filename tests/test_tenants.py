@@ -1,0 +1,501 @@
+"""Multi-tenant credit scheduling + admission control (ISSUE 6, DESIGN.md
+§10): the credit ledger / registry / retry-queue units, the watermark
+decision zones, WDRR dispatch fairness, tenant_id end-to-end on the sim,
+report-surface guards (percentile nearest-rank, n/a rendering), sim/engine
+admission parity, the invariant probe with a flooder active, and the
+satellite regressions (rejections never strand ``drain()``, cascaded
+parent rejection)."""
+import pytest
+from invariants import check_invariants
+
+from repro.configs import get_config
+from repro.core import Request, SLO
+from repro.core.request import RequestState
+from repro.core.serving import RequestHandle, ServeReport, TIERS, replay_trace
+from repro.core.tenants import (AdmissionConfig, Admitted, CreditLedger,
+                                CreditLedgerConfig, Deferred, Rejected,
+                                RetryQueue, Tenant, TenantRegistry,
+                                default_registry)
+from repro.sim import Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+CFG = get_config("gemma-2b")
+
+
+# --------------------------------------------------------------- units
+
+
+def test_tenant_validation():
+    assert Tenant("a").tier == "standard" and Tenant("a").weight == 1.0
+    with pytest.raises(ValueError, match="unknown SLO tier"):
+        Tenant("a", tier="platinum")
+    with pytest.raises(ValueError, match="weight must be > 0"):
+        Tenant("a", weight=0.0)
+
+
+def test_ledger_accrual_earns_debits_and_clamps():
+    cfg = CreditLedgerConfig(earn_rate=2.0, debit_rate=4.0, initial=8.0,
+                             cap=20.0)
+    led = CreditLedger(cfg)
+    t = Tenant("t", weight=2.0)
+    led.open(t)
+    assert led.balance("t") == 16.0                 # initial × weight
+    led.open(t)
+    assert led.balance("t") == 16.0                 # idempotent
+    # zero violations: earn at weight-scaled rate, clamp at cap × weight
+    assert led.accrue(t, 0.0, dt=1.0) == pytest.approx(20.0)
+    assert led.accrue(t, 0.0, dt=100.0) == pytest.approx(40.0)   # cap 2×20
+    # full violations: debit, floor at zero
+    assert led.accrue(t, 1.0, dt=1.0) == pytest.approx(32.0)     # -4×2
+    assert led.accrue(t, 1.0, dt=1000.0) == 0.0
+    # mixed: (earn×(1-v) - debit×v) × weight × dt
+    led._balance["t"] = 10.0
+    assert led.accrue(t, 0.25, dt=1.0) == pytest.approx(
+        10.0 + 2.0 * (2.0 * 0.75 - 4.0 * 0.25))
+
+
+def test_ledger_spend_is_gated_drain_is_not():
+    led = CreditLedger(CreditLedgerConfig(initial=5.0))
+    led.open(Tenant("t"))
+    assert led.spend("t", 4.0) and led.balance("t") == 1.0
+    assert not led.spend("t", 2.0) and led.balance("t") == 1.0
+    led.drain("t", 100.0)                           # ungated, zero floor
+    assert led.balance("t") == 0.0
+    assert led.balance("ghost") == 0.0 and not led.spend("ghost", 0.1)
+
+
+def test_retry_queue_bounds_and_attempts():
+    q = RetryQueue(maxlen=2)
+    assert q.offer(1, deadline=5.0) and q.offer(2, deadline=6.0)
+    assert not q.offer(3, deadline=7.0)             # full
+    assert q.offer(1, deadline=9.9)                 # re-offer bumps attempts
+    assert q.attempts[1] == 2 and q.deadline(1) == 5.0   # deadline is fixed
+    assert len(q) == 2 and 1 in q and 3 not in q
+    q.remove(1)
+    assert len(q) == 1 and 1 not in q and q.deadline(1) is None
+    q.remove(1)                                     # idempotent
+
+
+def test_registry_counters_violation_ewma_and_ticks():
+    reg = TenantRegistry([Tenant("a", tier="interactive", weight=2.0)])
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(Tenant("a"))
+    assert reg.ensure("b").tier == "standard"       # auto-registered
+    assert set(reg.ids()) == {"a", "b"} and len(reg) == 2 and "a" in reg
+    reg.note_submit("a"); reg.note_admit("a"); reg.note_defer("a")
+    reg.note_reject("a", shed=False); reg.note_reject("a", shed=True)
+    reg.note_finish("a", met_slo=True)
+    c = reg.counters["a"]
+    assert (c["submitted"], c["admitted"], c["deferred"]) == (1, 1, 1)
+    assert (c["rejected"], c["shed"], c["finished"], c["slo_ok"]) \
+        == (1, 1, 1, 1)
+    # EWMA saw miss, miss, hit with alpha 0.2
+    v = 0.0
+    for x in (1.0, 1.0, 0.0):
+        v += 0.2 * (x - v)
+    assert reg.violation_ewma("a") == pytest.approx(v)
+    # first tick only records the baseline; the second accrues dt
+    reg.on_tick(10.0)
+    bal = reg.credits("a")
+    reg.on_tick(11.0)
+    assert reg.credits("a") > bal
+    reg.on_tick(10.5)                               # non-monotonic: no-op
+    assert reg.credits("a") == reg.credits("a")
+
+
+def test_default_registry_roster():
+    reg = default_registry(4)
+    assert reg.ids() == ["t0", "t1", "t2", "t3", "flood"]
+    assert [reg.get(f"t{i}").tier for i in range(4)] == \
+        ["interactive", "standard", "batch", "interactive"]
+    assert reg.get("t0").weight == 2.0 and reg.get("t2").weight == 0.5
+    assert "flood" not in default_registry(2, flooder=False)
+
+
+# ------------------------------------------------- watermark decision zones
+
+
+def make_ctl(monkeypatch, pressure, *, initial=10.0, **cfg_kw):
+    """A live controller on a tiny sim with the pressure signal pinned."""
+    reg = TenantRegistry(
+        [Tenant("t")],
+        ledger=CreditLedger(CreditLedgerConfig(initial=initial,
+                                               earn_rate=0.0)))
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(10.0, 1.0), tenants=reg,
+                    admission=AdmissionConfig(cost_per_token=1.0, **cfg_kw))
+    ctl = sim.admission_ctl
+    monkeypatch.setattr(ctl, "pressure", lambda now: pressure)
+    return sim, ctl
+
+
+def handle_for(rid, *, arrival=0.0, tenant="t"):
+    req = Request(rid=rid, arrival=arrival, input_len=3, output_len=1,
+                  tenant_id=tenant)                 # cost = 4.0 credits
+    return RequestHandle(req=req, slo=SLO(10.0, 1.0))
+
+
+def test_low_zone_admits_everyone_and_drains(monkeypatch):
+    sim, ctl = make_ctl(monkeypatch, 0.1, initial=1.0)   # can't afford 4.0
+    d = ctl.consider(handle_for(1), now=0.0)
+    assert isinstance(d, Admitted) and d.cost == 4.0
+    assert sim.tenants.credits("t") == 0.0          # drained to the floor
+    assert ctl.stats["admitted"] == 1
+
+
+def test_credit_zone_spends_then_defers_then_rejects(monkeypatch):
+    sim, ctl = make_ctl(monkeypatch, 0.8, initial=4.0)
+    assert isinstance(ctl.consider(handle_for(1), now=0.0), Admitted)
+    assert sim.tenants.credits("t") == 0.0
+    # out of credit before the deadline (arrival + 1.0 × slo.ttft): defer
+    d = ctl.consider(handle_for(2), now=0.0)
+    assert isinstance(d, Deferred)
+    assert d.retry_at == pytest.approx(0.25) and d.deadline == 10.0
+    assert 2 in ctl.retry_queue and ctl.stats["deferred"] == 1
+    # re-delivery while still broke: another Deferred, counted as a retry
+    d2 = ctl.consider(handle_for(2), now=0.25)
+    assert isinstance(d2, Deferred) and ctl.stats["retries"] == 1
+    assert ctl.stats["deferred"] == 1               # not double-counted
+    # past the deadline: typed rejection, queue entry cleaned up
+    d3 = ctl.consider(handle_for(2), now=10.0)
+    assert isinstance(d3, Rejected) and d3.reason == "no_credit"
+    assert 2 not in ctl.retry_queue and ctl.is_rejected(2)
+    assert sim.tenants.counters["t"]["rejected"] == 1
+
+
+def test_credit_zone_bounded_queue_rejects_overflow(monkeypatch):
+    sim, ctl = make_ctl(monkeypatch, 0.8, initial=0.0, retry_queue_len=1)
+    assert isinstance(ctl.consider(handle_for(1), now=0.0), Deferred)
+    d = ctl.consider(handle_for(2), now=0.0)
+    assert isinstance(d, Rejected) and d.reason == "retry_queue_full"
+    assert d.retry_after > 0
+
+
+def test_shed_zone_charges_premium_never_queues(monkeypatch):
+    # premium = 4.0 cost × 4.0 premium = 16.0: affordable exactly once
+    sim, ctl = make_ctl(monkeypatch, 5.0, initial=16.0)
+    d = ctl.consider(handle_for(1), now=0.0)
+    assert isinstance(d, Admitted) and sim.tenants.credits("t") == 0.0
+    d2 = ctl.consider(handle_for(2), now=0.0)
+    assert isinstance(d2, Rejected) and d2.reason == "overload"
+    assert len(ctl.retry_queue) == 0                # shed never defers
+    assert ctl.stats["shed"] == 1 and ctl.stats["rejected"] == 0
+    assert sim.tenants.counters["t"]["shed"] == 1
+    assert sim.tenants.violation_ewma("t") > 0      # shed is a violation
+
+
+def test_admission_is_sticky_never_recharges(monkeypatch):
+    sim, ctl = make_ctl(monkeypatch, 0.8, initial=4.0)
+    h = handle_for(1)
+    assert isinstance(ctl.consider(h, now=0.0), Admitted)
+    # crash-recovery / unplaced re-dispatch re-delivers the same rid
+    d = ctl.consider(h, now=1.0)
+    assert isinstance(d, Admitted) and d.cost == 0.0
+    assert sim.tenants.credits("t") == 0.0          # charged exactly once
+    assert ctl.stats["admitted"] == 1
+
+
+# ----------------------------------------------------------- WDRR dispatch
+
+
+def test_single_tenant_plan_is_plain_fifo():
+    from repro.core import LocalScheduler
+    a = LocalScheduler(0, token_budget=256, mixed_chunk_budget=64)
+    b = LocalScheduler(1, token_budget=256, mixed_chunk_budget=64)
+    for i in range(5):
+        a.enqueue_prefill(i, 100)                       # unlabelled
+        b.enqueue_prefill(i, 100, tenant="t", weight=2.0)  # one tenant
+    b._drr_deficit["ghost"] = 99.0                  # must be cleared
+    assert a.plan_iteration().prefill_chunks == \
+        b.plan_iteration().prefill_chunks
+    assert b._drr_deficit == {}
+
+
+def test_wdrr_starved_head_beats_flooder_backlog():
+    from repro.core import LocalScheduler
+    loc = LocalScheduler(0, token_budget=256, mixed_chunk_budget=64)
+    for i in range(8):                              # flooder got there first
+        loc.enqueue_prefill(i, 64, tenant="flood", weight=1.0)
+    loc.enqueue_prefill(100, 64, tenant="vip", weight=2.0)
+    chunks = loc.plan_iteration().prefill_chunks
+    rids = [rid for rid, _, _ in chunks]
+    assert 100 in rids[:2], f"vip head-of-line starved: {rids}"
+    # the flooder is served its share, not the whole budget
+    assert 0 < sum(1 for r in rids if r < 100) < 8
+
+
+def test_wdrr_share_ratio_tracks_weights():
+    from repro.core import LocalScheduler
+    loc = LocalScheduler(0, token_budget=512, mixed_chunk_budget=64)
+    for i in range(16):
+        loc.enqueue_prefill(i, 64, tenant="small", weight=0.5)
+        loc.enqueue_prefill(100 + i, 64, tenant="big", weight=1.0)
+    served = {"small": 0, "big": 0}
+    # two plans (half the backlog): both queues stay saturated, so the
+    # served split reflects the weights, not residual demand
+    for _ in range(2):
+        for rid, done, chunk in loc.plan_iteration().prefill_chunks:
+            served["small" if rid < 100 else "big"] += chunk
+            loc.complete_prefill_chunk(rid, chunk)
+    assert served["big"] > served["small"] > 0
+    assert served["big"] / served["small"] == pytest.approx(2.0, rel=0.5)
+
+
+# ------------------------------------------- report-surface guards (sat 2/3)
+
+
+def report_with_ttfts(vals):
+    hs = []
+    for i, v in enumerate(vals):
+        req = Request(rid=i, arrival=0.0, input_len=4, output_len=2)
+        req.first_token_time = v
+        hs.append(RequestHandle(req=req, slo=SLO(5.0, 2.0)))
+    return ServeReport(handles=hs)
+
+
+def test_percentile_is_ceil_nearest_rank():
+    rep = report_with_ttfts(range(1, 11))           # ttfts 1..10
+    assert rep.percentile("ttft", 0.50) == 5        # ceil(5.0)  -> 5th
+    assert rep.percentile("ttft", 0.90) == 9        # ceil(9.0)  -> 9th
+    assert rep.percentile("ttft", 0.99) == 10       # ceil(9.9)  -> 10th
+    assert rep.percentile("ttft", 1.00) == 10
+    # the old floor-index form was biased low on small n: p99 of 2 samples
+    # must be the max, not the min
+    rep2 = report_with_ttfts([1.0, 2.0])
+    assert rep2.percentile("ttft", 0.99) == 2.0
+    assert rep2.percentile("ttft", 0.01) == 1.0     # rank floor is 1
+    assert report_with_ttfts([]).percentile("ttft", 0.9) is None
+
+
+def test_attainment_by_tier_empty_guards():
+    rep = ServeReport(handles=[])
+    assert rep.attainment_by_tier() == {}
+    forced = rep.attainment_by_tier(tiers=["interactive", "batch"])
+    assert forced == {"interactive": None, "batch": None}
+    assert rep.attainment == 1.0                    # vacuous, no crash
+    assert "n/a" in rep.summary() and "tenants=" not in rep.summary()
+
+
+def test_tenant_summary_renders_na_for_empty_tenants():
+    rep = ServeReport(handles=[], per_tenant={
+        "idle": {"tier": "batch", "attainment": None, "p99_ttft": None,
+                 "p99_tpot": None, "admitted": 0, "submitted": 0,
+                 "rejected": 0, "shed": 0, "credits": 4.0},
+        "busy": {"tier": "standard", "attainment": 0.5, "p99_ttft": 0.25,
+                 "p99_tpot": 0.01, "admitted": 2, "submitted": 3,
+                 "rejected": 1, "shed": 0, "credits": 0.0},
+    })
+    text = rep.tenant_summary()
+    busy, idle = text.splitlines()[:2]              # sorted: busy first
+    assert "att=0.50" in busy and "p99_ttft=250.0ms" in busy
+    assert "att=n/a" in idle and "p99_ttft=n/a" in idle
+    assert "adm=0/0" in idle and "credits=4.0" in idle
+    assert "tenants=2" in rep.summary()
+
+
+# ----------------------------------------------------- sim end-to-end (§10)
+
+
+def test_tenant_id_flows_end_to_end_and_tier_overrides():
+    reg = TenantRegistry([Tenant("vip", tier="interactive", weight=2.0)])
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 1.0), tenants=reg)
+    h = sim.submit(Request(rid=1, arrival=0.0, input_len=32, output_len=4),
+                   tier="batch", tenant_id="vip")
+    h2 = sim.submit(Request(rid=2, arrival=0.0, input_len=32, output_len=4))
+    rep = sim.drain()
+    assert h.tenant_id == "vip" and h.req.tenant_id == "vip"
+    assert h.tier == "interactive"                  # registry overrides
+    assert h.slo.ttft == TIERS["interactive"].apply(SLO(5.0, 1.0)).ttft
+    # untagged requests in a tenanted run fall into the anonymous bucket
+    # (call-site tier kept) so finish accounting matches admission charges
+    assert h2.tenant_id == "anonymous" and h2.tier == "standard"
+    assert rep.per_tenant["vip"]["finished"] == 1
+    assert rep.per_tenant["vip"]["tier"] == "interactive"
+    assert rep.per_tenant["anonymous"]["finished"] == 1
+    assert rep.admission == {}                      # admission was off
+
+
+def test_sim_flooder_run_with_probe_every_step():
+    """Acceptance: the invariant probe passes on every step with the
+    flooder active and admission rejecting (REJECTED rids hold nothing)."""
+    p = TRACE_PRESETS["tenants"]
+    trace = load_trace("tenants", rate_scale=8.0, seed=0, duration=30.0)
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(p.slo_ttft, p.slo_tpot),
+                    tenants=default_registry(4),
+                    admission=AdmissionConfig(low_watermark=0.05,
+                                              high_watermark=0.5,
+                                              deadline_scale=0.5))
+    replay_trace(sim, trace)
+    while sim.step():
+        check_invariants(sim, streams=False)
+    check_invariants(sim)
+    rep = sim.report()
+    rejected = [h for h in rep.handles if h.rejected]
+    assert rejected, "flooder run never exercised rejection"
+    assert rep.admission["rejected"] + rep.admission["shed"] == len(rejected)
+    assert rep.admission["admitted"] == rep.n_finished
+    assert rep.n_finished + len(rejected) == len(trace)
+    for h in rejected:
+        assert h.req.state is RequestState.REJECTED
+        assert h.rejection.reason in ("overload", "no_credit",
+                                      "retry_queue_full")
+        assert not h.done and h.ttft is None
+    # per-tenant counters reconcile with the handle view
+    for tid, row in rep.per_tenant.items():
+        mine = [h for h in rep.handles if h.tenant_id == tid]
+        assert row["submitted"] == len(mine)
+        assert row["rejected"] + row["shed"] == \
+            sum(1 for h in mine if h.rejected)
+    assert "admitted=" in rep.summary() and "tenants=5" in rep.summary()
+
+
+def test_deferred_requests_recover_when_credits_accrue():
+    """A briefly-broke tenant is deferred, then admitted on retry once the
+    monitor tick accrues credits — not rejected."""
+    reg = TenantRegistry([Tenant("t")], ledger=CreditLedger(
+        CreditLedgerConfig(initial=0.0, earn_rate=50.0, cap=1000.0)))
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(30.0, 1.0), tenants=reg,
+                    admission=AdmissionConfig(low_watermark=0.0,
+                                              high_watermark=1e9,
+                                              cost_per_token=1.0))
+    h = sim.submit(Request(rid=1, arrival=0.0, input_len=16, output_len=2,
+                           tenant_id="t"))
+    rep = sim.drain()
+    assert h.done and not h.rejected
+    assert rep.admission["deferred"] == 1 and rep.admission["admitted"] == 1
+    assert h.ttft > 0.5          # it actually waited for accrual
+
+
+# -------------------------------------------------- rejection regressions
+
+
+def broke_admission():
+    """Registry + config under which every request is rejected at once."""
+    reg = TenantRegistry([Tenant("t")], ledger=CreditLedger(
+        CreditLedgerConfig(initial=0.0, earn_rate=0.0)))
+    cfg = AdmissionConfig(low_watermark=0.0, cost_per_token=1.0,
+                          deadline_scale=0.0)    # deadline == arrival
+    return reg, cfg
+
+
+def test_rejected_rids_never_strand_drain():
+    """Satellite: every instance RETIRING and only typed rejections
+    outstanding — drain() completes instead of raising
+    UndispatchableError (rejected rids never reach the stranded scan)."""
+    reg, cfg = broke_admission()
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(3.0, 0.1), tenants=reg, admission=cfg)
+    sim.begin_retire(0, 0.0)
+    sim.begin_retire(1, 0.0)
+    h = sim.submit(Request(rid=7, arrival=0.0, input_len=32, output_len=2,
+                           tenant_id="t"))
+    rep = sim.drain()                              # no UndispatchableError
+    assert h.rejected and h.rejection.reason in ("overload", "no_credit")
+    assert rep.n_finished == 0 and rep.admission["admitted"] == 0
+    from repro.core.tenants import rejected_state_consistent
+    assert rejected_state_consistent(h)
+    check_invariants(sim)
+
+
+def test_rejection_cascades_to_gated_children():
+    reg, cfg = broke_admission()
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(3.0, 0.1), tenants=reg, admission=cfg)
+    # child arrives BEFORE the parent: gated first, released by rejection
+    early = sim.submit(Request(rid=2, arrival=0.0, input_len=16,
+                               output_len=2, tenant_id="t", session_id=9,
+                               parent_rid=1, history_len=8))
+    parent = sim.submit(Request(rid=1, arrival=0.5, input_len=16,
+                                output_len=2, tenant_id="t", session_id=9))
+    # child arriving AFTER the parent was already rejected
+    late = sim.submit(Request(rid=3, arrival=1.0, input_len=16,
+                              output_len=2, tenant_id="t", session_id=9,
+                              parent_rid=1, history_len=8))
+    sim.drain()
+    assert parent.rejected and parent.rejection.reason == "no_credit"
+    for child in (early, late):
+        assert child.rejected
+        assert child.rejection.reason == "parent_rejected"
+    check_invariants(sim)
+
+
+def test_invariant_probe_fires_on_corrupted_rejected_state():
+    """The REJECTED invariant is falsifiable: smuggling scheduling state
+    onto a rejected handle must trip the probe."""
+    reg, cfg = broke_admission()
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(3.0, 0.1), tenants=reg, admission=cfg)
+    h = sim.submit(Request(rid=1, arrival=0.0, input_len=16, output_len=2,
+                           tenant_id="t"))
+    sim.drain()
+    assert h.rejected
+    h.req.prefill_instance = 0                     # corrupt on purpose
+    with pytest.raises(AssertionError, match="rejected rid 1"):
+        check_invariants(sim)
+
+
+# ------------------------------------------------------ sim/engine parity
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.models import build_model
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def parity_requests():
+    # deterministic costs: 36 credits each under cost_per_token=1.0
+    return [Request(rid=i, arrival=0.0, input_len=32, output_len=4,
+                    tenant_id="p") for i in range(6)]
+
+
+def parity_admission():
+    # earn/debit both zero: balances are pure spend arithmetic, identical
+    # under the sim's virtual ticks and the engine's wall-clock ticks
+    reg = TenantRegistry([Tenant("p")], ledger=CreditLedger(
+        CreditLedgerConfig(initial=80.0, earn_rate=0.0, debit_rate=0.0)))
+    cfg = AdmissionConfig(low_watermark=-1.0, high_watermark=1e9,
+                          cost_per_token=1.0, deadline_scale=0.0)
+    return reg, cfg
+
+
+def decisions(handles):
+    return [(h.rid, h.rejection.reason if h.rejected else "admitted")
+            for h in handles]
+
+
+def test_sim_engine_admission_parity(engine_setup):
+    """Acceptance: the same seeded trace yields identical per-rid
+    admit/reject decisions on both backends at the drain barrier."""
+    from repro.engine import ArrowEngineCluster
+    ecfg, params = engine_setup
+
+    reg, acfg = parity_admission()
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), tenants=reg, admission=acfg)
+    sim_h = [sim.submit(r) for r in parity_requests()]
+    sim.drain()
+
+    reg2, acfg2 = parity_admission()
+    eng = ArrowEngineCluster(ecfg, n_instances=2, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params,
+                             tenants=reg2, admission=acfg2)
+    eng_h = [eng.submit(r) for r in parity_requests()]
+    eng.drain(timeout=300.0)
+
+    want = [(0, "admitted"), (1, "admitted"), (2, "no_credit"),
+            (3, "no_credit"), (4, "no_credit"), (5, "no_credit")]
+    assert decisions(sim_h) == want
+    assert decisions(eng_h) == want
+    # both charged exactly twice: 80 - 2×36
+    assert reg.credits("p") == reg2.credits("p") == pytest.approx(8.0)
+    for h in eng_h[:2]:
+        assert h.done and len(h.tokens) == 4       # admitted ones really ran
+    check_invariants(eng)

@@ -13,8 +13,12 @@ the repo's markdown.
    `repro.launch.serve.build_parser()`. Drift in *either* direction fails:
    a flag added to the code must be documented, a flag documented must
    exist.
+4. **Report schema matches the design doc** (ISSUE 6 satellite) — the field
+   rows in DESIGN.md's "Report schema" table are diffed against
+   `ServeReport.SUMMARY_FIELDS`. A summary field added to the code must be
+   documented and vice versa.
 
-Usage:  python tools/check_docs.py [--no-run] [--no-flags]
+Usage:  python tools/check_docs.py [--no-run] [--no-flags] [--no-schema]
 """
 from __future__ import annotations
 
@@ -32,6 +36,9 @@ RUN_MARKER = "<!-- ci:run -->"
 FLAGS_DOC = "docs/OPERATOR.md"
 FLAGS_HEADING = "Launcher flags"
 FLAG_RE = re.compile(r"`(--[a-z][a-z0-9-]*)`")
+SCHEMA_DOC = "DESIGN.md"
+SCHEMA_HEADING = "Report schema"
+SCHEMA_ROW_RE = re.compile(r"^\|\s*`([a-z][a-z0-9_]*)`", re.MULTILINE)
 
 
 def check_links() -> list:
@@ -111,6 +118,47 @@ def check_flags() -> list:
     return errors
 
 
+def _heading_section(text: str, heading: str) -> str:
+    """The body of the first heading (any level) containing ``heading``,
+    up to the next heading of the same or higher level."""
+    lines = text.splitlines()
+    start = level = None
+    for i, ln in enumerate(lines):
+        m = re.match(r"(#{2,6}) ", ln)
+        if m and heading in ln:
+            start, level = i, len(m.group(1))
+            break
+    if start is None:
+        return ""
+    end = next((i for i in range(start + 1, len(lines))
+                if re.match(r"#{2,%d} " % level, lines[i])), len(lines))
+    return "\n".join(lines[start:end])
+
+
+def check_report_schema() -> list:
+    """Diff DESIGN.md's report-schema table against ServeReport's summary
+    field list — the report line operators grep must be documented."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.core.serving import ServeReport
+    code = set(ServeReport.SUMMARY_FIELDS)
+    section = _heading_section((ROOT / SCHEMA_DOC).read_text(), SCHEMA_HEADING)
+    if not section:
+        return [f"{SCHEMA_DOC}: no '{SCHEMA_HEADING}' section found "
+                f"(the summary-field table is required — see "
+                f"tools/check_docs.py)"]
+    documented = set(SCHEMA_ROW_RE.findall(section))
+    errors = []
+    for f in sorted(code - documented):
+        errors.append(f"{SCHEMA_DOC}: summary field '{f}' exists in "
+                      f"ServeReport.SUMMARY_FIELDS but is missing from the "
+                      f"'{SCHEMA_HEADING}' table")
+    for f in sorted(documented - code):
+        errors.append(f"{SCHEMA_DOC}: summary field '{f}' is documented in "
+                      f"the '{SCHEMA_HEADING}' table but ServeReport does "
+                      f"not emit it")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-run", action="store_true",
@@ -118,6 +166,8 @@ def main(argv=None) -> int:
                          "blocks")
     ap.add_argument("--no-flags", action="store_true",
                     help="skip the launcher-flag drift check")
+    ap.add_argument("--no-schema", action="store_true",
+                    help="skip the report-schema drift check")
     args = ap.parse_args(argv)
     errors = check_links()
     if errors:
@@ -132,6 +182,13 @@ def main(argv=None) -> int:
                 print(f"FAIL {e}", file=sys.stderr)
             return 1
         print("launcher flags: OK")
+    if not args.no_schema:
+        errors = check_report_schema()
+        if errors:
+            for e in errors:
+                print(f"FAIL {e}", file=sys.stderr)
+            return 1
+        print("report schema: OK")
     if not args.no_run:
         errors = run_blocks()
         if errors:
