@@ -81,6 +81,27 @@ def run_mode(cfg, params, reqs, mode: str):
     return tokens / max(t.s, 1e-9), streams, tokens
 
 
+ENTRY_KEYS = ("pr", "tokens_total", "legacy_tokens_per_s",
+              "fused_tokens_per_s", "speedup", "streams_identical")
+
+
+def check_trajectory(doc: dict) -> None:
+    """Schema guard (ISSUE 7): every trajectory entry carries the full key
+    set and the list is strictly monotone in ``pr`` — a hand-edited or
+    legacy-shape artifact fails loudly here instead of silently dropping
+    perf history on the next write."""
+    traj = doc.get("trajectory")
+    assert isinstance(traj, list) and traj, \
+        "BENCH_engine.json: empty/missing trajectory"
+    for e in traj:
+        missing = [k for k in ENTRY_KEYS if k not in e]
+        assert not missing, \
+            f"BENCH_engine.json: entry pr={e.get('pr')} missing {missing}"
+    prs = [e["pr"] for e in traj]
+    assert prs == sorted(prs) and len(set(prs)) == len(prs), \
+        f"BENCH_engine.json: trajectory prs not strictly monotone: {prs}"
+
+
 def load_trajectory(path: pathlib.Path) -> dict:
     """Read BENCH_engine.json, migrating the pre-PR-6 flat single-run shape
     into ``{"workload": ..., "trajectory": [entry...]}``."""
@@ -88,6 +109,7 @@ def load_trajectory(path: pathlib.Path) -> dict:
         return {"workload": None, "trajectory": []}
     doc = json.loads(path.read_text())
     if "trajectory" in doc:
+        check_trajectory(doc)
         return doc
     # legacy flat artifact (written by PR 5): keep it as the first point
     entry = {k: doc[k] for k in ("tokens_total", "legacy_tokens_per_s",
@@ -168,6 +190,7 @@ def main(argv=None) -> None:
     doc["trajectory"] = sorted(
         [e for e in doc["trajectory"] if e.get("pr") != pr] + [entry],
         key=lambda e: e["pr"])
+    check_trajectory(doc)                 # never write a broken artifact
     path.write_text(json.dumps(doc, indent=1) + "\n")
     print(f"BENCH_engine.json[pr={pr}]: {entry['legacy_tokens_per_s']} -> "
           f"{entry['fused_tokens_per_s']} tok/s ({entry['speedup']}x; "

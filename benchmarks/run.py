@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   Fig.8    bench_ablation          SLO-aware vs minimal-load vs round-robin
   Fig.9    bench_scalability       attainment vs instance count
   (ours)   bench_elastic           elastic vs static provisioning (DESIGN §6)
+  (ours)   bench_deflection        cross-pool prefill deflection vs flip-only (DESIGN §11)
   (ours)   bench_prefix            prefix-aware KV reuse on multi-turn (DESIGN §7)
   (ours)   bench_faults            goodput under crashes vs no-recovery (DESIGN §8)
   (ours)   bench_engine_step       fused+donated engine step vs per-rid path (DESIGN §9)
@@ -24,8 +25,8 @@ def main() -> None:
     fast = os.environ.get("BENCH_FAST", "")
     duration = "60" if fast else "120"
 
-    from benchmarks import (bench_ablation, bench_e2e, bench_elastic,
-                            bench_engine_step, bench_faults,
+    from benchmarks import (bench_ablation, bench_deflection, bench_e2e,
+                            bench_elastic, bench_engine_step, bench_faults,
                             bench_flip_latency, bench_kernels,
                             bench_load_difference, bench_prefix,
                             bench_scalability, bench_tenants,
@@ -38,6 +39,7 @@ def main() -> None:
     bench_scalability.main(["--duration", duration])
     bench_flip_latency.main(["--duration", duration])
     bench_elastic.main(["--duration", duration])
+    bench_deflection.main(["--duration", duration])
     bench_prefix.main(["--duration", duration])
     bench_faults.main([])
     # needs its full 120 s window: the FIFO collapse the headline asserts

@@ -6,7 +6,8 @@ from repro.core.autoscaler import (AutoScaler, AutoScalerConfig,  # noqa: F401
 from repro.core.clock import Clock, VirtualClock, WallClock  # noqa: F401
 from repro.core.faults import (FaultEvent, FaultInjector,  # noqa: F401
                                FaultPlan)
-from repro.core.global_scheduler import (GlobalScheduler,  # noqa: F401
+from repro.core.global_scheduler import (DeflectionConfig,  # noqa: F401
+                                         DeflectionPolicy, GlobalScheduler,
                                          NoSchedulableInstance,
                                          ScheduleOutcome)
 from repro.core.local_scheduler import IterationPlan, LocalScheduler  # noqa: F401

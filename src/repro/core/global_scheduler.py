@@ -44,6 +44,130 @@ class ScheduleOutcome:
     predicted_ttft: Optional[float] = None
     via_fallback: bool = False
     prefix_hit: Optional[PrefixHit] = None   # cached-prefix reuse chosen (§7)
+    deflected: bool = False            # prefill routed onto a decode host (§11)
+
+
+@dataclass(frozen=True)
+class DeflectionConfig:
+    """Cross-pool prefill deflection knobs (DESIGN.md §11).
+
+    ratio        fraction of the victim's mixed-chunk budget a deflected
+                 prefill may consume per fused step (0 disables deflection;
+                 the local schedulers enforce it via a deficit counter).
+    watermark    Eq.(1) normalized prefill-pool pressure above which
+                 deflection activates. Kept below AutoScalerConfig.prefill_up
+                 (0.75) so deflection soaks a spike in milliseconds while a
+                 sustained breach still reaches the autoscaler.
+    step_budget  assumed victim mixed-chunk budget for the interference
+                 model (tokens per fused step).
+    idle_pickup  symmetric direction: idle PREFILL-pool instances accept
+                 decode work instead of forcing a P→D flip.
+    """
+    ratio: float = 0.25
+    watermark: float = 0.60
+    step_budget: int = 2048
+    idle_pickup: bool = True
+
+
+class DeflectionPolicy:
+    """Interference-charged prefill deflection onto decode instances.
+
+    When the prefill pool's Eq.(1) pressure exceeds the watermark, bounded
+    prefill chunks are routed onto pure-DECODE instances. The victim is
+    charged the predicted interference through the same Eq.(1)/(2)
+    bookkeeping used for native prefill, and deflection is *refused*
+    whenever the predictors say it would break either pool's SLO budget.
+    Refusals are counted by reason so reports can explain why a spike was
+    not absorbed.
+    """
+
+    REFUSALS = ("below_watermark", "no_victim", "tpot_budget",
+                "kv_headroom", "victim_backlog")
+
+    def __init__(self, cfg: DeflectionConfig):
+        self.cfg = cfg
+        self.stats: Dict[str, float] = {
+            "requests_deflected": 0,
+            "tokens_deflected": 0,
+            "decode_pickups": 0,
+            "interference_s": 0.0,
+        }
+        for r in self.REFUSALS:
+            self.stats["refused_" + r] = 0
+
+    def per_step_tokens(self) -> int:
+        """Max deflected prefill tokens per fused step on the victim."""
+        return max(1, int(self.cfg.ratio * self.cfg.step_budget))
+
+    def _refuse(self, reason: str) -> None:
+        self.stats["refused_" + reason] += 1
+
+    # ------------------------------------------- prefill → decode victims
+    def try_deflect(self, sched: "GlobalScheduler", req: Request, now: float,
+                    ttft_budget: float) -> Optional[ScheduleOutcome]:
+        """Place req's prefill on a pure-DECODE instance, or refuse."""
+        if self.cfg.ratio <= 0:
+            return None
+        if sched.prefill_pool_pressure(now) <= self.cfg.watermark:
+            self._refuse("below_watermark")
+            return None
+        victims = sched.pools.members(Pool.DECODE)
+        if not victims:
+            self._refuse("no_victim")
+            return None
+        per_step = self.per_step_tokens()
+        n_steps = -(-req.input_len // per_step)      # ceil
+        tpot_budget = sched.cfg.tpot_threshold_frac * sched.slo.tpot
+        # Most-preferred victim first: least Eq.(2) backlog, then lightest.
+        order = sorted(victims, key=lambda i: (
+            sched._prefill_delay(i, now),
+            sched.monitor.get(i).running_tokens))
+        reason = None
+        for v in order:
+            s = sched.monitor.get(v)
+            chunk_t = sched._predict_chunk(v, 0, per_step)
+            # TPOT guard: every victim step stretches by one deflected
+            # chunk; the stretched interval must stay inside the budget.
+            if s.avg_token_interval + chunk_t > tpot_budget:
+                reason = reason or "tpot_budget"
+                continue
+            if s.running_tokens + req.input_len > sched.cfg.max_running_tokens:
+                reason = reason or "kv_headroom"
+                continue
+            # TTFT of the deflected request: one chunk lands per victim
+            # step, so the drain takes n_steps stretched intervals on top
+            # of any deflected backlog already charged to the victim.
+            drain = n_steps * (s.avg_token_interval + chunk_t)
+            if sched._prefill_delay(v, now) + drain > ttft_budget:
+                reason = reason or "victim_backlog"
+                continue
+            ttft = sched.account_prefill_dispatch(v, now, drain)
+            self.stats["requests_deflected"] += 1
+            self.stats["tokens_deflected"] += req.input_len
+            self.stats["interference_s"] += n_steps * chunk_t
+            return ScheduleOutcome(v, predicted_ttft=ttft, deflected=True)
+        self._refuse(reason or "no_victim")
+        return None
+
+    # ------------------------------------------- decode → idle prefillers
+    def try_pickup(self, sched: "GlobalScheduler", req: Request,
+                   now: float) -> Optional[int]:
+        """Symmetric slack pickup: an idle PREFILL-pool instance hosts the
+        decode phase instead of forcing a P→D flip. No pool state changes —
+        decode work on an ACTIVE prefill instance is already legal (the
+        Alg. 2 last-resort path does the same)."""
+        if not self.cfg.idle_pickup or self.cfg.ratio <= 0:
+            return None
+        cands = [i for i in sched.pools.members(Pool.PREFILL)
+                 if not sched.cluster.has_pending_prefill(i)
+                 and sched._prefill_delay(i, now) <= 0.0
+                 and sched.monitor.get(i).running_tokens + req.input_len
+                 <= sched.cfg.max_running_tokens]
+        if not cands:
+            return None
+        pick, _ = sched._min_running_tokens(cands)
+        self.stats["decode_pickups"] += 1
+        return pick
 
 
 class GlobalScheduler:
@@ -66,6 +190,9 @@ class GlobalScheduler:
         # counters for the ablation/e2e reports
         self.n_d2p_flips = 0
         self.n_p2d_flips = 0
+        # cross-pool deflection (DESIGN.md §11); armed by the runtime when
+        # the policy is deflective, None otherwise.
+        self.deflection: Optional[DeflectionPolicy] = None
         # beyond-paper proactive burst detector state
         self._arrivals: list = []          # (t, input_len) ring
         self.n_proactive_flips = 0
@@ -113,6 +240,18 @@ class GlobalScheduler:
             if best_t is None or t < best_t:
                 best, best_t = iid, t
         return best, best_t
+
+    def prefill_pool_pressure(self, now: float) -> float:
+        """Eq.(1) pressure of the prefill pool, normalized by the TTFT
+        budget: mean predicted queueing delay across prefill-capable
+        instances over ttft_threshold_frac * SLO_ttft. Mirrors
+        autoscaler.prefill_pressure but needs only the scheduler's own
+        Eq.(2) state (usable from unit tests without a runtime)."""
+        ids = self.pools.prefill_capable()
+        if not ids:
+            return float("inf")
+        delay = sum(self._prefill_delay(i, now) for i in ids) / len(ids)
+        return delay / (self.cfg.ttft_threshold_frac * self.slo.ttft)
 
     def _decode_load_low(self) -> bool:
         """Overload guard (§5.5): decode has priority; only pull decode
@@ -223,6 +362,15 @@ class GlobalScheduler:
                 t2, now, self._predict(t2, req.input_len))
             return ScheduleOutcome(t2, predicted_ttft=ttft)
 
+        # §11 deflection: before flipping a whole instance, try to absorb
+        # the prefill as bounded chunks on a decode victim. Cheaper than a
+        # flip (no drain, no pool change) and refused whenever the Eq.(1)/(2)
+        # predictors say it would break either pool's budget.
+        if self.deflection is not None:
+            out = self.deflection.try_deflect(self, req, now, ttft_budget)
+            if out is not None:
+                return out
+
         flipped = None
         if self._decode_load_low():
             t3 = self.try_move_decode_to_prefill()
@@ -269,6 +417,13 @@ class GlobalScheduler:
         if t2 is not None and rt2 + req.input_len <= max_rt and \
                 self.monitor.get(t2).avg_token_interval <= tpot_budget:
             return ScheduleOutcome(t2)
+
+        # §11 symmetric pickup: an idle prefill instance hosts the decode
+        # phase instead of flipping one out of the prefill pool.
+        if self.deflection is not None:
+            pick = self.deflection.try_pickup(self, req, now)
+            if pick is not None:
+                return ScheduleOutcome(pick)
 
         t3 = self.try_move_prefill_to_decode(now)
         if t3 is not None:

@@ -19,6 +19,8 @@ class PrefillWork:
     cached: int = 0               # tokens served from a cached prefix
     tenant: Optional[str] = None  # submitting tenant (§10); None = implicit
     weight: float = 1.0           # tenant share weight for WDRR dispatch
+    deflected: bool = False       # cross-pool deflected prefill (§11):
+    #                               rate-limited by the deflect_ratio knob
 
     @property
     def remaining(self) -> int:
@@ -48,12 +50,20 @@ class LocalScheduler:
 
     def __init__(self, iid: int, *, token_budget: int = 8192,
                  max_batch: int = 256, kv_capacity_tokens: int = 1 << 20,
-                 mixed_chunk_budget: int = 2048):
+                 mixed_chunk_budget: int = 2048, deflect_ratio: float = 0.0):
         self.iid = iid
         self.token_budget = token_budget       # tokens per iteration batch
         # Sarathi-style: when decode requests share the batch, cap prefill
         # chunk tokens so decode token intervals stay near the TPOT target.
         self.mixed_chunk_budget = mixed_chunk_budget
+        # §11 micro-batch ratio knob: max deflected prefill tokens per step
+        # = deflect_ratio × mixed_chunk_budget, deficit-tracked so a large
+        # deflected prefill drains over several steps instead of starving
+        # the host's native work.
+        self.deflect_ratio = deflect_ratio
+        self._deflect_deficit = 0.0
+        self.deflected_chunks = 0          # executed (not merely planned)
+        self.deflected_chunk_tokens = 0
         self.max_batch = max_batch
         self.kv_capacity = kv_capacity_tokens
         self.migration_queue: deque = deque()  # FCFS: (rid, kv_tokens)
@@ -72,15 +82,17 @@ class LocalScheduler:
     # ------------------------------------------------------------ enqueues
     def enqueue_prefill(self, rid: int, input_len: int, cached: int = 0,
                         tenant: Optional[str] = None,
-                        weight: float = 1.0) -> None:
+                        weight: float = 1.0, deflected: bool = False) -> None:
         """``cached`` prefix tokens come from a retained KV (copy-on-extend)
         — chunking starts at ``cached``, but the request's KV footprint is
         the full ``input_len`` (the copy is its own). ``tenant``/``weight``
         feed the WDRR dispatch order (§10) when several tenants share the
-        queue."""
+        queue. ``deflected`` marks cross-pool deflected prefill (§11),
+        dispatched after native work under the deflect_ratio budget."""
         self.prefill_queue[rid] = PrefillWork(rid, input_len, done=cached,
                                               cached=cached, tenant=tenant,
-                                              weight=weight)
+                                              weight=weight,
+                                              deflected=deflected)
         self.kv_used += input_len
 
     def enqueue_migration(self, rid: int, kv_tokens: int, remaining_out: int) -> None:
@@ -135,7 +147,13 @@ class LocalScheduler:
         served while the deficit covers them, so a starved tenant's
         head-of-line beats a flooder's backlog at exactly its share ratio.
         With zero or one tenant present the plan is the plain FIFO scan
-        (identical to the pre-tenancy scheduler)."""
+        (identical to the pre-tenancy scheduler).
+
+        Deflected prefill (§11) never competes with native work: it is
+        planned last, from whatever budget remains, and rate-limited to
+        ``deflect_ratio × mixed_chunk_budget`` tokens per step through its
+        own deficit counter — so deflection composes with (and cannot
+        starve) the WDRR tenant queues above."""
         plan = IterationPlan()
         budget = self.token_budget
         slots = self.max_batch
@@ -148,21 +166,24 @@ class LocalScheduler:
         if plan.decode_rids:
             budget = min(budget, self.mixed_chunk_budget)
 
+        native = [w for w in self.prefill_queue.values() if not w.deflected]
+        deflected = [w for w in self.prefill_queue.values() if w.deflected]
+
         groups: "OrderedDict[Optional[str], List[PrefillWork]]" = OrderedDict()
-        for w in self.prefill_queue.values():
+        for w in native:
             groups.setdefault(w.tenant, []).append(w)
         if len(groups) <= 1:
             self._drr_deficit.clear()
-            for rid, w in self.prefill_queue.items():
+            for w in native:
                 if slots == 0 or budget <= 0:
                     break
                 chunk = min(w.remaining, budget)
                 if chunk <= 0:
                     continue
-                plan.prefill_chunks.append((rid, w.done, chunk))
+                plan.prefill_chunks.append((w.rid, w.done, chunk))
                 budget -= chunk
                 slots -= 1
-            return plan
+            return self._plan_deflected(plan, deflected, budget, slots)
 
         # ---- WDRR across per-tenant groups (one chunk per rid per plan)
         for t in list(self._drr_deficit):
@@ -199,6 +220,46 @@ class LocalScheduler:
                     heads[t] += 1
                 if heads[t] >= len(wl):
                     active.remove(t)
+        return self._plan_deflected(plan, deflected, budget, slots)
+
+    def _plan_deflected(self, plan: IterationPlan,
+                        deflected: List[PrefillWork],
+                        budget: int, slots: int) -> IterationPlan:
+        """§11: fill leftover budget with deflected chunks, at most
+        ``deflect_ratio × mixed_chunk_budget`` tokens per step (deficit-
+        tracked across steps so a big deflected prefill drains steadily)."""
+        if not deflected:
+            self._deflect_deficit = 0.0
+            return plan
+        if self.deflect_ratio <= 0:
+            # Deflected work on an unarmed instance (knob lowered after
+            # placement): serve it like native work so it cannot hang.
+            for w in deflected:
+                if slots == 0 or budget <= 0:
+                    break
+                chunk = min(w.remaining, budget)
+                if chunk <= 0:
+                    continue
+                plan.prefill_chunks.append((w.rid, w.done, chunk))
+                budget -= chunk
+                slots -= 1
+            return plan
+        # allowance floor of one token per step: progress is guaranteed even
+        # at tiny ratios (an empty plan would never be re-kicked by the sim)
+        self._deflect_deficit = min(
+            self._deflect_deficit
+            + max(1.0, self.deflect_ratio * self.mixed_chunk_budget),
+            float(self.mixed_chunk_budget))
+        for w in deflected:
+            if slots == 0 or budget <= 0:
+                break
+            chunk = min(w.remaining, budget, int(self._deflect_deficit))
+            if chunk <= 0:
+                break                  # deficit spent: wait for next step
+            plan.prefill_chunks.append((w.rid, w.done, chunk))
+            self._deflect_deficit -= chunk
+            budget -= chunk
+            slots -= 1
         return plan
 
     # ------------------------------------------------------ state advance
@@ -206,6 +267,12 @@ class LocalScheduler:
         """Returns True when the request's prefill is now complete."""
         w = self.prefill_queue[rid]
         w.done += chunk_len
+        if w.deflected:
+            # counted at completion, not plan time: the engine may plan a
+            # chunk, fail slot allocation, and replan — completion is the
+            # only point each executed chunk passes exactly once.
+            self.deflected_chunks += 1
+            self.deflected_chunk_tokens += chunk_len
         if w.remaining <= 0:
             del self.prefill_queue[rid]
             return True

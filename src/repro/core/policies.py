@@ -26,6 +26,7 @@ class BasePolicy:
     name = "base"
     adaptive = False
     elastic = False          # True: RuntimeCore attaches an AutoScaler (§6)
+    deflective = False       # True: RuntimeCore arms DeflectionPolicy (§11)
 
     def __init__(self, pools: InstancePools, monitor: InstanceMonitor,
                  predictor: TTFTPredictor, slo: SLO, cfg: SchedulerConfig,
@@ -69,10 +70,10 @@ class BasePolicy:
         not route by prefix affinity, but when their own choice happens to
         land on an instance that already caches a prefix of ``req`` the
         reuse is still taken (the KV is right there). Returns
-        ``(iid, PrefixHit | None)``."""
+        ``(iid, PrefixHit | None, deflected)``."""
         iid = self.schedule_prefill_req(req, now)
         hit = next((h for h in (prefix_hits or []) if h.iid == iid), None)
-        return iid, hit
+        return iid, hit, False
 
     def on_monitor_tick(self, now: float) -> None:
         pass
@@ -98,7 +99,7 @@ class ArrowPolicy(GlobalScheduler):
         full prefill, and taking the reuse anyway would leave
         ``prefill_ready_at`` overestimating by the cached-prefix time."""
         out = self.schedule_prefill(req, now, prefix_hits=prefix_hits)
-        return out.instance, out.prefix_hit
+        return out.instance, out.prefix_hit, out.deflected
 
 
 class ArrowElasticPolicy(ArrowPolicy):
@@ -108,6 +109,17 @@ class ArrowElasticPolicy(ArrowPolicy):
 
     name = "arrow_elastic"
     elastic = True
+
+
+class ArrowDeflectPolicy(ArrowElasticPolicy):
+    """arrow_elastic + cross-pool prefill deflection (DESIGN.md §11): under
+    Eq.(1) prefill-pool pressure, decode instances absorb bounded prefill
+    chunks in-step (and idle prefill instances pick up decode slack) while
+    the autoscaler still converges pool counts for sustained shifts. The
+    runtime arms ``GlobalScheduler.deflection`` with a DeflectionConfig."""
+
+    name = "arrow_deflect"
+    deflective = True
 
 
 class MinimalLoadPolicy(BasePolicy):
@@ -192,6 +204,7 @@ POLICIES = {
     "arrow": ArrowPolicy,
     "arrow_proactive": ArrowPolicy,    # + SchedulerConfig.proactive=True
     "arrow_elastic": ArrowElasticPolicy,
+    "arrow_deflect": ArrowDeflectPolicy,
     "minimal_load": MinimalLoadPolicy,
     "round_robin": RoundRobinPolicy,
     "colocated": ColocatedPolicy,

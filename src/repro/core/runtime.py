@@ -46,7 +46,8 @@ from typing import Dict, Optional, Tuple
 from repro.core.autoscaler import AutoScaler, AutoScalerConfig
 from repro.core.clock import Clock
 from repro.core.faults import FaultInjector, FaultPlan
-from repro.core.global_scheduler import NoSchedulableInstance
+from repro.core.global_scheduler import (DeflectionConfig, DeflectionPolicy,
+                                         NoSchedulableInstance)
 from repro.core.local_scheduler import LocalScheduler
 from repro.core.monitor import InstanceMonitor, InstanceStats
 from repro.core.policies import POLICIES
@@ -83,6 +84,7 @@ class RuntimeCore(ServingSystem):
                       fault_plan: Optional[FaultPlan] = None,
                       tenants: Optional[TenantRegistry] = None,
                       admission=False,
+                      deflection: Optional[DeflectionConfig] = None,
                       ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
@@ -167,6 +169,16 @@ class RuntimeCore(ServingSystem):
             raise ValueError(
                 f"policy {policy!r} is not elastic; autoscaler_cfg requires "
                 f"an elastic policy (e.g. 'arrow_elastic')")
+        # ---- cross-pool prefill deflection (DESIGN.md §11)
+        self.deflection_cfg: Optional[DeflectionConfig] = None
+        self._deflect_closed = {"chunks": 0, "tokens": 0}  # dead instances
+        if getattr(self.policy, "deflective", False):
+            self.deflection_cfg = deflection or DeflectionConfig()
+            self.policy.deflection = DeflectionPolicy(self.deflection_cfg)
+        elif deflection is not None:
+            raise ValueError(
+                f"policy {policy!r} is not deflective; deflection requires "
+                f"a deflective policy (e.g. 'arrow_deflect')")
 
     # ------------------------------------------------------ backend hooks
     def local_of(self, iid: int) -> LocalScheduler:
@@ -375,7 +387,8 @@ class RuntimeCore(ServingSystem):
         if self.prefix_mgr is not None:
             hits = self.prefix_mgr.lookup(self._lookup_keys(req))
         try:
-            iid, hit = self.policy.place_prefill(req, now, prefix_hits=hits)
+            iid, hit, deflected = self.policy.place_prefill(
+                req, now, prefix_hits=hits)
         except NoSchedulableInstance:
             self._unplaced.append(req.rid)
             return None
@@ -412,7 +425,8 @@ class RuntimeCore(ServingSystem):
         self.local_of(iid).enqueue_prefill(req.rid, req.input_len,
                                            cached=cached,
                                            tenant=tenant,
-                                           weight=weight or 1.0)
+                                           weight=weight or 1.0,
+                                           deflected=deflected)
         self.decisions["prefill"] += 1
         if req.recoveries:
             # recovery recompute (§8): tokens prefilled again because a
@@ -611,6 +625,7 @@ class RuntimeCore(ServingSystem):
         iid = self._next_iid
         self._next_iid += 1
         delay = self._create_instance(iid)
+        self._arm_deflect(iid)
         self.pools.add_instance(iid, pool, warming=delay > 0)
         self.monitor.add_instance(iid)
         self.policy.on_instance_added(iid)
@@ -730,6 +745,10 @@ class RuntimeCore(ServingSystem):
             self._finalize_instance(iid, now)
 
     def _finalize_instance(self, iid: int, now: float) -> None:
+        if self.pools.lifecycle_of(iid) is not Lifecycle.FAILED:
+            # a crashed instance's counters were banked in fail_instance
+            # (its substrate — and local_of — may already be gone)
+            self._harvest_deflect(self.local_of(iid))
         self.pools.remove_instance(iid)
         self.monitor.remove_instance(iid)
         self.policy.on_instance_removed(iid)
@@ -737,6 +756,21 @@ class RuntimeCore(ServingSystem):
         self._kv_outbound.pop(iid, None)
         self._kv_inbound.pop(iid, None)
         self._destroy_instance(iid)
+
+    def _arm_deflect(self, iid: int) -> None:
+        """Set the §11 micro-batch ratio knob on ``iid``'s LocalScheduler.
+        No-op when deflection is unarmed (the default ratio 0.0 stays, so
+        non-deflective runs are byte-identical to pre-§11 builds)."""
+        if self.deflection_cfg is not None:
+            self.local_of(iid).deflect_ratio = self.deflection_cfg.ratio
+
+    def _harvest_deflect(self, loc: LocalScheduler) -> None:
+        """Bank a departing instance's executed-deflection counters so
+        ``deflection_detail`` survives retirement and crashes."""
+        self._deflect_closed["chunks"] += loc.deflected_chunks
+        self._deflect_closed["tokens"] += loc.deflected_chunk_tokens
+        loc.deflected_chunks = 0
+        loc.deflected_chunk_tokens = 0
 
     def instance_seconds(self, now: float) -> float:
         """Σ per-instance alive time — the provisioning cost a static
@@ -772,6 +806,23 @@ class RuntimeCore(ServingSystem):
         self._retire_started.pop(iid, None)    # a retiring instance may crash
         self._slowdowns.pop(iid, None)
         loc = self.local_of(iid)
+        self._harvest_deflect(loc)   # bank before the substrate is torn down
+        # ---- 0. sever historical prefill pointers: a request whose KV
+        # already moved on (decoding elsewhere, or re-migrating from a
+        # different holder) keeps ``prefill_instance`` as attribution only —
+        # left dangling it would make a live rid point at the corpse until
+        # the next tick finalizes it (found by the property harness:
+        # tests/corpus "max-ratio-crash-mid-deflect")
+        for handle in self.handles.values():
+            r = handle.req
+            if r.prefill_instance != iid or r.state in (
+                    RequestState.FINISHED, RequestState.REJECTED):
+                continue
+            if r.state is RequestState.DECODING and r.decode_instance != iid:
+                r.prefill_instance = None
+            elif r.state is RequestState.MIGRATING and \
+                    self._migrating_from.get(r.rid) not in (None, iid):
+                r.prefill_instance = None
         # ---- 1. inventory the lost work before any teardown
         lost_prefill = list(loc.prefill_queue)
         lost_decode = list(loc.decode_running)
@@ -993,6 +1044,27 @@ class RuntimeCore(ServingSystem):
             return {}
         return dict(self.fault_stats)
 
+    def deflection_detail(self) -> Dict[str, float]:
+        """Cross-pool deflection accounting (§11); empty when deflection is
+        unarmed or never acted (so ratio=0 / non-deflective reports stay
+        byte-identical to pre-deflection builds)."""
+        if self.deflection_cfg is None or self.policy.deflection is None:
+            return {}
+        out = dict(self.policy.deflection.stats)
+        chunks = self._deflect_closed["chunks"]
+        tokens = self._deflect_closed["tokens"]
+        for iid in self.pools.all_ids():
+            if self.pools.lifecycle_of(iid) is Lifecycle.FAILED:
+                continue
+            loc = self.local_of(iid)
+            chunks += loc.deflected_chunks
+            tokens += loc.deflected_chunk_tokens
+        out["chunks_executed"] = chunks
+        out["chunk_tokens_executed"] = tokens
+        if not any(out.values()):
+            return {}
+        return out
+
     def admission_detail(self) -> Dict[str, float]:
         """Admission-control accounting (§10); empty when admission is off
         (so tenant-less reports stay byte-identical to pre-tenancy builds)."""
@@ -1038,4 +1110,5 @@ class RuntimeCore(ServingSystem):
                            prefix=self.prefix_detail(),
                            faults=self.fault_detail(),
                            admission=self.admission_detail(),
+                           deflection=self.deflection_detail(),
                            per_tenant=self.tenant_detail())

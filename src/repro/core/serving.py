@@ -136,6 +136,11 @@ class ServeReport:
     # admission accounting (DESIGN.md §10): admitted, deferred, retries,
     # rejected, shed. Empty when admission control is off.
     admission: Dict[str, float] = field(default_factory=dict)
+    # cross-pool deflection accounting (DESIGN.md §11): requests/tokens
+    # deflected, chunks/chunk tokens executed, decode_pickups,
+    # interference_s, refused_* by reason. Empty when deflection is unarmed
+    # or never acted (ratio=0 control stays byte-identical).
+    deflection: Dict[str, float] = field(default_factory=dict)
     # per-tenant surface (DESIGN.md §10): tenant_id -> {tier, weight,
     # submitted, admitted, deferred, rejected, shed, finished, attainment,
     # p99_ttft, p99_tpot, credits, violation_ewma}. Empty when no tenant
@@ -149,7 +154,8 @@ class ServeReport:
                       "attainment", "flips", "scale_ups", "scale_downs",
                       "instance_s", "prefix_hits", "saved_prefill",
                       "crashes", "recovered", "re_prefill_toks",
-                      "admitted", "rejected", "shed", "tenants")
+                      "admitted", "rejected", "shed", "deflected",
+                      "refused", "tenants")
 
     @property
     def flips(self) -> int:
@@ -224,6 +230,12 @@ class ServeReport:
             s += (f" admitted={self.admission.get('admitted', 0):.0f}"
                   f" rejected={self.admission.get('rejected', 0):.0f}"
                   f" shed={self.admission.get('shed', 0):.0f}")
+        if self.deflection:
+            refused = sum(v for k, v in self.deflection.items()
+                          if k.startswith("refused_"))
+            s += (f" deflected="
+                  f"{self.deflection.get('requests_deflected', 0):.0f}"
+                  f" refused={refused:.0f}")
         if self.per_tenant:
             s += f" tenants={len(self.per_tenant)}"
         return s

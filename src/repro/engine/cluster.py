@@ -63,7 +63,8 @@ class ArrowEngineCluster(RuntimeCore):
                  params=None, chunk_tokens: Optional[int] = None,
                  policy: str = "arrow", autoscaler_cfg=None,
                  prefix_cache: bool = False, fault_plan=None,
-                 step_mode: str = "fused", tenants=None, admission=False):
+                 step_mode: str = "fused", tenants=None, admission=False,
+                 deflection=None):
         import jax
         self.cfg = cfg
         self.capacity = capacity
@@ -89,7 +90,10 @@ class ArrowEngineCluster(RuntimeCore):
                            predictor=predictor, clock=WallClock(),
                            autoscaler_cfg=autoscaler_cfg,
                            prefix_cache=prefix_cache, fault_plan=fault_plan,
-                           tenants=tenants, admission=admission)
+                           tenants=tenants, admission=admission,
+                           deflection=deflection)
+        for i in self.instances:
+            self._arm_deflect(i)     # §11 micro-batch knob (no-op if unarmed)
         self._pending: list = []                # heap: (arrival, rid)
         self._live: Dict[int, RequestHandle] = {}
         self._prompts: Dict[int, np.ndarray] = {}

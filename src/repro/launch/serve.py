@@ -103,7 +103,8 @@ def run_engine(args) -> ServeReport:
                                  prefix_cache=args.prefix_cache == "on",
                                  fault_plan=fault_plan(args),
                                  tenants=tenant_registry(args),
-                                 admission=args.admission == "on")
+                                 admission=args.admission == "on",
+                                 deflection=deflection_cfg(args))
     if args.trace:
         from repro.traces import load_trace
         trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
@@ -130,7 +131,8 @@ def run_sim(args) -> ServeReport:
                     prefix_cache=args.prefix_cache == "on",
                     fault_plan=fault_plan(args),
                     tenants=tenant_registry(args),
-                    admission=args.admission == "on")
+                    admission=args.admission == "on",
+                    deflection=deflection_cfg(args))
     # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
     # time and must cover the whole trace
     return run_and_report(sim, trace, tier=args.tier,
@@ -154,6 +156,21 @@ def tenant_registry(args):
         return None
     from repro.core.tenants import default_registry
     return default_registry(args.tenants)
+
+
+def deflection_cfg(args):
+    """Build the ``--deflection`` config (DESIGN.md §11); None keeps the
+    policy's defaults (``arrow_deflect`` arms DeflectionConfig() on its own;
+    non-deflective policies reject an explicit config)."""
+    if args.deflection != "on" and args.deflect_ratio is None:
+        return None
+    from repro.core.global_scheduler import DeflectionConfig
+    base = DeflectionConfig()
+    return DeflectionConfig(**{
+        **base.__dict__,
+        "ratio": base.ratio if args.deflect_ratio is None
+        else args.deflect_ratio,
+    })
 
 
 def autoscaler_cfg(args) -> Optional[AutoScalerConfig]:
@@ -227,6 +244,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "all below the low watermark, credit-gate with "
                          "deadline-aware retries between watermarks, shed "
                          "above the high watermark")
+    ap.add_argument("--deflection", choices=("on", "off"), default="off",
+                    help="cross-pool prefill deflection (DESIGN.md §11), "
+                         "requires --policy arrow_deflect: above the Eq.(1) "
+                         "pressure watermark, decode instances absorb "
+                         "bounded prefill chunks in-step (and idle prefill "
+                         "instances pick up decode slack), refused whenever "
+                         "the predictors say it would break the victim "
+                         "pool's SLO budget")
+    ap.add_argument("--deflect-ratio", type=float, default=None,
+                    help="§11 micro-batch knob: max deflected prefill "
+                         "tokens per fused step as a fraction of the "
+                         "victim's mixed-chunk budget (default 0.25; 0 "
+                         "disables deflection — byte-identical to "
+                         "arrow_elastic). Implies --deflection on")
     ap.add_argument("--list-traces", action="store_true",
                     help="print the trace-preset table and exit")
     ap.add_argument("--list-policies", action="store_true",

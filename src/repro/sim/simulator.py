@@ -66,7 +66,8 @@ class Simulator(RuntimeCore):
                  profiles: Optional[Dict[int, InstanceProfile]] = None,
                  token_budget: int = 8192, flip_latency: float = 0.0,
                  autoscaler_cfg=None, prefix_cache: bool = False,
-                 fault_plan=None, tenants=None, admission=False):
+                 fault_plan=None, tenants=None, admission=False,
+                 deflection=None):
         """``profiles`` (iid -> InstanceProfile) enables heterogeneous
         clusters (paper §8): per-instance cost models + a per-instance-fitted
         TTFT predictor; ``profile`` is the homogeneous default (elastic
@@ -76,7 +77,9 @@ class Simulator(RuntimeCore):
         as exact virtual-clock events (DESIGN.md §8). ``tenants`` attaches a
         ``TenantRegistry`` (core/tenants.py); ``admission`` (bool or an
         ``AdmissionConfig``) arms the watermark admission controller
-        (DESIGN.md §10)."""
+        (DESIGN.md §10). ``deflection`` (a ``DeflectionConfig``) tunes
+        cross-pool prefill deflection under a deflective policy
+        (``arrow_deflect``, DESIGN.md §11)."""
         self.cfg = cfg
         self._spawn_profile = profile
         self._token_budget = token_budget
@@ -106,11 +109,14 @@ class Simulator(RuntimeCore):
                            sched_cfg=sched_cfg, predictor=predictor,
                            clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg,
                            prefix_cache=prefix_cache, fault_plan=fault_plan,
-                           tenants=tenants, admission=admission)
+                           tenants=tenants, admission=admission,
+                           deflection=deflection)
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
             for i in ids}
+        for i in ids:
+            self._arm_deflect(i)     # §11 micro-batch knob (no-op if unarmed)
 
         self.requests: Dict[int, Request] = {}
         self._heap: list = []

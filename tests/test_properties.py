@@ -1,0 +1,190 @@
+"""Property-based scheduling tests over the runtime core (ISSUE 7).
+
+Random traces + fault/flip/deflection schedules drive the ``arrow_deflect``
+simulator end-to-end while asserting, between steps and after drain:
+
+  * the tests/invariants.py structural probe (KV conservation, lifecycle
+    vs work, stream ordering, counter sanity),
+  * conservation of requests — submitted == finished + rejected with
+    nothing left in flight after drain,
+  * deflected prefill only ever *lands* on an ACTIVE instance (checked at
+    placement time) and is never resident on a WARMING/FAILED one.
+
+Runs under the hypothesis-optional shim (tests/hyp_compat.py): with
+hypothesis installed the schedules are drawn and shrunk by the library, and
+any minimized failing example is appended to
+tests/corpus/deflection_regressions.json; without it the ``@given`` tests
+skip cleanly while the checked-in corpus still replays under plain pytest —
+so tier-1 executes the harness either way.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+from invariants import check_invariants
+
+from repro.configs import get_config
+from repro.core import SLO, DeflectionConfig, Lifecycle, Pool, Request
+from repro.core.autoscaler import AutoScalerConfig
+from repro.sim import Simulator
+
+CORPUS = pathlib.Path(__file__).parent / "corpus" / \
+    "deflection_regressions.json"
+CFG = get_config("gemma-2b")
+
+
+# ------------------------------------------------------------------ harness
+def make_trace(rng, n_requests: int, rate: float):
+    t, reqs = 0.0, []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        reqs.append(Request(rid=rid, arrival=t,
+                            input_len=int(rng.integers(16, 2048)),
+                            output_len=int(rng.integers(1, 48))))
+    return reqs
+
+
+def _check_deflected_residency(sim):
+    """Deflected prefill work may drain on a RETIRING instance (placed while
+    it was ACTIVE) but must never sit on a WARMING or FAILED one."""
+    for iid in sim.pools.all_ids():
+        loc = sim.locals.get(iid)
+        if loc is None:
+            continue
+        if any(w.deflected for w in loc.prefill_queue.values()):
+            life = sim.pools.lifecycle_of(iid)
+            assert life not in (Lifecycle.WARMING, Lifecycle.FAILED), \
+                f"deflected prefill resident on {life.value} instance {iid}"
+
+
+def run_schedule(params: dict):
+    """Execute one schedule described by a JSON-able ``params`` dict (the
+    regression-corpus format); raises AssertionError on any violated
+    property. Event steps index the simulator's event loop, so a replayed
+    corpus entry fires its faults/flips at the exact same points."""
+    rng = np.random.default_rng(params["seed"])
+    sim = Simulator(
+        CFG, n_instances=4, n_prefill=2, policy="arrow_deflect",
+        slo=SLO(params.get("slo_ttft", 2.0), params.get("slo_tpot", 0.2)),
+        autoscaler_cfg=AutoScalerConfig(min_instances=2, max_instances=8),
+        deflection=DeflectionConfig(ratio=params["ratio"],
+                                    watermark=params["watermark"]))
+
+    orig_place = sim.policy.place_prefill
+
+    def place(req, now, prefix_hits=None):
+        iid, hit, deflected = orig_place(req, now, prefix_hits=prefix_hits)
+        if deflected:
+            life = sim.pools.lifecycle_of(iid)
+            assert life is Lifecycle.ACTIVE, \
+                f"deflected rid {req.rid} landed on {life.value} {iid}"
+        return iid, hit, deflected
+
+    sim.policy.place_prefill = place
+
+    for r in make_trace(rng, params["n_requests"], params["rate"]):
+        sim.submit(r)
+
+    crash_at = sorted(params.get("crash_steps", []), reverse=True)
+    retire_at = sorted(params.get("retire_steps", []), reverse=True)
+    scale_at = sorted(params.get("scale_steps", []), reverse=True)
+    check_every = params.get("check_every", 64)
+    steps = 0
+    while sim.step():
+        steps += 1
+        now = sim.clock.now()
+        if crash_at and steps >= crash_at[-1]:
+            crash_at.pop()
+            active = sim.pools.active_ids()
+            if len(active) > 1:          # never strand the whole cluster
+                sim.fail_instance(int(rng.choice(active)), now)
+        if retire_at and steps >= retire_at[-1]:
+            retire_at.pop()
+            active = sim.pools.active_ids()
+            if len(active) > 2:          # leave evacuation targets
+                sim.begin_retire(int(rng.choice(active)), now)
+        if scale_at and steps >= scale_at[-1]:
+            scale_at.pop()
+            sim.scale_up(Pool.PREFILL if steps % 2 else Pool.DECODE, now)
+        if steps % check_every == 0:
+            check_invariants(sim, streams=False)
+            _check_deflected_residency(sim)
+
+    report = sim.drain()
+    check_invariants(sim)
+    _check_deflected_residency(sim)
+    n_fin = sum(1 for h in report.handles if h.done)
+    n_rej = sum(1 for h in report.handles if h.rejected)
+    assert n_fin + n_rej == len(report.handles), (
+        f"request conservation broken: {len(report.handles)} submitted != "
+        f"{n_fin} finished + {n_rej} rejected "
+        f"({len(report.handles) - n_fin - n_rej} in flight after drain)")
+    return report
+
+
+def _record_regression(params: dict) -> None:
+    """Persist a (hypothesis-minimized) failing schedule into the corpus so
+    it replays forever under plain pytest."""
+    corpus = json.loads(CORPUS.read_text()) if CORPUS.exists() else []
+    entry = dict(params)
+    entry.setdefault("name", f"minimized-seed{params['seed']}")
+    if all(e != entry for e in corpus):
+        corpus.append(entry)
+        CORPUS.write_text(json.dumps(corpus, indent=2) + "\n")
+
+
+# --------------------------------------------------- property tests (shrunk)
+@given(seed=st.integers(0, 2 ** 16),
+       n_requests=st.integers(10, 80),
+       rate=st.floats(2.0, 400.0),
+       slo_ttft=st.floats(0.3, 4.0),
+       ratio=st.floats(0.0, 1.0),
+       watermark=st.floats(0.0, 1.2),
+       crash_steps=st.lists(st.integers(1, 2000), max_size=2),
+       retire_steps=st.lists(st.integers(1, 2000), max_size=2),
+       scale_steps=st.lists(st.integers(1, 2000), max_size=2))
+@settings(max_examples=15, deadline=None)
+def test_random_schedules_hold_invariants(seed, n_requests, rate, slo_ttft,
+                                          ratio, watermark, crash_steps,
+                                          retire_steps, scale_steps):
+    params = dict(seed=seed, n_requests=n_requests, rate=rate,
+                  slo_ttft=slo_ttft, slo_tpot=slo_ttft / 10.0, ratio=ratio,
+                  watermark=watermark, crash_steps=crash_steps,
+                  retire_steps=retire_steps, scale_steps=scale_steps)
+    try:
+        run_schedule(params)
+    except AssertionError:
+        _record_regression(params)
+        raise
+
+
+# ------------------------------------------- checked-in regression corpus
+def _load_corpus():
+    return json.loads(CORPUS.read_text())
+
+
+@pytest.mark.parametrize("params", _load_corpus(),
+                         ids=lambda p: p.get("name", str(p.get("seed"))))
+def test_regression_corpus(params):
+    run_schedule(params)
+
+
+def test_harness_not_vacuous():
+    """The corpus harness must actually exercise deflection: the pressure
+    entry deflects requests, and its report carries the §11 section."""
+    report = run_schedule(dict(seed=7, n_requests=150, rate=400.0,
+                               slo_ttft=0.5, slo_tpot=0.05,
+                               ratio=0.25, watermark=0.2))
+    assert report.deflection.get("requests_deflected", 0) > 0
+    assert report.deflection["chunk_tokens_executed"] > 0
+
+
+def test_hypothesis_shim_mode():
+    """Document which mode this environment ran in (skip bookkeeping: with
+    hypothesis absent the @given tests above must have been skip-marked)."""
+    if not HAVE_HYPOTHESIS:
+        fn = test_random_schedules_hold_invariants
+        marks = getattr(fn, "pytestmark", [])
+        assert any(m.name == "skip" for m in marks)

@@ -3,7 +3,8 @@ TTFT predictor, local scheduler, monitor semantics)."""
 import pytest
 from hyp_compat import given, settings, st
 
-from repro.core import (SLO, GlobalScheduler, InstanceMonitor, InstancePools,
+from repro.core import (SLO, DeflectionConfig, DeflectionPolicy,
+                        GlobalScheduler, InstanceMonitor, InstancePools,
                         InstanceStats, LocalScheduler, Pool, Request,
                         SchedulerConfig, TTFTPredictor)
 
@@ -252,3 +253,305 @@ def test_local_scheduler_conserves_work(lengths, budget):
             planned[rid] += ln
             loc.complete_prefill_chunk(rid, ln)
     assert planned == {i: ln for i, ln in enumerate(lengths)}
+
+
+# ------------------------------------------- §11 deflection (ISSUE 7)
+# With make_sched's predictor fit, predict(512) ~= 0.039s and
+# predict(2048) ~= 0.31s; SLO(1.0, 0.1) gives ttft_budget 0.9 and
+# tpot_budget 0.09 — the numbers below lean on those magnitudes.
+
+
+def arm(gs, **kw):
+    gs.deflection = DeflectionPolicy(DeflectionConfig(**kw))
+    return gs.deflection
+
+
+def pressurize(gs, ids=(0, 1), seconds=2.0):
+    """Build Eq.(2) backlog on the prefill pool so pressure > watermark."""
+    for i in ids:
+        gs.account_prefill_dispatch(i, 0.0, seconds)
+
+
+def _req(rid=1, input_len=512):
+    return Request(rid=rid, arrival=0.0, input_len=input_len, output_len=8)
+
+
+def test_deflect_refused_below_watermark():
+    gs, *_ = make_sched()
+    pol = arm(gs)
+    assert pol.try_deflect(gs, _req(), 0.0, 0.9) is None
+    assert pol.stats["refused_below_watermark"] == 1
+
+
+def test_deflect_refused_no_victim():
+    gs, *_ = make_sched(n=2, n_prefill=2)       # no pure-DECODE instance
+    pol = arm(gs)
+    pressurize(gs)
+    assert pol.try_deflect(gs, _req(), 0.0, 0.9) is None
+    assert pol.stats["refused_no_victim"] == 1
+
+
+def test_deflect_refused_tpot_budget():
+    gs, pools, mon, _ = make_sched()
+    pol = arm(gs)
+    pressurize(gs)
+    for v in (2, 3):   # victims already decode at the full TPOT budget
+        # (set directly: update_stats recomputes the mean from samples)
+        mon.get(v).avg_token_interval = 0.09
+    assert pol.try_deflect(gs, _req(), 0.0, 0.9) is None
+    assert pol.stats["refused_tpot_budget"] == 1
+
+
+def test_deflect_refused_kv_headroom():
+    gs, pools, mon, _ = make_sched()
+    pol = arm(gs)
+    pressurize(gs)
+    for v in (2, 3):   # near the 10000-token cap: 9800 + 512 overflows
+        mon.update_stats(InstanceStats(instance_id=v, running_tokens=9800))
+    assert pol.try_deflect(gs, _req(), 0.0, 0.9) is None
+    assert pol.stats["refused_kv_headroom"] == 1
+
+
+def test_deflect_refused_victim_backlog():
+    gs, *_ = make_sched()
+    pol = arm(gs)
+    pressurize(gs)
+    for v in (2, 3):   # victims already owe 5s of deflected drain
+        gs.account_prefill_dispatch(v, 0.0, 5.0)
+    assert pol.try_deflect(gs, _req(), 0.0, 0.9) is None
+    assert pol.stats["refused_victim_backlog"] == 1
+
+
+def test_deflect_refusal_reasons_exhaustive():
+    """Every counted refusal reason is reachable (the five tests above) and
+    the stats dict carries exactly the declared reasons."""
+    assert set(DeflectionPolicy.REFUSALS) == {
+        "below_watermark", "no_victim", "tpot_budget", "kv_headroom",
+        "victim_backlog"}
+    pol = DeflectionPolicy(DeflectionConfig())
+    assert {k[len("refused_"):] for k in pol.stats
+            if k.startswith("refused_")} == set(DeflectionPolicy.REFUSALS)
+
+
+def test_deflect_success_charges_eq2_interference():
+    gs, pools, *_ = make_sched()
+    pol = arm(gs)                               # ratio 0.25 -> 512/step
+    pressurize(gs)
+    before = dict(gs.prefill_ready_at)
+    out = pol.try_deflect(gs, _req(rid=9, input_len=1024), 0.0, 0.9)
+    assert out is not None and out.deflected
+    v = out.instance
+    assert v in pools.members(Pool.DECODE)
+    assert pol.stats["requests_deflected"] == 1
+    assert pol.stats["tokens_deflected"] == 1024
+    # 1024 tokens at 512/step = 2 victim steps; idle victim -> the whole
+    # drain is interference, charged through the same Eq.(2) bookkeeping
+    chunk_t = gs._predict_chunk(v, 0, 512)
+    assert pol.stats["interference_s"] == pytest.approx(2 * chunk_t)
+    assert gs.prefill_ready_at[v] == pytest.approx(before[v] + 2 * chunk_t)
+    assert out.predicted_ttft <= 0.9
+
+
+def test_deflect_max_ratio_never_starves_host_decode():
+    """ratio=1.0 -> 2048-token chunks whose per-step cost (~0.31s) exceeds
+    the 0.09s TPOT budget: the TPOT guard refuses, so even the maximal knob
+    cannot push a victim's decode below its SLO budget."""
+    gs, *_ = make_sched()
+    pol = arm(gs, ratio=1.0)
+    pressurize(gs)
+    assert pol.try_deflect(gs, _req(), 0.0, 0.9) is None
+    assert pol.stats["refused_tpot_budget"] == 1
+
+
+def test_deflect_schedule_prefill_integration():
+    """Algorithm 1 reaches the deflection branch when t1/t2 miss the budget,
+    and an armed-but-ratio-0 scheduler is decision-identical to an unarmed
+    one (the ratio=0 control of DESIGN.md §11)."""
+    armed, armed_pools, *_ = make_sched()
+    arm(armed)
+    pressurize(armed)
+    out = armed.schedule_prefill(_req(), 0.0)
+    assert out.deflected and out.instance in armed_pools.members(Pool.DECODE)
+
+    zero, *_ = make_sched()
+    pol0 = arm(zero, ratio=0.0)
+    plain, *_ = make_sched()
+    pressurize(zero)
+    pressurize(plain)
+    for rid in range(6):
+        a = zero.schedule_prefill(_req(rid=rid), 0.0)
+        b = plain.schedule_prefill(_req(rid=rid), 0.0)
+        assert (a.instance, a.flipped, a.deflected, a.via_fallback) == \
+            (b.instance, b.flipped, b.deflected, b.via_fallback)
+    assert all(v == 0 for v in pol0.stats.values())
+
+
+def test_deflect_idle_prefiller_picks_up_decode():
+    gs, pools, mon, cluster = make_sched()
+    pol = arm(gs)
+    mon.update_stats(InstanceStats(instance_id=1, running_tokens=50))
+    assert pol.try_pickup(gs, _req(input_len=64), 0.0) == 0  # lightest idle
+    assert pol.stats["decode_pickups"] == 1
+    # busy prefillers (pending work on 0, Eq.(2) backlog on 1) -> no pickup
+    cluster.pending_prefill.add(0)
+    gs.account_prefill_dispatch(1, 0.0, 1.0)
+    assert pol.try_pickup(gs, _req(input_len=64), 0.0) is None
+    # and the knob can disable the symmetric direction entirely
+    off = arm(gs, idle_pickup=False)
+    assert off.try_pickup(gs, _req(input_len=64), 0.0) is None
+
+
+# --------------------------------------- §11 local micro-batch ratio knob
+
+
+def test_local_deflected_served_after_native_from_leftover_budget():
+    loc = LocalScheduler(0, token_budget=512, mixed_chunk_budget=256,
+                         deflect_ratio=0.25)
+    loc.enqueue_prefill(1, 200)                     # native
+    loc.enqueue_prefill(2, 1000, deflected=True)    # deflected
+    loc.start_local_decode(3, 300, 5)
+    plan = loc.plan_iteration()
+    assert plan.decode_rids == [3]                  # decode-first (Sarathi)
+    # mixed budget 256: native's 200 go first, deflected gets the leftover
+    # 56 (inside its deficit allowance max(1, 0.25*256) = 64)
+    assert plan.prefill_chunks == [(1, 0, 200), (2, 0, 56)]
+    # native absent next plan: deflected alone is capped by the allowance,
+    # carrying over the 8 unspent deficit tokens from the first step
+    loc.complete_prefill_chunk(1, 200)
+    loc.complete_prefill_chunk(2, 56)
+    plan2 = loc.plan_iteration()
+    assert plan2.prefill_chunks == [(2, 56, 72)]    # 64 + (64 - 56) carry
+
+
+def test_local_deflect_deficit_bounds_tokens_over_any_window():
+    """Over k plans with a saturated deflected backlog, executed deflected
+    tokens never exceed k*allowance + one carry-over of the budget cap."""
+    ratio, mcb, k = 0.1, 256, 50
+    loc = LocalScheduler(0, token_budget=4096, mixed_chunk_budget=mcb,
+                         deflect_ratio=ratio)
+    loc.enqueue_prefill(1, 10 ** 6, deflected=True)
+    total = 0
+    for _ in range(k):
+        plan = loc.plan_iteration()
+        for rid, _start, ln in plan.prefill_chunks:
+            total += ln
+            loc.complete_prefill_chunk(rid, ln)
+    allowance = max(1.0, ratio * mcb)
+    assert total <= k * allowance + mcb
+    assert total >= k * allowance - mcb             # and it keeps moving
+
+
+def test_local_tiny_ratio_still_progresses():
+    """ratio so small that ratio*budget < 1 token: the one-token allowance
+    floor keeps every plan non-empty until the deflected work drains (an
+    empty plan would never be re-kicked by the simulator)."""
+    loc = LocalScheduler(0, token_budget=512, mixed_chunk_budget=256,
+                         deflect_ratio=0.001)
+    loc.enqueue_prefill(1, 5, deflected=True)
+    for _ in range(100):
+        plan = loc.plan_iteration()
+        if plan.is_empty:
+            break
+        ((rid, _start, ln),) = plan.prefill_chunks
+        assert ln >= 1
+        loc.complete_prefill_chunk(rid, ln)
+    assert not loc.prefill_queue                    # drained, never hung
+
+
+# --------------------------------------- §11 sim/engine deflection parity
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def _record_placements(system):
+    """Wrap the policy's place_prefill to log (rid, instance, deflected)."""
+    orig = system.policy.place_prefill
+    rec = []
+
+    def place(req, now, prefix_hits=None):
+        iid, hit, deflected = orig(req, now, prefix_hits=prefix_hits)
+        rec.append((req.rid, iid, deflected))
+        return iid, hit, deflected
+
+    system.policy.place_prefill = place
+    return rec
+
+
+def test_sim_engine_deflection_parity_and_stream_identity(engine_setup):
+    """Acceptance (ISSUE 7): the same burst + the same DeflectionConfig at
+    the same state barrier (a pre-charged Eq.(2) backlog on the prefill
+    instance, all arrivals dispatched before any step) yields the *same*
+    deflected-chunk placements and policy counters on both backends —
+    placement is decided by the shared Eq.(1)/(2) bookkeeping, so backend
+    timing must not leak in. And the engine's greedy token streams are
+    bit-identical with deflection on vs off: executing a prefill as
+    deflected chunks on a decode instance is numerically the same
+    computation."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.autoscaler import AutoScalerConfig
+    from repro.engine import ArrowEngineCluster
+    from repro.sim import Simulator
+    cfg, params = engine_setup
+    dc_on = DeflectionConfig(ratio=0.25)
+    slo = SLO(30.0, 10.0)      # victim gates pass; only t1's backlog misses
+    pinned = AutoScalerConfig(min_instances=2, max_instances=2)
+    N, IN, OUT = 6, 24, 6
+    rng = np.random.default_rng(3)
+    prompts = {i: rng.integers(1, cfg.vocab_size, size=IN).astype(np.int32)
+               for i in range(N)}
+
+    def reqs():
+        return [Request(rid=i, arrival=0.0, input_len=IN, output_len=OUT)
+                for i in range(N)]
+
+    # ---- sim side: pre-charge, submit the burst, drain
+    sim = Simulator(get_config("gemma-2b"), n_instances=2, n_prefill=1,
+                    policy="arrow_deflect", slo=slo, autoscaler_cfg=pinned,
+                    deflection=dc_on)
+    sim.policy.prefill_ready_at[0] = 1000.0        # the state barrier
+    rec_sim = _record_placements(sim)
+    for r in reqs():
+        sim.submit(r)
+    rep_sim = sim.drain()
+
+    # ---- engine side, deflection ON
+    def engine(policy, deflection):
+        eng = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                                 capacity=128, slo=slo, params=params,
+                                 policy=policy, autoscaler_cfg=pinned,
+                                 deflection=deflection)
+        eng.policy.prefill_ready_at[0] = 1000.0    # same barrier
+        rec = _record_placements(eng)
+        handles = [eng.submit(r, prompt=prompts[r.rid]) for r in reqs()]
+        rep = eng.drain(timeout=300.0)
+        return rec, rep, [list(h.tokens) for h in handles]
+
+    rec_on, rep_on, streams_on = engine("arrow_deflect", dc_on)
+
+    # same placements, and non-vacuously deflecting
+    assert rec_sim == rec_on
+    assert any(d for _, _, d in rec_sim), "barrier never triggered deflection"
+    for key in ("requests_deflected", "tokens_deflected",
+                "chunks_executed", "chunk_tokens_executed"):
+        assert rep_sim.deflection[key] == rep_on.deflection[key], key
+    for rid, iid, d in rec_sim:
+        if d:
+            assert iid == 1                        # the only decode victim
+
+    # ---- engine side, deflection OFF (ratio=0 control): identical streams
+    rec_off, rep_off, streams_off = engine("arrow_deflect",
+                                           DeflectionConfig(ratio=0.0))
+    assert not rep_off.deflection                  # §11 section stays empty
+    assert not any(d for _, _, d in rec_off)
+    assert streams_on == streams_off, \
+        "deflected execution changed greedy token ids"
+    assert rep_on.n_finished == rep_off.n_finished == N
