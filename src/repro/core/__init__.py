@@ -16,7 +16,8 @@ from repro.core.policies import POLICIES  # noqa: F401
 from repro.core.pools import InstancePools, Lifecycle, Pool  # noqa: F401
 from repro.core.prefix_index import (PrefixCacheManager, PrefixHit,  # noqa: F401
                                      PrefixIndex, content_keys, lineage_keys)
-from repro.core.request import Phase, Request, RequestState  # noqa: F401
+from repro.core.request import (Phase, Request, RequestState,  # noqa: F401
+                                SamplingParams)
 from repro.core.runtime import DecodePlacement, RuntimeCore  # noqa: F401
 from repro.core.serving import (RequestHandle, ServeReport, ServingSystem,  # noqa: F401
                                 SLOTier, TIERS, UndispatchableError,

@@ -23,6 +23,24 @@ class RequestState(enum.Enum):
     #                                  KV accounting and never will
 
 
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls (DESIGN.md §12). ``temperature<=0`` is
+    exact greedy argmax — provably the pre-sampling token path. ``seed``
+    overrides the run seed recorded in ``ServeReport`` for this request
+    only; the effective key stream is derived statelessly from
+    ``(seed, rid, absolute position)``, which is what makes sampled streams
+    replayable bit-for-bit across runs, migration and crash recovery."""
+
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
 @dataclass
 class Request:
     rid: int
@@ -30,6 +48,10 @@ class Request:
     input_len: int
     output_len: int                  # trace ground truth (sim) / max tokens (engine)
     state: RequestState = RequestState.QUEUED
+
+    # decoding controls (DESIGN.md §12); None ≡ greedy argmax (the pre-PR-8
+    # behavior, byte-identical)
+    sampling: Optional[SamplingParams] = None
 
     # multi-turn lineage (DESIGN.md §7): a follow-up turn extends its
     # session's token stream; dispatch is gated on the parent finishing and

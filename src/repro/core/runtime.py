@@ -85,6 +85,7 @@ class RuntimeCore(ServingSystem):
                       tenants: Optional[TenantRegistry] = None,
                       admission=False,
                       deflection: Optional[DeflectionConfig] = None,
+                      run_seed: int = 0,
                       ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
@@ -121,6 +122,11 @@ class RuntimeCore(ServingSystem):
         self._transfers: Dict[int, Tuple[int, int, int]] = {}  # rid->(s,d,kv)
         self._migration_kv: Dict[int, int] = {}     # rid -> kv while MIGRATING
         self._recent_finish: deque = deque(maxlen=128)  # SLO window
+        # ---- replayable sampling + self-speculative decoding (§12)
+        self.run_seed = run_seed
+        self._sampling_stats: Dict[str, float] = {"sampled_requests": 0}
+        self._spec_stats: Dict[str, float] = {
+            "rounds": 0, "drafted": 0, "accepted": 0, "emitted": 0}
         # ---- fault domain (DESIGN.md §8)
         self.fault_stats: Dict[str, float] = {
             "crashes": 0, "slowdowns": 0, "skipped_events": 0,
@@ -348,6 +354,8 @@ class RuntimeCore(ServingSystem):
         handle = RequestHandle(req=req, slo=TIERS[tier].apply(self.slo),
                                tier=tier, on_token=on_token,
                                on_finish=on_finish)
+        if req.sampling is not None and not req.sampling.greedy:
+            self._sampling_stats["sampled_requests"] += 1
         self.handles[req.rid] = handle
         return handle
 
@@ -1101,6 +1109,25 @@ class RuntimeCore(ServingSystem):
             out[tid] = row
         return out
 
+    def sampling_detail(self) -> Dict[str, float]:
+        """Replayable-sampling accounting (§12); empty when every request
+        decoded greedily (so greedy reports stay byte-identical to
+        pre-sampling builds). ``seed`` is the run seed each slot's key
+        stream is folded from — the replay handle."""
+        if not self._sampling_stats["sampled_requests"]:
+            return {}
+        return {"seed": self.run_seed, **self._sampling_stats}
+
+    def speculation_detail(self) -> Dict[str, float]:
+        """Self-speculative decoding accounting (§12); empty when
+        speculation is off or never ran a round."""
+        if not self._spec_stats["rounds"]:
+            return {}
+        out = dict(self._spec_stats)
+        out["acceptance"] = (out["accepted"] / out["drafted"]
+                             if out["drafted"] else 0.0)
+        return out
+
     def report(self) -> ServeReport:
         return ServeReport(handles=list(self.handles.values()),
                            flip_detail=self.flip_counts(),
@@ -1111,4 +1138,6 @@ class RuntimeCore(ServingSystem):
                            faults=self.fault_detail(),
                            admission=self.admission_detail(),
                            deflection=self.deflection_detail(),
-                           per_tenant=self.tenant_detail())
+                           per_tenant=self.tenant_detail(),
+                           sampling=self.sampling_detail(),
+                           speculation=self.speculation_detail())

@@ -146,6 +146,15 @@ class ServeReport:
     # p99_ttft, p99_tpot, credits, violation_ewma}. Empty when no tenant
     # registry is attached.
     per_tenant: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # replayable-sampling accounting (DESIGN.md §12): seed (the run seed
+    # every slot key is folded from — replaying the same trace with this
+    # seed reproduces every stream bit-for-bit), sampled_requests. Empty
+    # when every request decoded greedily (so greedy reports stay
+    # byte-identical to pre-sampling builds).
+    sampling: Dict[str, float] = field(default_factory=dict)
+    # self-speculative decoding accounting (DESIGN.md §12): rounds, drafted,
+    # accepted, acceptance, emitted. Empty when speculation is off.
+    speculation: Dict[str, float] = field(default_factory=dict)
 
     #: every field name ``summary()`` can emit, in emission order —
     #: tools/check_docs.py diffs this against DESIGN.md's report-schema
@@ -155,7 +164,8 @@ class ServeReport:
                       "instance_s", "prefix_hits", "saved_prefill",
                       "crashes", "recovered", "re_prefill_toks",
                       "admitted", "rejected", "shed", "deflected",
-                      "refused", "tenants")
+                      "refused", "seed", "sampled", "spec_emitted",
+                      "spec_accept", "tenants")
 
     @property
     def flips(self) -> int:
@@ -236,6 +246,12 @@ class ServeReport:
             s += (f" deflected="
                   f"{self.deflection.get('requests_deflected', 0):.0f}"
                   f" refused={refused:.0f}")
+        if self.sampling:
+            s += (f" seed={self.sampling.get('seed', 0):.0f}"
+                  f" sampled={self.sampling.get('sampled_requests', 0):.0f}")
+        if self.speculation:
+            s += (f" spec_emitted={self.speculation.get('emitted', 0):.0f}"
+                  f" spec_accept={self.speculation.get('acceptance', 0):.2f}")
         if self.per_tenant:
             s += f" tenants={len(self.per_tenant)}"
         return s
@@ -315,7 +331,8 @@ def replay_trace(system: ServingSystem, trace: List[Request], *,
         req = Request(rid=r.rid, arrival=r.arrival * time_scale,
                       input_len=r.input_len, output_len=r.output_len,
                       session_id=r.session_id, parent_rid=r.parent_rid,
-                      history_len=r.history_len, tenant_id=r.tenant_id)
+                      history_len=r.history_len, tenant_id=r.tenant_id,
+                      sampling=r.sampling)
         handles.append(system.submit(req, tier=tier, on_token=on_token,
                                      on_finish=on_finish))
     return handles

@@ -64,22 +64,23 @@ class ArrowEngineCluster(RuntimeCore):
                  policy: str = "arrow", autoscaler_cfg=None,
                  prefix_cache: bool = False, fault_plan=None,
                  step_mode: str = "fused", tenants=None, admission=False,
-                 deflection=None):
+                 deflection=None, speculate: int = 0,
+                 draft_layers: Optional[int] = None):
         import jax
         self.cfg = cfg
         self.capacity = capacity
         self.n_slots = n_slots
         self.chunk_tokens = chunk_tokens
         self.step_mode = step_mode
+        self.run_seed = int(seed)
+        self.speculate = int(speculate)
+        self.draft_layers = draft_layers
         if params is None:
             model = build_model(cfg)
             params = model.init(jax.random.PRNGKey(seed))
         self.params = params           # shared by reference across instances
         self.instances: Dict[int, EngineInstance] = {
-            i: EngineInstance(i, cfg, params, n_slots=n_slots,
-                              capacity=capacity, chunk_tokens=chunk_tokens,
-                              step_mode=step_mode)
-            for i in range(n_instances)}
+            i: self._new_instance(i) for i in range(n_instances)}
         # real profiling pass on instance 0 (instances are homogeneous here)
         samples = self.instances[0].profile_prefill()
         predictor = TTFTPredictor.fit(samples)
@@ -91,11 +92,15 @@ class ArrowEngineCluster(RuntimeCore):
                            autoscaler_cfg=autoscaler_cfg,
                            prefix_cache=prefix_cache, fault_plan=fault_plan,
                            tenants=tenants, admission=admission,
-                           deflection=deflection)
+                           deflection=deflection, run_seed=seed)
         for i in self.instances:
             self._arm_deflect(i)     # §11 micro-batch knob (no-op if unarmed)
         self._pending: list = []                # heap: (arrival, rid)
         self._live: Dict[int, RequestHandle] = {}
+        # async step state (DESIGN.md §12): iid -> dispatched-step context
+        # whose token arrays are still computing on device; populated by the
+        # dispatch-all phase of step() and drained by collect-ready
+        self._inflight: Dict[int, tuple] = {}
         self._prompts: Dict[int, np.ndarray] = {}
         self._last_tick = 0.0
         # multi-turn sessions (DESIGN.md §7): the evolving token stream per
@@ -108,6 +113,13 @@ class ArrowEngineCluster(RuntimeCore):
         self._session_epoch: Dict[int, int] = {}
         self._rid_epoch: Dict[int, tuple] = {}   # rid -> (lookup, retain)
 
+    def _new_instance(self, iid: int) -> EngineInstance:
+        return EngineInstance(
+            iid, self.cfg, self.params, n_slots=self.n_slots,
+            capacity=self.capacity, chunk_tokens=self.chunk_tokens,
+            step_mode=self.step_mode, run_seed=self.run_seed,
+            speculate=self.speculate, draft_layers=self.draft_layers)
+
     @property
     def gs(self):
         """Back-compat alias from when the engine hard-wired GlobalScheduler;
@@ -119,15 +131,22 @@ class ArrowEngineCluster(RuntimeCore):
         return self.instances[iid].local
 
     def _begin_transfer(self, rid: int, dst: int, kv: int, rem: int) -> bool:
-        # real KV movement between instances (synchronous array export/import)
+        # real KV movement between instances (synchronous array export/import);
+        # both endpoints must first land any inflight async step — the source
+        # so the exported KV includes every token already emitted, the
+        # destination so its donated slabs aren't mid-flight
         src = self._kv_source(rid)
+        self._finalize_now(src)
+        self._finalize_now(dst)
+        samp = self.instances[src].kv.samp_of.get(rid)
         k, v, L, last, gen = self.instances[src].export_kv(rid)
-        if not self.instances[dst].import_kv(rid, k, v, L, last, gen):
+        if not self.instances[dst].import_kv(rid, k, v, L, last, gen,
+                                             sampling=samp):
             # no free slot: cached prefixes are reclaimable capacity (§7)
             if not (self.prefix_mgr is not None
                     and self.prefix_mgr.evict_one(dst) is not None
-                    and self.instances[dst].import_kv(rid, k, v, L,
-                                                      last, gen)):
+                    and self.instances[dst].import_kv(rid, k, v, L, last,
+                                                      gen, sampling=samp)):
                 return False                    # genuinely full: retry later
         self.complete_migration(rid, dst, kv, rem, self.clock.now())
         return True
@@ -155,7 +174,10 @@ class ArrowEngineCluster(RuntimeCore):
     # ------------------------------------------------ fault hooks (§8)
     def _on_instance_failed(self, iid: int) -> None:
         # the EngineInstance — and with it the slot KV cache — dies here;
-        # the LocalScheduler bookkeeping was already inventoried
+        # the LocalScheduler bookkeeping was already inventoried. An inflight
+        # async step dies with it: its tokens were never emitted, so the
+        # stream consistently resumes from the last *emitted* token (§8)
+        self._inflight.pop(iid, None)
         self.instances.pop(iid, None)
 
     def _request_lost(self, rid: int) -> None:
@@ -273,6 +295,13 @@ class ArrowEngineCluster(RuntimeCore):
         self._prompts.pop(handle.req.rid, None)   # keys computed; free it
 
     # ------------------------------------- elastic lifecycle hooks (§6)
+    def begin_retire(self, iid: int, now: float) -> None:
+        # land any inflight async step first: its decode tokens belong to
+        # requests that retirement is about to flip to MIGRATING (and pop
+        # from the local scheduler) — emit them before the state moves
+        self._finalize_now(iid)
+        super().begin_retire(iid, now)
+
     def _create_instance(self, iid: int) -> float:
         """Spawn a real EngineInstance; params are shared by reference and
         the fused-step jits are module-level keyed on the (hashable) config
@@ -280,13 +309,13 @@ class ArrowEngineCluster(RuntimeCore):
         is the KV-cache allocation, which happens right here, i.e. the
         warm-up is real elapsed wall-clock, and the instance is ACTIVE the
         moment construction returns."""
-        self.instances[iid] = EngineInstance(
-            iid, self.cfg, self.params, n_slots=self.n_slots,
-            capacity=self.capacity, chunk_tokens=self.chunk_tokens,
-            step_mode=self.step_mode)
+        self.instances[iid] = self._new_instance(iid)
         return 0.0
 
     def _destroy_instance(self, iid: int) -> None:
+        # retirement is gated on _instance_quiesced, so there is no inflight
+        # step by now; the pop is a belt-and-braces invariant
+        self._inflight.pop(iid, None)
         self.instances.pop(iid, None)
 
     # --------------------------------------------------------- ServingSystem
@@ -314,7 +343,32 @@ class ArrowEngineCluster(RuntimeCore):
         heapq.heappush(self._pending, (req.arrival, req.rid))
         return handle
 
+    def _finalize_now(self, iid: int) -> None:
+        """Land ``iid``'s inflight async step immediately (blocking fetch).
+        Used where host state must be consistent with the device — KV
+        export/import endpoints — and as the no-progress fallback."""
+        ctx = self._inflight.pop(iid, None)
+        if ctx is None:
+            return
+        inst = self.instances.get(iid)
+        if inst is not None:
+            self._finalize_instance_step(iid, inst, ctx)
+
+    def _instance_quiesced(self, iid: int) -> bool:
+        # elastic retirement / recycling must not reap an instance whose
+        # async step is still computing on device
+        return iid not in self._inflight
+
     def step(self) -> bool:
+        """One fully-async cooperative pass (DESIGN.md §12): collect the
+        instances whose dispatched step has finished on device (non-blocking
+        ``ready()`` poll), then dispatch a new fused step on every idle
+        instance. An instance's step may stay inflight across many step()
+        calls — fast instances are never barriered on slow ones (the PR 5/7
+        two-phase step still joined all instances every pass). When nothing
+        is ready and nothing can be dispatched, the oldest inflight step is
+        force-finalized so the pass always makes progress instead of
+        spinning the host."""
         t = self.clock.now()
         if self.fault_injector is not None:    # polled firing (§8)
             self.fault_injector.poll(t)
@@ -329,23 +383,37 @@ class ArrowEngineCluster(RuntimeCore):
         # lists — elastic retirement may remove instances mid-pass
         for dst in list(self.instances):
             self.admit_migrations(dst)
-        # one iteration per instance, two-phase (DESIGN.md §9): dispatch
-        # every instance's fused step before fetching any tokens, so the
-        # device-side steps overlap and each instance pays exactly one
-        # blocking transfer per pass
-        dispatched = []
-        for iid, inst in list(self.instances.items()):
-            dispatched.append((iid, inst, self._dispatch_instance(iid, inst)))
-        for iid, inst, ctx in dispatched:
-            if ctx is None or iid not in self.instances:
+        # collect-ready: finalize any inflight step whose token arrays have
+        # landed; the rest keep computing
+        progressed = 0
+        for iid in list(self._inflight):
+            inst = self.instances.get(iid)
+            if inst is None:                  # died while inflight
+                self._inflight.pop(iid, None)
                 continue
-            self._finalize_instance_step(iid, inst, ctx)
+            if self._inflight[iid][0].ready():
+                ctx = self._inflight.pop(iid)
+                self._finalize_instance_step(iid, inst, ctx)
+                progressed += 1
+        # dispatch-all: every instance without an inflight step launches its
+        # next fused step and returns immediately
+        for iid, inst in list(self.instances.items()):
+            if iid in self._inflight or iid not in self.instances:
+                continue
+            ctx = self._dispatch_instance(iid, inst)
+            if ctx is not None:
+                self._inflight[iid] = ctx
+                progressed += 1
+        if not progressed and self._inflight:
+            # nothing landed, nothing to launch: block on the oldest
+            # inflight step rather than busy-spinning the host
+            self._finalize_now(next(iter(self._inflight)))
         # monitor tick
         now = self.clock.now()
         if now - self._last_tick >= self.sched_cfg.monitor_interval:
             self._last_tick = now
             self.collect_stats(now)
-        return bool(self._live or self._pending)
+        return bool(self._live or self._pending or self._inflight)
 
     def run_until(self, t: float) -> None:
         while self.clock.now() < t:
@@ -358,7 +426,7 @@ class ArrowEngineCluster(RuntimeCore):
         while (self._pending or self._live) and self.clock.now() < limit:
             self.step()
             self._check_undispatchable()   # §8: raise, don't spin to timeout
-            if not self._live and self._pending:
+            if not self._live and not self._inflight and self._pending:
                 time.sleep(max(self._pending[0][0] - self.clock.now(), 0.0))
         return self.report()
 
@@ -413,6 +481,10 @@ class ArrowEngineCluster(RuntimeCore):
                         inst.alloc_slot(rid)
                 except NoFreeSlots:
                     continue                       # stays queued; retry later
+                # sampling params become slot state alongside the fresh KV
+                # (recovery re-runs this path, so a recovered stream keeps
+                # its keys — DESIGN.md §12)
+                inst.set_sampling(rid, handle.req.sampling)
             prompt = self._prompts[rid]
             chunks.append(ChunkWork(rid, start, ln,
                                     prompt[start:start + ln],
@@ -438,19 +510,30 @@ class ArrowEngineCluster(RuntimeCore):
         # this instance's own work: its dispatch span + its blocking fetch
         # (the device compute overlapped the other instances' phases)
         span = (t_disp - t_start) + (t_after - t_fin0)
+        emitted = 0
         for rid, tok in done_tokens.items():
             handle = self._live.get(rid)
             if handle is None:
                 continue
-            self.emit_token(handle, t_after, tok)
-            if inst.local.complete_decode_iteration(rid):
-                self.finish(handle, t_after)
-                if rid not in inst.local.retained:   # kept as a prefix (§7)
-                    inst.drop(rid)
-                self._live.pop(rid, None)
+            spec_round = isinstance(tok, list)
+            toks = tok if spec_round else [tok]
+            if spec_round:
+                self._spec_stats["rounds"] += 1
+                self._spec_stats["drafted"] += inst.speculate
+                self._spec_stats["accepted"] += len(toks) - 1
+            for tk in toks:
+                self.emit_token(handle, t_after, tk)
+                emitted += 1
+                if spec_round:
+                    self._spec_stats["emitted"] += 1
+                if inst.local.complete_decode_iteration(rid):
+                    self.finish(handle, t_after)
+                    if rid not in inst.local.retained:  # kept as prefix (§7)
+                        inst.drop(rid)
+                    self._live.pop(rid, None)
+                    break                 # overshot accepts are discarded
         if done_tokens:
-            self.monitor.record_iteration(iid, t_after, len(done_tokens),
-                                          span)
+            self.monitor.record_iteration(iid, t_after, emitted, span)
         # chunked prefill (§5.4): the fused step ran *every* chunk of the
         # plan; finalize_step reports them in dispatch order
         by_rid = dict(chunk_tokens)

@@ -56,19 +56,34 @@ class ChunkWork:
 
 class PendingStep:
     """A dispatched step whose token array still lives on device. Groups
-    are (chunks, device_tokens) pairs: the first carries the decode batch's
-    per-slot tokens stacked ahead of its chunk tokens. ``fetch`` is the
-    step's one blocking transfer."""
+    are (chunks, device_tokens) pairs; when ``decode_in_group0`` the first
+    group carries the decode batch's per-slot tokens stacked ahead of its
+    chunk tokens. ``spec`` holds a speculative round's packed (B, k+2)
+    ``[a, g_0..g_k]`` array. ``fetch`` is the step's blocking transfer;
+    ``ready`` polls the device without blocking, which is what lets the
+    cluster's async step collect finished instances while the rest keep
+    computing."""
 
     def __init__(self, decode_rids: List[int],
-                 groups: List[Tuple[List[ChunkWork], Any]]):
+                 groups: List[Tuple[List[ChunkWork], Any]],
+                 spec: Any = None, decode_in_group0: bool = True):
         self.decode_rids = decode_rids
         self.groups = groups
+        self.spec = spec
+        self.decode_in_group0 = decode_in_group0
 
-    def fetch(self) -> List[np.ndarray]:
+    def ready(self) -> bool:
+        if self.spec is not None and not self.spec.is_ready():
+            return False
+        return all(arr.is_ready() for _, arr in self.groups)
+
+    def fetch(self) -> Tuple[Optional[np.ndarray], List[np.ndarray]]:
+        spec_np = None if self.spec is None else np.asarray(self.spec)
         parts = [arr for _, arr in self.groups]
+        if not parts:
+            return spec_np, []
         if len(parts) == 1:
-            return [np.asarray(parts[0])]
+            return spec_np, [np.asarray(parts[0])]
         # several padded-width groups: concatenate on device so the step
         # still pays exactly one blocking transfer
         flat = np.asarray(jnp.concatenate(parts))
@@ -76,7 +91,7 @@ class PendingStep:
         for p in parts:
             out.append(flat[i:i + p.shape[0]])
             i += p.shape[0]
-        return out
+        return spec_np, out
 
 
 class _EagerStep:
@@ -87,6 +102,9 @@ class _EagerStep:
         self.decode_out = decode_out
         self.chunk_out = chunk_out
 
+    def ready(self) -> bool:
+        return True
+
 
 def _bucket32(n: int, cap: int) -> int:
     return min(-(-n // 32) * 32, cap)
@@ -96,11 +114,21 @@ class EngineInstance:
     def __init__(self, iid: int, cfg: ModelConfig, params, *,
                  n_slots: int = 8, capacity: int = 256,
                  chunk_tokens: Optional[int] = None,
-                 step_mode: str = "fused"):
+                 step_mode: str = "fused", run_seed: int = 0,
+                 speculate: int = 0, draft_layers: Optional[int] = None):
         assert cfg.family in ("dense",), \
             "real engine path supports dense-family; other families are " \
             "served via the simulator cost model (DESIGN.md §2)"
         assert step_mode in ("fused", "legacy"), step_mode
+        self.run_seed = int(run_seed)
+        self.speculate = int(speculate)
+        self.draft_layers = (int(draft_layers) if draft_layers
+                             else max(1, cfg.n_layers // 2))
+        if self.speculate:
+            assert step_mode == "fused", \
+                "self-speculative decoding requires the fused step path"
+            assert 1 <= self.draft_layers < cfg.n_layers, \
+                "draft_layers must be a strict truncation of the model"
         self.iid = iid
         self.cfg = cfg
         self.params = params
@@ -134,6 +162,49 @@ class EngineInstance:
             raise NoFreeSlots(self.iid, rid)
         return slot
 
+    # ---------------------------------------------------------- sampling
+    def set_sampling(self, rid: int, sp) -> None:
+        """Record a request's ``SamplingParams`` as slot state so it
+        travels with the KV on migration/recovery. None/greedy clears to
+        the default (exact argmax)."""
+        if sp is None or sp.greedy:
+            self.kv.samp_of.pop(rid, None)
+        else:
+            seed = self.run_seed if sp.seed is None else int(sp.seed)
+            self.kv.samp_of[rid] = (float(sp.temperature), float(sp.top_p),
+                                    seed)
+
+    def _samp_of(self, rid: int) -> Tuple[float, float, int]:
+        return self.kv.samp_of.get(rid, (0.0, 1.0, self.run_seed))
+
+    def _slot_samp_arrays(self, decode_rids: List[int]):
+        """Per-slot (temps, top_ps, seeds, rids) for a decode batch; rows
+        whose slot is not decoding this step keep greedy defaults (their
+        sampled token is never read)."""
+        B = self.kv.n_slots
+        temps = np.zeros((B,), np.float32)
+        tops = np.ones((B,), np.float32)
+        seeds = np.zeros((B,), np.int32)
+        rids = np.zeros((B,), np.int32)
+        for rid in decode_rids:
+            s = self.kv.slot_of[rid]
+            t, p, sd = self._samp_of(rid)
+            temps[s], tops[s] = t, p
+            seeds[s] = sd & 0x7FFFFFFF
+            rids[s] = rid & 0x7FFFFFFF
+        return temps, tops, seeds, rids
+
+    def _sample_row(self, row, t: float, p: float, sd: int, rid: int,
+                    pos: int) -> int:
+        """Single-row selection for the legacy (eager) paths, via the same
+        jitted sampler the fused step uses — legacy and fused streams stay
+        bit-identical under sampling, not just under argmax."""
+        return int(fs.sample_tokens(
+            self.cfg, row[None],
+            jnp.asarray([t], jnp.float32), jnp.asarray([p], jnp.float32),
+            jnp.asarray([sd], jnp.int32), jnp.asarray([rid], jnp.int32),
+            jnp.asarray([pos], jnp.int32))[0])
+
     # ----------------------------------------------------------- prefill
     def run_prefill(self, rid: int, prompt: np.ndarray) -> int:
         """Whole-prompt prefill; returns the first output token (o_1).
@@ -145,16 +216,19 @@ class EngineInstance:
         padded = np.zeros((S_pad,), np.int32)
         padded[:S] = prompt
         self.alloc_slot(rid)
+        t, p, sd = self._samp_of(rid)
+        sd &= 0x7FFFFFFF
+        rid_m = rid & 0x7FFFFFFF
         if self.step_mode == "legacy":
             batch = {"tokens": jnp.asarray(padded)[None]}
             logits, cache = self._prefill_fn(self.params, batch)
             self.kv.place(rid, cache["k"][:, 0], cache["v"][:, 0], S)
-            tok = int(jnp.argmax(logits[0, S - 1, :self.cfg.vocab_size]))
+            tok = self._sample_row(logits[0, S - 1], t, p, sd, rid_m, S - 1)
         else:
             s = self.kv.slot_of[rid]
             tok_arr, k, v, pm = fs.prefill_place(
                 self.cfg, self.params, *self.kv.slabs(),
-                jnp.asarray(padded), s, S)
+                jnp.asarray(padded), s, S, t, p, sd, rid_m)
             self.kv.swap(k, v, pm)
             self.kv.len_of[rid] = S
             tok = int(tok_arr)
@@ -212,21 +286,39 @@ class EngineInstance:
         if self.step_mode == "legacy":
             return self._legacy_step(decode_rids, chunks)
         dec_args = None
+        spec_arr = None
+        # speculative round: every active row must fit its k drafts plus
+        # the bonus token; otherwise fall back to plain decode this step
+        use_spec = bool(self.speculate and decode_rids and
+                        all(self.kv.len_of[r] + self.speculate + 1
+                            <= self.capacity for r in decode_rids))
         if decode_rids:
             B = self.kv.n_slots
             tokens = np.zeros((B, 1), np.int32)
             pos = np.zeros((B,), np.int32)
+            active = np.zeros((B,), bool)
             # Inactive-but-occupied slots (e.g. parked awaiting migration)
             # still get a batched dummy write; aim it at the slot's own next
             # position, which any real future decode/chunk overwrites before
-            # attending to it.
+            # attending to it. (The speculative path instead masks parked
+            # rows out via ``active`` and writes them back untouched.)
             for rid, s in self.kv.slot_of.items():
                 pos[s] = min(self.kv.len_of.get(rid, 0), self.capacity - 1)
             for rid in decode_rids:
                 s = self.kv.slot_of[rid]
                 tokens[s, 0] = self.last_token[rid]
                 pos[s] = self.kv.len_of[rid]
-            dec_args = (jnp.asarray(tokens), jnp.asarray(pos))
+                active[s] = True
+            samp = tuple(jnp.asarray(a)
+                         for a in self._slot_samp_arrays(decode_rids))
+            if use_spec:
+                spec_arr, k, v, pm = fs.spec_decode(
+                    self.cfg, self.draft_layers, self.speculate,
+                    self.params, *self.kv.slabs(), jnp.asarray(tokens),
+                    jnp.asarray(pos), *samp, jnp.asarray(active))
+                self.kv.swap(k, v, pm)
+            else:
+                dec_args = (jnp.asarray(tokens), jnp.asarray(pos)) + samp
         groups: List[Tuple[List[ChunkWork], Any]] = []
         for gi, (Sq, group) in enumerate(self._group_chunks(chunks)):
             n = len(group)
@@ -234,13 +326,23 @@ class EngineInstance:
             slots = np.zeros((n,), np.int32)
             offsets = np.zeros((n,), np.int32)
             lens = np.zeros((n,), np.int32)
+            ctemps = np.zeros((n,), np.float32)
+            ctops = np.ones((n,), np.float32)
+            cseeds = np.zeros((n,), np.int32)
+            crids = np.zeros((n,), np.int32)
             for i, cw in enumerate(group):
                 ctoks[i, :cw.length] = cw.tokens
                 slots[i] = self.kv.slot_of[cw.rid]
                 offsets[i] = cw.offset
                 lens[i] = cw.length
+                t, p, sd = self._samp_of(cw.rid)
+                ctemps[i], ctops[i] = t, p
+                cseeds[i] = sd & 0x7FFFFFFF
+                crids[i] = cw.rid & 0x7FFFFFFF
             c_args = (jnp.asarray(ctoks), jnp.asarray(slots),
-                      jnp.asarray(offsets), jnp.asarray(lens))
+                      jnp.asarray(offsets), jnp.asarray(lens),
+                      jnp.asarray(ctemps), jnp.asarray(ctops),
+                      jnp.asarray(cseeds), jnp.asarray(crids))
             if gi == 0 and dec_args is not None:
                 toks, k, v, pm = fs.mixed_step(
                     self.cfg, self.params, *self.kv.slabs(), *dec_args,
@@ -255,23 +357,34 @@ class EngineInstance:
                 self.cfg, self.params, *self.kv.slabs(), *dec_args)
             self.kv.swap(k, v, pm)
             groups.append(([], toks))
-        return PendingStep(list(decode_rids), groups)
+        return PendingStep(list(decode_rids), groups, spec=spec_arr,
+                           decode_in_group0=dec_args is not None)
 
-    def finalize_step(self, pending) -> Tuple[Dict[int, int],
+    def finalize_step(self, pending) -> Tuple[Dict[int, Any],
                                               List[Tuple[int, Optional[int]]]]:
         """Fetch the step's stacked token array (the one blocking transfer)
-        and advance host bookkeeping. Returns (decode rid->token, per-chunk
-        (rid, o_1|None) in dispatch order)."""
+        and advance host bookkeeping. Returns (decode rid->token — or
+        rid->[tokens] for a speculative round — and per-chunk (rid,
+        o_1|None) in dispatch order)."""
         if pending is None:
             return {}, []
         if isinstance(pending, _EagerStep):
             return pending.decode_out, pending.chunk_out
-        decode_out: Dict[int, int] = {}
+        decode_out: Dict[int, Any] = {}
         chunk_out: List[Tuple[int, Optional[int]]] = []
-        arrays = pending.fetch()
+        spec_np, arrays = pending.fetch()
+        if spec_np is not None:
+            for rid in pending.decode_rids:
+                s = self.kv.slot_of[rid]
+                a = int(spec_np[s, 0])
+                toks = [int(x) for x in spec_np[s, 1:a + 2]]
+                self.kv.advance(rid, len(toks))
+                self.last_token[rid] = toks[-1]
+                self.generated[rid].extend(toks)
+                decode_out[rid] = toks
         for gi, ((group, _), a) in enumerate(zip(pending.groups, arrays)):
             base = 0
-            if gi == 0 and pending.decode_rids:
+            if gi == 0 and pending.decode_in_group0 and pending.decode_rids:
                 for rid in pending.decode_rids:
                     s = self.kv.slot_of[rid]
                     tok = int(a[s])
@@ -334,8 +447,10 @@ class EngineInstance:
                                         self.kv.as_model_cache(), batch)
         self.kv.update_from_model_cache(cache)
         out: Dict[int, int] = {}
-        arg = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab_size],
-                                    axis=-1))
+        temps, tops, seeds, rids_arr = self._slot_samp_arrays(rids)
+        arg = np.asarray(fs.sample_tokens(
+            self.cfg, logits[:, 0], jnp.asarray(temps), jnp.asarray(tops),
+            jnp.asarray(seeds), jnp.asarray(rids_arr), jnp.asarray(pos)))
         for rid in rids:
             s = self.kv.slot_of[rid]
             tok = int(arg[s])
@@ -368,7 +483,10 @@ class EngineInstance:
         self.kv.len_of[rid] = offset + ln
         if offset + ln >= cw.total_len:
             self.kv.len_of[rid] = cw.total_len
-            tok = int(jnp.argmax(logits[0, ln - 1, :self.cfg.vocab_size]))
+            t, p, sd = self._samp_of(rid)
+            tok = self._sample_row(logits[0, ln - 1], t, p,
+                                   sd & 0x7FFFFFFF, rid & 0x7FFFFFFF,
+                                   offset + ln - 1)
             self.last_token[rid] = tok
             self.generated[rid] = [tok]
             return tok
@@ -380,9 +498,13 @@ class EngineInstance:
         return k, v, L, self.last_token[rid], self.generated[rid]
 
     def import_kv(self, rid: int, k, v, L: int, last_token: int,
-                  generated: List[int]) -> bool:
+                  generated: List[int], sampling=None) -> bool:
         if self.kv.alloc(rid) is None:
             return False
+        if sampling is not None:
+            # the source slot's sampling state rides along with the KV,
+            # so a migrated stream keeps its key derivation (DESIGN.md §12)
+            self.kv.samp_of[rid] = tuple(sampling)
         # bucket-pad the context so the jitted place sees few shapes
         k = np.asarray(k)
         v = np.asarray(v)

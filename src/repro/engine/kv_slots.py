@@ -16,7 +16,7 @@ device array so a KV export costs a single blocking transfer.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +76,10 @@ class SlotKVCache:
         self.free = list(range(n_slots))
         self.slot_of: Dict[int, int] = {}       # rid -> slot
         self.len_of: Dict[int, int] = {}        # rid -> context length
+        # rid -> (temperature, top_p, seed): sampling state is part of the
+        # slot's serving state so it travels with the KV on migration and
+        # crash recovery (DESIGN.md §12); absent rid ≡ greedy
+        self.samp_of: Dict[int, Tuple[float, float, int]] = {}
 
     # ------------------------------------------------------------- alloc
     def alloc(self, rid: int) -> Optional[int]:
@@ -88,6 +92,7 @@ class SlotKVCache:
     def release(self, rid: int) -> None:
         s = self.slot_of.pop(rid)
         self.len_of.pop(rid, None)
+        self.samp_of.pop(rid, None)
         self.pos_map = _kv_clear_row(self.pos_map, s)
         self.free.append(s)
 
@@ -138,5 +143,5 @@ class SlotKVCache:
         for rid in self.len_of:
             self.len_of[rid] += 0  # lengths advance via advance()
 
-    def advance(self, rid: int) -> None:
-        self.len_of[rid] += 1
+    def advance(self, rid: int, n: int = 1) -> None:
+        self.len_of[rid] += n

@@ -25,7 +25,7 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.autoscaler import AutoScalerConfig
 from repro.core.faults import FaultPlan
 from repro.core.policies import POLICIES
-from repro.core.request import Request
+from repro.core.request import Request, SamplingParams
 from repro.core.serving import ServeReport, ServingSystem, replay_trace
 from repro.core.slo import SLO
 
@@ -37,6 +37,23 @@ def synth_requests(n: int, gap: float, vocab: int, seed: int = 0
                     input_len=int(rng.integers(8, 64)),
                     output_len=int(rng.integers(2, 16)))
             for i in range(n)]
+
+
+def sampling_params(args) -> Optional[SamplingParams]:
+    """Build the per-request SamplingParams from the CLI (DESIGN.md §12);
+    None (the default temperature 0) keeps exact greedy argmax."""
+    if args.temperature <= 0.0:
+        return None
+    return SamplingParams(temperature=args.temperature, top_p=args.top_p,
+                          seed=None)
+
+
+def apply_sampling(trace: List[Request], args) -> List[Request]:
+    sp = sampling_params(args)
+    if sp is not None:
+        for r in trace:
+            r.sampling = sp
+    return trace
 
 
 def run_and_report(system: ServingSystem, trace: List[Request], *,
@@ -98,7 +115,8 @@ def run_engine(args) -> ServeReport:
                                  n_prefill=max(args.instances // 2, 1),
                                  n_slots=8, capacity=256,
                                  slo=SLO(args.ttft, args.tpot),
-                                 policy=args.policy,
+                                 policy=args.policy, seed=args.seed,
+                                 speculate=args.speculate,
                                  autoscaler_cfg=autoscaler_cfg(args),
                                  prefix_cache=args.prefix_cache == "on",
                                  fault_plan=fault_plan(args),
@@ -111,6 +129,7 @@ def run_engine(args) -> ServeReport:
                            duration=args.duration)
     else:
         trace = synth_requests(args.requests, args.gap, cfg.vocab_size)
+    trace = apply_sampling(trace, args)
     return run_and_report(cluster, trace, tier=args.tier,
                           timeout=args.timeout,
                           label=f"serve-engine {args.policy}")
@@ -127,12 +146,14 @@ def run_sim(args) -> ServeReport:
     sim = Simulator(cfg, n_instances=args.instances,
                     n_prefill=max(args.instances // 2, 1),
                     policy=args.policy, slo=SLO(p.slo_ttft, p.slo_tpot),
+                    seed=args.seed, speculate=args.speculate,
                     autoscaler_cfg=autoscaler_cfg(args),
                     prefix_cache=args.prefix_cache == "on",
                     fault_plan=fault_plan(args),
                     tenants=tenant_registry(args),
                     admission=args.admission == "on",
                     deflection=deflection_cfg(args))
+    trace = apply_sampling(trace, args)
     # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
     # time and must cover the whole trace
     return run_and_report(sim, trace, tier=args.tier,
@@ -258,6 +279,30 @@ def build_parser() -> argparse.ArgumentParser:
                          "victim's mixed-chunk budget (default 0.25; 0 "
                          "disables deflection — byte-identical to "
                          "arrow_elastic). Implies --deflection on")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (DESIGN.md §12); 0 = exact "
+                         "greedy argmax (the default). Sampled streams are "
+                         "replayable: same trace + --seed => bit-identical "
+                         "tokens, across runs, step modes, migration and "
+                         "crash recovery")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (only with "
+                         "--temperature > 0): sample from the smallest "
+                         "prefix of the sorted distribution holding at "
+                         "least this probability")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="run seed recorded in the report; per-request "
+                         "sampling keys derive statelessly from (seed, rid, "
+                         "position), so replaying a trace with the same "
+                         "seed reproduces every sampled stream bit-for-bit")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="self-speculative decoding (DESIGN.md §12): draft "
+                         "k tokens per round with the truncated-layer "
+                         "model, verify in one full pass, emit the longest "
+                         "agreeing prefix + 1 — streams stay bit-identical "
+                         "to non-speculative decoding; 0 disables. Engine "
+                         "mode runs it in the fused step; sim mode models "
+                         "the round cost and acceptance analytically")
     ap.add_argument("--list-traces", action="store_true",
                     help="print the trace-preset table and exit")
     ap.add_argument("--list-policies", action="store_true",

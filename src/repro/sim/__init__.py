@@ -1,3 +1,4 @@
-from repro.sim.cost_model import CostModel, InstanceProfile  # noqa: F401
+from repro.sim.cost_model import (CostModel, InstanceProfile,  # noqa: F401
+                                  SpeculationModel)
 from repro.sim.policies import POLICIES  # noqa: F401
 from repro.sim.simulator import SimResult, Simulator  # noqa: F401

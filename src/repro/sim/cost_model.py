@@ -25,6 +25,39 @@ ICI_BW = 50e9                # bytes/s/link
 
 
 @dataclass(frozen=True)
+class SpeculationModel:
+    """Analytic model of self-speculative decoding (DESIGN.md §12) for the
+    simulator's cost model: ``k`` drafts per round through the first
+    ``draft_frac`` of the layer stack, verified by one full pass over the
+    ``k + 1`` candidate positions, with per-draft acceptance probability
+    ``accept`` (independent-trial approximation of the paper-style
+    acceptance curve)."""
+
+    k: int = 4
+    draft_frac: float = 0.5       # fraction of layers used for drafting
+    accept: float = 0.8           # P(draft j accepted | j-1 accepted)
+
+    @property
+    def expected_emitted(self) -> float:
+        """E[tokens emitted per round] = sum_{i=0..k} accept^i — the
+        geometric-series acceptance of the longest agreeing prefix, plus
+        the always-emitted verify token."""
+        b = min(max(self.accept, 0.0), 1.0)
+        if b >= 1.0:
+            return float(self.k + 1)
+        return (1.0 - b ** (self.k + 1)) / (1.0 - b)
+
+    @property
+    def cost_factor(self) -> float:
+        """Per-round *compute* relative to one sequential decode step: k
+        truncated-layer draft steps plus a (k+1)-wide full verify pass.
+        (The memory-bound round cost is lower — weights are read once per
+        pass, not per position — which is where the modeled speedup comes
+        from; see CostModel.spec_iteration_time.)"""
+        return self.draft_frac * self.k + (self.k + 1)
+
+
+@dataclass(frozen=True)
 class InstanceProfile:
     """One serving instance = a TP slice of `chips` chips."""
     chips: int = 4
@@ -127,6 +160,26 @@ class CostModel:
     def prefill_time(self, input_len: int) -> float:
         """Whole-prompt prefill (used for profiling the TTFT predictor)."""
         return self.iteration_time([(0, input_len)], [])
+
+    def spec_iteration_time(self, decode_ctx: Sequence[int],
+                            spec: "SpeculationModel") -> float:
+        """One self-speculative decode round (DESIGN.md §12): k truncated
+        draft steps (``draft_frac`` of the layer stack → that fraction of
+        the flops, KV traffic and weight bytes, weights re-read per step)
+        plus one full verify pass over the k+1 candidate positions (flops
+        scale with positions; KV and weights are read once). Emits
+        ``spec.expected_emitted`` tokens on average, so per-token cost
+        falls in the memory-bound regime — the speedup Eq.(1)/(2) and the
+        autoscaler observe through shorter decode iterations."""
+        if not decode_ctx:
+            return 0.0
+        fd, md = self.decode_tokens(decode_ctx)
+        df = spec.draft_frac
+        flops = spec.k * df * fd + (spec.k + 1) * fd
+        bytes_ = spec.k * df * (md + self.param_bytes) \
+            + md + self.param_bytes
+        return max(flops / self.prof.flops, bytes_ / self.prof.bw) \
+            + self.prof.overhead
 
     # ------------------------------------------------------------ capacity
     def kv_capacity_tokens(self) -> int:

@@ -32,7 +32,8 @@ from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
                                 TokenCallback)
 from repro.core.slo import SLO, SchedulerConfig
 from repro.core.ttft_predictor import TTFTPredictor
-from repro.sim.cost_model import CostModel, InstanceProfile
+from repro.sim.cost_model import (CostModel, InstanceProfile,
+                                  SpeculationModel)
 
 
 @dataclass
@@ -67,7 +68,9 @@ class Simulator(RuntimeCore):
                  token_budget: int = 8192, flip_latency: float = 0.0,
                  autoscaler_cfg=None, prefix_cache: bool = False,
                  fault_plan=None, tenants=None, admission=False,
-                 deflection=None):
+                 deflection=None, speculate: int = 0,
+                 spec_accept: float = 0.8, spec_draft_frac: float = 0.5,
+                 seed: int = 0):
         """``profiles`` (iid -> InstanceProfile) enables heterogeneous
         clusters (paper §8): per-instance cost models + a per-instance-fitted
         TTFT predictor; ``profile`` is the homogeneous default (elastic
@@ -79,10 +82,20 @@ class Simulator(RuntimeCore):
         ``AdmissionConfig``) arms the watermark admission controller
         (DESIGN.md §10). ``deflection`` (a ``DeflectionConfig``) tunes
         cross-pool prefill deflection under a deflective policy
-        (``arrow_deflect``, DESIGN.md §11)."""
+        (``arrow_deflect``, DESIGN.md §11). ``speculate=k`` models
+        self-speculative decoding (DESIGN.md §12): decode iterations cost
+        ``CostModel.spec_iteration_time`` and emit multiple tokens per
+        round with per-draft acceptance ``spec_accept``."""
         self.cfg = cfg
         self._spawn_profile = profile
         self._token_budget = token_budget
+        self.spec: Optional[SpeculationModel] = (
+            SpeculationModel(k=speculate, draft_frac=spec_draft_frac,
+                             accept=spec_accept) if speculate else None)
+        # deterministic error-diffusion residual for integer per-round
+        # emission (rid -> fractional tokens owed) — the modeled stream
+        # length is exact in expectation and replayable
+        self._spec_residual: Dict[int, float] = {}
         ids = list(range(n_instances))
         self.costs: Dict[int, CostModel] = {
             i: CostModel(cfg, (profiles or {}).get(i, profile))
@@ -110,7 +123,7 @@ class Simulator(RuntimeCore):
                            clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg,
                            prefix_cache=prefix_cache, fault_plan=fault_plan,
                            tenants=tenants, admission=admission,
-                           deflection=deflection)
+                           deflection=deflection, run_seed=seed)
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
@@ -310,12 +323,35 @@ class Simulator(RuntimeCore):
             return
         chunks = [(start, ln) for _, start, ln in plan.prefill_chunks]
         ctx = [loc.decode_running[r].context_len for r in plan.decode_rids]
-        dur = self.costs[iid].iteration_time(chunks, ctx) \
-            * self.slow_factor(iid, self._now)       # injected lag (§8)
+        spec_round = bool(self.spec is not None and ctx)
+        if spec_round:
+            # mirrors the engine's speculative step structure: one
+            # spec_decode call for the decode batch plus a *separate*
+            # chunks call (the fused mixed step doesn't speculate), so the
+            # per-call overhead is paid twice exactly as on the engine
+            dur = self.costs[iid].spec_iteration_time(ctx, self.spec)
+            if chunks:
+                dur += self.costs[iid].iteration_time(chunks, [])
+        else:
+            dur = self.costs[iid].iteration_time(chunks, ctx)
+        dur *= self.slow_factor(iid, self._now)      # injected lag (§8)
         self._busy[iid] = True
-        self._push(self._now + dur, self._on_iteration_done, iid, plan, dur)
+        self._push(self._now + dur, self._on_iteration_done, iid, plan, dur,
+                   spec_round)
 
-    def _on_iteration_done(self, iid: int, plan, dur: float) -> None:
+    def _spec_round_tokens(self, rid: int) -> int:
+        """Integer tokens emitted by ``rid``'s speculative round: the
+        expected emission with per-rid error diffusion, so long streams hit
+        the modeled rate exactly while every round emits at least the
+        verify token and at most k+1."""
+        spec = self.spec
+        r = self._spec_residual.get(rid, 0.0) + spec.expected_emitted
+        n = int(min(max(int(r), 1), spec.k + 1))
+        self._spec_residual[rid] = r - n
+        return n
+
+    def _on_iteration_done(self, iid: int, plan, dur: float,
+                           spec_round: bool = False) -> None:
         if self._is_dead(iid):            # crashed mid-iteration (§8)
             return
         loc = self.locals[iid]
@@ -326,10 +362,27 @@ class Simulator(RuntimeCore):
             if rid not in loc.decode_running:
                 continue
             handle = self.handles[rid]
-            self.emit_token(handle, now)
-            emitted += 1
-            if loc.complete_decode_iteration(rid):
-                self.finish(handle, now)
+            if not spec_round:
+                self.emit_token(handle, now)
+                emitted += 1
+                if loc.complete_decode_iteration(rid):
+                    self.finish(handle, now)
+                continue
+            n = self._spec_round_tokens(rid)
+            self._spec_stats["rounds"] += 1
+            self._spec_stats["drafted"] += self.spec.k
+            self._spec_stats["accepted"] += n - 1
+            for i in range(n):
+                # space the round's tokens inside the iteration so virtual
+                # token timestamps stay strictly ordered per request (the
+                # stream invariant the property tests assert)
+                t_i = now - dur + dur * (i + 1) / n
+                self.emit_token(handle, t_i)
+                emitted += 1
+                self._spec_stats["emitted"] += 1
+                if loc.complete_decode_iteration(rid):
+                    self.finish(handle, t_i)
+                    break                 # overshot accepts are discarded
         self.monitor.record_iteration(iid, now, emitted, dur)
         # prefill chunks
         for rid, start, ln in plan.prefill_chunks:

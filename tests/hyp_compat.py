@@ -5,9 +5,20 @@ the same module still collect and run.
 
 Usage in a test module:
 
-    from hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+    from hyp_compat import HAVE_HYPOTHESIS, corpus_backed, given, settings, st
+
+Skip-count accounting: a ``@given`` test that also replays a checked-in
+regression corpus under plain pytest is not *lost* coverage when hypothesis
+is absent — only the random-drawing front-end is. ``@corpus_backed(path)``
+(stacked above ``@given``) rewrites the shim's skip reason to
+``covered by corpus replay: <file>`` so `pytest -rs` output distinguishes
+corpus-backed skips from genuinely skipped properties, and CI can assert the
+corpus files it relies on are present and non-empty.
 """
 import pytest
+
+GENUINE_SKIP = "hypothesis not installed"
+CORPUS_SKIP = "hypothesis not installed; covered by corpus replay: {name}"
 
 try:
     import hypothesis.strategies as st
@@ -26,7 +37,28 @@ except ImportError:                                    # pragma: no cover
     st = _StubStrategies()
 
     def given(*a, **k):
-        return pytest.mark.skip(reason="hypothesis not installed")
+        return pytest.mark.skip(reason=GENUINE_SKIP)
 
     def settings(*a, **k):
         return lambda fn: fn
+
+
+def corpus_backed(corpus_path):
+    """Tag a ``@given`` property test whose schedules also replay from the
+    checked-in corpus at ``corpus_path``. No-op when hypothesis is present;
+    with the shim active it replaces the generic skip reason so the skip is
+    accounted as corpus-covered rather than lost. The corpus file must
+    exist and be non-empty — a dangling tag would silently claim coverage
+    that no replay test provides."""
+    if HAVE_HYPOTHESIS:
+        return lambda fn: fn
+
+    def wrap(fn):
+        assert corpus_path.exists() and corpus_path.stat().st_size > 2, \
+            f"corpus_backed points at empty/missing corpus {corpus_path}"
+        fn.pytestmark = [m for m in getattr(fn, "pytestmark", [])
+                         if m.name != "skip"]
+        fn.pytestmark.append(pytest.mark.skip(
+            reason=CORPUS_SKIP.format(name=corpus_path.name)))
+        return fn
+    return wrap
