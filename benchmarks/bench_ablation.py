@@ -6,6 +6,7 @@ import argparse
 
 from benchmarks.common import Timer, emit, save_json
 from repro.configs import get_config
+from repro.core.serving import replay_trace
 from repro.core.slo import SLO
 from repro.sim import InstanceProfile, Simulator
 from repro.traces import TRACE_PRESETS, load_trace
@@ -36,7 +37,8 @@ def main(argv=None) -> None:
                     sim = Simulator(cfg, n_instances=8, n_prefill=4,
                                     policy=strat, slo=SLO(p.slo_ttft, p.slo_tpot),
                                     profile=InstanceProfile(chips=4))
-                    res = sim.run(trace)
+                    replay_trace(sim, trace)
+                    res = sim.drain()
                     curve.append({"rate_scale": rate,
                                   "req_s": len(trace) / args.duration,
                                   "attainment": res.attainment,

@@ -7,6 +7,7 @@ import argparse
 
 from benchmarks.common import Timer, emit, save_json
 from repro.configs import get_config
+from repro.core.serving import replay_trace
 from repro.core.slo import SLO
 from repro.sim import Simulator
 from repro.traces import TRACE_PRESETS, load_trace
@@ -29,7 +30,8 @@ def main(argv=None) -> None:
         with Timer() as t:
             sim = Simulator(cfg, n_instances=8, n_prefill=4, policy="arrow",
                             slo=SLO(p.slo_ttft, p.slo_tpot), flip_latency=lat)
-            res = sim.run(trace)
+            replay_trace(sim, trace)
+            res = sim.drain()
         out[lat] = {"attainment": res.attainment, "flips": res.flips}
         emit(f"flip_latency.{lat:g}s", t.us,
              f"attainment={res.attainment:.3f};flips={res.flips}")

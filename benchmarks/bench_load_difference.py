@@ -5,6 +5,7 @@ from __future__ import annotations
 from benchmarks.common import Timer, emit, save_json
 from repro.configs import get_config
 from repro.core.request import Request
+from repro.core.serving import replay_trace
 from repro.core.slo import SLO, SchedulerConfig
 from repro.sim import Simulator
 
@@ -31,7 +32,8 @@ def main() -> None:
 
     sim.policy.on_monitor_tick = tick
     with Timer() as t:
-        sim.run(burst)
+        replay_trace(sim, burst)
+        sim.drain()
     tp = max(series, key=lambda s: s["prefill_queued"])["t"]
     td = max(series, key=lambda s: s["decode_running"])["t"]
     emit("load_difference", t.us,

@@ -1,0 +1,167 @@
+"""SSM/recurrent serving economics on the real engine (DESIGN.md §13).
+
+Arrow's scheduling math (§5.3–§5.5) assumes attention KV that grows O(L)
+with context: migration cost, prefix-cache value and the pressure signals
+all scale with tokens. Constant-state architectures (Mamba-2 ssd, the
+RecurrentGemma conv/RG-LRU recurrence) flip those economics — the decode
+state is a fixed-size summary, so a migration moves the same bytes whether
+the request holds 12 or 5000 context tokens.
+
+This bench serves the spike trace through the real engine (reduced smoke
+configs, Pallas kernels on the decode hot path — ``ssd_scan``/``rglru_scan``
+in interpret mode on CPU) and checks the claims end to end:
+
+  * **O(1) migration** — every entry in ``RuntimeCore.migration_log`` for
+    the ssm arch carries identical ``bytes`` across differing
+    ``ctx_tokens`` (asserted); the dense run's bytes grow proportionally
+    with context (asserted), which is the economics gap the cost model
+    encodes (``CostModel.migration_bytes``).
+  * **State transfer is exact** — sampled streams are bit-identical between
+    a ``colocated`` run (no migration) and an ``arrow`` run where every
+    decode migrates prefill → decode pool (asserted): the exported/imported
+    recurrent state reproduces the same logits, token for token.
+  * **Replay** — re-running the migrating configuration with the same seed
+    reproduces every sampled stream bit-for-bit (asserted).
+  * **arrow_elastic headline** — the ssm arch serves the spike trace under
+    the elastic policy (scale-ups share the module-level jitted step, so a
+    spawned instance pays no recompile).
+
+CSV contract: name,us_per_call,derived. Full curves go to
+results/ssm.json.
+
+  PYTHONPATH=src python benchmarks/bench_ssm.py
+  PYTHONPATH=src python benchmarks/bench_ssm.py --smoke   # CI docs job
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+if __package__ in (None, ""):       # `python benchmarks/bench_ssm.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import Timer, emit, save_json
+from repro.configs import get_smoke_config
+from repro.core.autoscaler import AutoScalerConfig
+from repro.core.request import SamplingParams
+from repro.core.serving import replay_trace
+from repro.core.slo import SLO
+from repro.traces import load_trace
+
+SSM_ARCH = "mamba2-370m"
+DENSE_ARCH = "qwen3-1.7b"
+
+
+def serve(arch: str, policy: str, *, rate: float, duration: float,
+          seed: int = 0, n_instances: int = 2, autoscaler_cfg=None):
+    """One engine run over the spike trace: returns (report, migration_log,
+    {rid: token tuple}). Sampled decoding (temperature 0.7) so the
+    bit-identity checks cover the replayable-sampling path, not just greedy
+    argmax."""
+    from repro.engine import ArrowEngineCluster
+    cfg = get_smoke_config(arch).replace(attn_impl="pallas")
+    cluster = ArrowEngineCluster(
+        cfg, n_instances=n_instances, n_prefill=max(n_instances // 2, 1),
+        n_slots=8, capacity=160, slo=SLO(5.0, 2.0), policy=policy,
+        seed=seed, autoscaler_cfg=autoscaler_cfg)
+    trace = load_trace("spike", rate_scale=rate, seed=0, duration=duration)
+    for r in trace:
+        r.sampling = SamplingParams(temperature=0.7, top_p=0.9, seed=None)
+    replay_trace(cluster, trace)
+    report = cluster.drain(timeout=600)
+    streams = {h.req.rid: tuple(h.tokens)
+               for h in cluster.handles.values()}
+    return report, list(cluster.migration_log), streams
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate", type=float, default=1.5)
+    ap.add_argument("--duration", type=float, default=20.0,
+                    help="trace duration in seconds (wall-clock: the engine "
+                         "replays arrivals in real time)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace (CI docs job)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.duration = min(args.duration, 6.0)
+
+    out = {}
+
+    # ---- forced migration vs no migration: streams must be bit-identical.
+    # Under 'arrow' with a 1-prefill/1-decode split every request's decode
+    # migrates (real export_state/import_state); 'colocated' never migrates.
+    with Timer() as t:
+        rep_m, log_m, streams_m = serve(SSM_ARCH, "arrow", rate=args.rate,
+                                        duration=args.duration)
+    assert log_m, "arrow run produced no migrations — bench misconfigured"
+    assert streams_m and all(len(s) > 0 for s in streams_m.values())
+    rep_c, log_c, streams_c = serve(SSM_ARCH, "colocated", rate=args.rate,
+                                    duration=args.duration)
+    assert not log_c, "colocated run must not migrate"
+    assert streams_m == streams_c, \
+        "sampled streams diverged across forced migration"
+    emit("ssm.spike.forced_migration", t.us,
+         f"migrations={len(log_m)};identical=True;"
+         f"finished={len(streams_m)}")
+
+    # ---- O(1) migration bytes in context length (the §13 economics)
+    ssm_bytes = {m["bytes"] for m in log_m}
+    ssm_ctx = {m["ctx_tokens"] for m in log_m}
+    assert len(ssm_bytes) == 1, \
+        f"ssm migration bytes must be constant, got {sorted(ssm_bytes)}"
+    assert len(ssm_ctx) > 1, \
+        "trace produced uniform context lengths; O(1) claim untested"
+    emit("ssm.spike.migration_bytes", 0.0,
+         f"bytes={next(iter(ssm_bytes))};"
+         f"ctx_min={min(ssm_ctx)};ctx_max={max(ssm_ctx)};constant=True")
+
+    # ---- replay: same trace + seed => bit-identical sampled streams
+    _, _, streams_r = serve(SSM_ARCH, "arrow", rate=args.rate,
+                            duration=args.duration)
+    assert streams_r == streams_m, "replay with same seed diverged"
+    emit("ssm.spike.replay", 0.0, "identical=True")
+
+    # ---- dense contrast: bytes grow proportionally with context
+    _, log_d, _ = serve(DENSE_ARCH, "arrow", rate=args.rate,
+                        duration=args.duration)
+    assert log_d, "dense arrow run produced no migrations"
+    per_tok = {m["bytes"] / m["ctx_tokens"] for m in log_d}
+    assert max(per_tok) - min(per_tok) < 1e-9, \
+        "dense migration bytes must be proportional to context tokens"
+    emit("dense.spike.migration_bytes", 0.0,
+         f"bytes_per_token={next(iter(per_tok)):.0f};"
+         f"ctx_min={min(m['ctx_tokens'] for m in log_d)};"
+         f"ctx_max={max(m['ctx_tokens'] for m in log_d)};linear=True")
+
+    # ---- arrow_elastic headline on the spike trace
+    with Timer() as t:
+        rep_e, log_e, streams_e = serve(
+            SSM_ARCH, "arrow_elastic", rate=args.rate,
+            duration=args.duration,
+            autoscaler_cfg=AutoScalerConfig(min_instances=1,
+                                            max_instances=3))
+    emit("ssm.spike.arrow_elastic", t.us,
+         f"attainment={rep_e.attainment:.3f};finished={len(streams_e)};"
+         f"migrations={len(log_e)};"
+         f"ups={rep_e.scaling.get('scale_ups', 0)};"
+         f"downs={rep_e.scaling.get('scale_downs', 0)}")
+
+    out["forced_migration"] = {"migrations": len(log_m),
+                               "finished": len(streams_m),
+                               "identical": True}
+    out["migration_bytes"] = {
+        "ssm": {"bytes": next(iter(ssm_bytes)),
+                "ctx": sorted(ssm_ctx)},
+        "dense": {"bytes_per_token": next(iter(per_tok)),
+                  "ctx": sorted(m["ctx_tokens"] for m in log_d)}}
+    out["elastic"] = {"attainment": rep_e.attainment,
+                      "migrations": len(log_e),
+                      "scaling": rep_e.scaling}
+    if not args.smoke:
+        save_json("ssm", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   (ours)   bench_faults            goodput under crashes vs no-recovery (DESIGN §8)
   (ours)   bench_engine_step       fused+donated engine step vs per-rid path (DESIGN §9)
   (ours)   bench_speculative       self-speculative decode vs sequential (DESIGN §12)
+  (ours)   bench_ssm               SSM/recurrent decode-state serving economics (DESIGN §13)
   (ours)   bench_tenants           credit admission vs FIFO under a flooder (DESIGN §10)
   (ours)   bench_kernels           Pallas kernels (interpret) vs jnp oracle
   (ours)   roofline                terms from the dry-run records, if present
@@ -31,7 +32,7 @@ def main() -> None:
                             bench_flip_latency, bench_kernels,
                             bench_load_difference, bench_prefix,
                             bench_scalability, bench_speculative,
-                            bench_tenants, bench_trace_stats)
+                            bench_ssm, bench_tenants, bench_trace_stats)
     print("name,us_per_call,derived")
     bench_trace_stats.main()
     bench_load_difference.main()
@@ -48,6 +49,7 @@ def main() -> None:
     bench_tenants.main([])
     bench_engine_step.main([])
     bench_speculative.main(["--smoke"] if fast else [])
+    bench_ssm.main(["--smoke"] if fast else [])
     bench_kernels.main()
     try:
         from benchmarks import roofline

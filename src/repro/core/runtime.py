@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import enum
 from collections import Counter, deque
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.autoscaler import AutoScaler, AutoScalerConfig
 from repro.core.clock import Clock
@@ -86,6 +86,7 @@ class RuntimeCore(ServingSystem):
                       admission=False,
                       deflection: Optional[DeflectionConfig] = None,
                       run_seed: int = 0,
+                      prefix_reuse: str = "block",
                       ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
@@ -121,6 +122,11 @@ class RuntimeCore(ServingSystem):
         # transfer touching the dead instance (DESIGN.md §8):
         self._transfers: Dict[int, Tuple[int, int, int]] = {}  # rid->(s,d,kv)
         self._migration_kv: Dict[int, int] = {}     # rid -> kv while MIGRATING
+        # completed transfers with their real wire size (DESIGN.md §13):
+        # dense KV grows with context; constant-state families move O(1)
+        # bytes regardless of context length. Diagnostic only — not a
+        # ServeReport summary field.
+        self.migration_log: List[Dict[str, int]] = []
         self._recent_finish: deque = deque(maxlen=128)  # SLO window
         # ---- replayable sampling + self-speculative decoding (§12)
         self.run_seed = run_seed
@@ -144,7 +150,11 @@ class RuntimeCore(ServingSystem):
         # instance queue (both retried through the backend's _arrival_due)
         self._gated: Dict[int, list] = {}       # parent rid -> waiting rids
         self._unplaced: deque = deque()         # rids awaiting any ACTIVE
-        # ---- prefix-aware KV reuse (DESIGN.md §7)
+        # ---- prefix-aware KV reuse (DESIGN.md §7; §13 for the capability)
+        # "block": per-token KV — any block-aligned prefix is reusable.
+        # "exact": constant-size recurrent state — only a full-stream match
+        # (the state is a lossy summary with no per-position truncation).
+        self.prefix_reuse = prefix_reuse
         self.prefix_mgr: Optional[PrefixCacheManager] = None
         self._prefix_src: Dict[int, tuple] = {}  # rid -> (iid, src_rid, len)
         # predictor-derived timing totals (the manager owns the token/hit
@@ -403,6 +413,22 @@ class RuntimeCore(ServingSystem):
         cached = 0
         if hit is not None and self.prefix_mgr is not None:
             cached = min(hit.cached_len, req.input_len - 1)
+            if cached > 0 and self.prefix_reuse == "exact":
+                # Constant-state architectures (§13): the recurrent state
+                # summarizes the source's *whole* stream — there is no
+                # per-position KV to truncate, so reuse degrades to exact
+                # full-stream matches. The hit must cover the entry's entire
+                # key chain (a partial match is useless), and the query must
+                # strictly extend the full resident stream (lineage chains
+                # guarantee the sub-block tail: a follow-up turn literally
+                # extends the session stream).
+                ent = self.prefix_mgr.index.entries.get((hit.iid, hit.rid))
+                if (ent is None
+                        or hit.cached_len < len(ent.keys) * self.prefix_mgr.block
+                        or ent.kv_tokens > req.input_len - 1):
+                    cached = 0
+                else:
+                    cached = ent.kv_tokens
             if cached > 0 and iid == hit.iid:
                 self.prefix_mgr.record_hit(PrefixHit(hit.iid, hit.rid,
                                                      cached))
@@ -604,6 +630,14 @@ class RuntimeCore(ServingSystem):
         — for retire-triggered re-migrations — the retiring decode holder."""
         return self._migrating_from.get(
             rid, self.handles[rid].req.prefill_instance)
+
+    def _record_migration(self, rid: int, ctx_tokens: int,
+                          nbytes: int) -> None:
+        """Log a state transfer's real wire size (§13). Backends call this
+        with the actual payload bytes — the engine sums the exported arrays'
+        ``nbytes``, the simulator asks ``CostModel.migration_bytes``."""
+        self.migration_log.append(
+            {"rid": rid, "ctx_tokens": int(ctx_tokens), "bytes": int(nbytes)})
 
     def complete_migration(self, rid: int, dst: int, kv: int, rem: int,
                            now: float) -> None:

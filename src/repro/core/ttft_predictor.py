@@ -24,6 +24,13 @@ class TTFTPredictor:
         # least squares on [L², L, 1]; clip to non-negative prediction later
         A = np.stack([L * L, L, np.ones_like(L)], axis=1)
         coeffs, *_ = np.linalg.lstsq(A, t, rcond=None)
+        if coeffs[0] < 0.0:
+            # noisy / short-context samples can fit a < 0, which makes
+            # predict_chunk non-monotone (suffix chunks silently clamp to 0
+            # and corrupt prefix-affinity and deflection charging) — prefill
+            # compute can only be superlinear, so refit linear instead
+            lin, *_ = np.linalg.lstsq(A[:, 1:], t, rcond=None)
+            coeffs = np.concatenate([[0.0], lin])
         return cls(coeffs)
 
     def predict(self, input_len: int) -> float:
@@ -48,6 +55,10 @@ class PerInstancePredictor:
 
     @classmethod
     def fit_per_instance(cls, samples_by_iid) -> "PerInstancePredictor":
+        if not samples_by_iid:
+            raise ValueError(
+                "fit_per_instance needs profiling samples for at least one "
+                "instance; got an empty samples_by_iid mapping")
         fitted = {iid: TTFTPredictor.fit(s) for iid, s in samples_by_iid.items()}
         any_pred = next(iter(fitted.values()))
         obj = cls(any_pred)

@@ -92,7 +92,9 @@ class ArrowEngineCluster(RuntimeCore):
                            autoscaler_cfg=autoscaler_cfg,
                            prefix_cache=prefix_cache, fault_plan=fault_plan,
                            tenants=tenants, admission=admission,
-                           deflection=deflection, run_seed=seed)
+                           deflection=deflection, run_seed=seed,
+                           prefix_reuse=next(iter(
+                               self.instances.values())).kv.prefix_reuse)
         for i in self.instances:
             self._arm_deflect(i)     # §11 micro-batch knob (no-op if unarmed)
         self._pending: list = []                # heap: (arrival, rid)
@@ -131,23 +133,27 @@ class ArrowEngineCluster(RuntimeCore):
         return self.instances[iid].local
 
     def _begin_transfer(self, rid: int, dst: int, kv: int, rem: int) -> bool:
-        # real KV movement between instances (synchronous array export/import);
-        # both endpoints must first land any inflight async step — the source
-        # so the exported KV includes every token already emitted, the
-        # destination so its donated slabs aren't mid-flight
+        # real decode-state movement between instances (synchronous array
+        # export/import); both endpoints must first land any inflight async
+        # step — the source so the exported state includes every token
+        # already emitted, the destination so its donated slabs aren't
+        # mid-flight
         src = self._kv_source(rid)
         self._finalize_now(src)
         self._finalize_now(dst)
         samp = self.instances[src].kv.samp_of.get(rid)
-        k, v, L, last, gen = self.instances[src].export_kv(rid)
-        if not self.instances[dst].import_kv(rid, k, v, L, last, gen,
-                                             sampling=samp):
+        payload, L, last, gen = self.instances[src].export_state(rid)
+        if not self.instances[dst].import_state(rid, payload, L, last, gen,
+                                                sampling=samp):
             # no free slot: cached prefixes are reclaimable capacity (§7)
             if not (self.prefix_mgr is not None
                     and self.prefix_mgr.evict_one(dst) is not None
-                    and self.instances[dst].import_kv(rid, k, v, L, last,
-                                                      gen, sampling=samp)):
+                    and self.instances[dst].import_state(rid, payload, L, last,
+                                                         gen, sampling=samp)):
                 return False                    # genuinely full: retry later
+        # the wire cost is the payload's actual bytes — O(1) in context for
+        # constant-state families, tokens × per-token KV for dense (§13)
+        self._record_migration(rid, L, sum(int(p.nbytes) for p in payload))
         self.complete_migration(rid, dst, kv, rem, self.clock.now())
         return True
 

@@ -28,12 +28,14 @@ concurrent instances' steps overlap.
 from __future__ import annotations
 
 from functools import partial
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models import dense
+from repro.models import dense, hybrid
+from repro.models import ssm as ssm_models
 
 
 # ------------------------------------------------------------- sampling
@@ -194,6 +196,198 @@ def prefill_place(cfg, params, k, v, pos_map, tokens, slot, length, temp,
     tok = _sample_one(cfg, lax.dynamic_index_in_dim(
         logits[0], last, 0, keepdims=False), temp, top_p, seed, rid, last)
     return tok, k, v, pos_map
+
+
+# ------------------------------------------------ ssm (Mamba-2) steps
+#
+# Same calling convention as the dense entries but over the {"conv","ssm"}
+# decode-state slabs (DESIGN.md §13). Two differences forced by recurrence:
+# the decode batch carries an explicit ``active`` mask (a recurrent update
+# is irreversible, so parked slots keep their old state instead of the
+# dense dummy-write trick), and chunked prefill passes each chunk's
+# ``valid_len`` into the model so pad positions leave the state untouched.
+
+
+def _ssm_decode_core(cfg, params, conv, ssm, tokens, pos, temps, top_ps,
+                     seeds, rids, active):
+    x = ssm_models.embed_tokens(cfg, params, tokens)
+    logits, cache = ssm_models.decode_step(
+        cfg, params, {"conv": conv, "ssm": ssm}, x, pos)
+    conv = jnp.where(active[None, :, None, None], cache["conv"], conv)
+    ssm = jnp.where(active[None, :, None, None, None], cache["ssm"], ssm)
+    toks = _sample_rows(cfg, logits[:, 0], temps, top_ps, seeds, rids, pos)
+    return toks, conv, ssm
+
+
+def _ssm_chunk_scan(cfg, params, conv, ssm, toks, slots, offsets, lens,
+                    temps, top_ps, seeds, rids):
+    def body(carry, xs):
+        conv, ssm = carry
+        t, s, off, ln, tp, pp, sd, rid = xs
+        x = ssm_models.embed_tokens(cfg, params, t[None])
+        sub = {"conv": lax.dynamic_slice_in_dim(conv, s, 1, 1),
+               "ssm": lax.dynamic_slice_in_dim(ssm, s, 1, 1)}
+        logits, sub = ssm_models.prefill_chunk(cfg, params, sub, x, off,
+                                               valid_len=ln)
+        conv = lax.dynamic_update_slice_in_dim(conv, sub["conv"], s, 1)
+        ssm = lax.dynamic_update_slice_in_dim(ssm, sub["ssm"], s, 1)
+        last = jnp.maximum(ln - 1, 0)
+        tok = _sample_one(cfg, lax.dynamic_index_in_dim(
+            logits[0], last, 0, keepdims=False), tp, pp, sd, rid, off + last)
+        return (conv, ssm), tok
+
+    (conv, ssm), ctoks = lax.scan(
+        body, (conv, ssm),
+        (toks, slots, offsets, lens, temps, top_ps, seeds, rids))
+    return ctoks, conv, ssm
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3))
+def ssm_decode_only(cfg, params, conv, ssm, tokens, pos, temps, top_ps,
+                    seeds, rids, active):
+    return _ssm_decode_core(cfg, params, conv, ssm, tokens, pos, temps,
+                            top_ps, seeds, rids, active)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3))
+def ssm_chunks_only(cfg, params, conv, ssm, toks, slots, offsets, lens,
+                    temps, top_ps, seeds, rids):
+    return _ssm_chunk_scan(cfg, params, conv, ssm, toks, slots, offsets,
+                           lens, temps, top_ps, seeds, rids)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3))
+def ssm_mixed_step(cfg, params, conv, ssm, tokens, pos, dtemps, dtop_ps,
+                   dseeds, drids, active, toks, slots, offsets, lens, ctemps,
+                   ctop_ps, cseeds, crids):
+    dtoks, conv, ssm = _ssm_decode_core(cfg, params, conv, ssm, tokens, pos,
+                                        dtemps, dtop_ps, dseeds, drids,
+                                        active)
+    ctoks, conv, ssm = _ssm_chunk_scan(cfg, params, conv, ssm, toks, slots,
+                                       offsets, lens, ctemps, ctop_ps,
+                                       cseeds, crids)
+    return jnp.concatenate([dtoks, ctoks]), conv, ssm
+
+
+# --------------------------------------- hybrid (RecurrentGemma) steps
+#
+# The decode state is the whole hybrid cache pytree with batch == n_slots,
+# passed (and donated) as ONE argument. Per-slot slice/update walk the
+# structure; the ``active`` mask reverts every leaf of inactive rows (ring
+# writes included — cheaper than special-casing which leaves are safe).
+
+
+def _hyb_rows(act, new, old, axis):
+    shape = [1] * new.ndim
+    shape[axis] = act.shape[0]
+    return jnp.where(act.reshape(shape), new, old)
+
+
+def _hyb_mask(old, new, act):
+    out = {"groups": {k: _hyb_rows(act, new["groups"][k], old["groups"][k], 1)
+                      for k in old["groups"]},
+           "pos_map": _hyb_rows(act, new["pos_map"], old["pos_map"], 0)}
+    if "tail" in old:
+        out["tail"] = {k: _hyb_rows(act, new["tail"][k], old["tail"][k], 1)
+                       for k in old["tail"]}
+    return out
+
+
+def _hyb_slice(cache, s):
+    sub = {"groups": {k: lax.dynamic_slice_in_dim(a, s, 1, 1)
+                      for k, a in cache["groups"].items()},
+           "pos_map": lax.dynamic_slice_in_dim(cache["pos_map"], s, 1, 0)}
+    if "tail" in cache:
+        sub["tail"] = {k: lax.dynamic_slice_in_dim(a, s, 1, 1)
+                       for k, a in cache["tail"].items()}
+    return sub
+
+
+def _hyb_update(cache, sub, s):
+    out = {"groups": {k: lax.dynamic_update_slice_in_dim(
+               cache["groups"][k], sub["groups"][k], s, 1)
+               for k in cache["groups"]},
+           "pos_map": lax.dynamic_update_slice_in_dim(
+               cache["pos_map"], sub["pos_map"], s, 0)}
+    if "tail" in cache:
+        out["tail"] = {k: lax.dynamic_update_slice_in_dim(
+            cache["tail"][k], sub["tail"][k], s, 1) for k in cache["tail"]}
+    return out
+
+
+def _hyb_decode_core(cfg, params, cache, tokens, pos, temps, top_ps, seeds,
+                     rids, active):
+    x = hybrid.embed_tokens(cfg, params, tokens)
+    logits, new_cache = hybrid.decode_step(cfg, params, cache, x, pos)
+    new_cache = _hyb_mask(cache, new_cache, active)
+    toks = _sample_rows(cfg, logits[:, 0], temps, top_ps, seeds, rids, pos)
+    return toks, new_cache
+
+
+def _hyb_chunk_scan(cfg, params, cache, toks, slots, offsets, lens, temps,
+                    top_ps, seeds, rids):
+    def body(cache, xs):
+        t, s, off, ln, tp, pp, sd, rid = xs
+        x = hybrid.embed_tokens(cfg, params, t[None])
+        sub = _hyb_slice(cache, s)
+        logits, sub = hybrid.prefill_chunk(cfg, params, sub, x, off,
+                                           valid_len=ln)
+        cache = _hyb_update(cache, sub, s)
+        last = jnp.maximum(ln - 1, 0)
+        tok = _sample_one(cfg, lax.dynamic_index_in_dim(
+            logits[0], last, 0, keepdims=False), tp, pp, sd, rid, off + last)
+        return cache, tok
+
+    cache, ctoks = lax.scan(
+        body, cache, (toks, slots, offsets, lens, temps, top_ps, seeds, rids))
+    return ctoks, cache
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def hybrid_decode_only(cfg, params, cache, tokens, pos, temps, top_ps,
+                       seeds, rids, active):
+    return _hyb_decode_core(cfg, params, cache, tokens, pos, temps, top_ps,
+                            seeds, rids, active)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def hybrid_chunks_only(cfg, params, cache, toks, slots, offsets, lens,
+                       temps, top_ps, seeds, rids):
+    return _hyb_chunk_scan(cfg, params, cache, toks, slots, offsets, lens,
+                           temps, top_ps, seeds, rids)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def hybrid_mixed_step(cfg, params, cache, tokens, pos, dtemps, dtop_ps,
+                      dseeds, drids, active, toks, slots, offsets, lens,
+                      ctemps, ctop_ps, cseeds, crids):
+    dtoks, cache = _hyb_decode_core(cfg, params, cache, tokens, pos, dtemps,
+                                    dtop_ps, dseeds, drids, active)
+    ctoks, cache = _hyb_chunk_scan(cfg, params, cache, toks, slots, offsets,
+                                   lens, ctemps, ctop_ps, cseeds, crids)
+    return jnp.concatenate([dtoks, ctoks]), cache
+
+
+# ---------------------------------------------------- family dispatch
+
+_OPS = {
+    "dense": SimpleNamespace(decode_only=decode_only, chunks_only=chunks_only,
+                             mixed_step=mixed_step),
+    "ssm": SimpleNamespace(decode_only=ssm_decode_only,
+                           chunks_only=ssm_chunks_only,
+                           mixed_step=ssm_mixed_step),
+    "hybrid": SimpleNamespace(decode_only=hybrid_decode_only,
+                              chunks_only=hybrid_chunks_only,
+                              mixed_step=hybrid_mixed_step),
+}
+
+
+def ops_for(family: str):
+    """The family's fused-step entry points. All share the calling
+    convention ``op(cfg, params, *slots.slabs(), *step_args)`` and return
+    ``(tokens, *new_slabs)`` — the caller swaps the slabs back via
+    ``StateSlots.swap`` (they were donated)."""
+    return _OPS[family]
 
 
 # -------------------------------------------- self-speculative decoding

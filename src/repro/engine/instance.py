@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.local_scheduler import LocalScheduler
 from repro.engine import fused_step as fs
-from repro.engine.kv_slots import SlotKVCache
+from repro.engine.state_slots import make_state_slots
 from repro.models import build_model
 
 
@@ -116,28 +116,34 @@ class EngineInstance:
                  chunk_tokens: Optional[int] = None,
                  step_mode: str = "fused", run_seed: int = 0,
                  speculate: int = 0, draft_layers: Optional[int] = None):
-        assert cfg.family in ("dense",), \
-            "real engine path supports dense-family; other families are " \
-            "served via the simulator cost model (DESIGN.md §2)"
+        assert cfg.family in ("dense", "ssm", "hybrid"), \
+            f"no engine decode-state for family {cfg.family!r}"
         assert step_mode in ("fused", "legacy"), step_mode
+        if cfg.family != "dense":
+            assert step_mode == "fused", \
+                "non-dense families have no legacy (pre-fusion) step path"
         self.run_seed = int(run_seed)
         self.speculate = int(speculate)
         self.draft_layers = (int(draft_layers) if draft_layers
                              else max(1, cfg.n_layers // 2))
-        if self.speculate:
-            assert step_mode == "fused", \
-                "self-speculative decoding requires the fused step path"
-            assert 1 <= self.draft_layers < cfg.n_layers, \
-                "draft_layers must be a strict truncation of the model"
         self.iid = iid
         self.cfg = cfg
         self.params = params
         self.model = build_model(cfg)
         self.capacity = capacity
         self.step_mode = step_mode
-        self.kv = SlotKVCache(cfg.n_layers, n_slots, capacity,
-                              cfg.n_kv_heads, cfg.head_dim_,
-                              jnp.dtype(cfg.dtype))
+        self.kv = make_state_slots(cfg, n_slots, capacity)
+        self._ops = fs.ops_for(cfg.family)
+        if not self.kv.supports_speculation:
+            # a rejected draft cannot roll back a recurrent state update,
+            # so speculation is cleanly disabled for constant-state families
+            # (DESIGN.md §13) — the stream is the plain sequential one
+            self.speculate = 0
+        if self.speculate:
+            assert step_mode == "fused", \
+                "self-speculative decoding requires the fused step path"
+            assert 1 <= self.draft_layers < cfg.n_layers, \
+                "draft_layers must be a strict truncation of the model"
         self.local = LocalScheduler(
             iid, token_budget=chunk_tokens or capacity,
             mixed_chunk_budget=chunk_tokens or 2048,
@@ -212,6 +218,12 @@ class EngineInstance:
         reused across lengths (causal masking keeps the live positions
         exact). Raises :class:`NoFreeSlots` when the cache is full."""
         S = len(prompt)
+        if self.cfg.family != "dense":
+            # constant-state families prefill via the chunk path: the slot
+            # starts from zero recurrent state (the release invariant) and
+            # the whole prompt scans as one fused chunk
+            return self.run_prefill_chunk(rid, np.asarray(prompt, np.int32),
+                                          0, S)
         S_pad = _bucket32(S, self.capacity)
         padded = np.zeros((S_pad,), np.int32)
         padded[:S] = prompt
@@ -319,6 +331,10 @@ class EngineInstance:
                 self.kv.swap(k, v, pm)
             else:
                 dec_args = (jnp.asarray(tokens), jnp.asarray(pos)) + samp
+                if self.kv.needs_active_mask:
+                    # recurrent state has no harmless dummy-write: parked
+                    # slots are masked out inside the fused step instead
+                    dec_args += (jnp.asarray(active),)
         groups: List[Tuple[List[ChunkWork], Any]] = []
         for gi, (Sq, group) in enumerate(self._group_chunks(chunks)):
             n = len(group)
@@ -344,19 +360,19 @@ class EngineInstance:
                       jnp.asarray(ctemps), jnp.asarray(ctops),
                       jnp.asarray(cseeds), jnp.asarray(crids))
             if gi == 0 and dec_args is not None:
-                toks, k, v, pm = fs.mixed_step(
+                out = self._ops.mixed_step(
                     self.cfg, self.params, *self.kv.slabs(), *dec_args,
                     *c_args)
             else:
-                toks, k, v, pm = fs.chunks_only(
+                out = self._ops.chunks_only(
                     self.cfg, self.params, *self.kv.slabs(), *c_args)
-            self.kv.swap(k, v, pm)
-            groups.append((group, toks))
+            self.kv.swap(*out[1:])
+            groups.append((group, out[0]))
         if not groups and dec_args is not None:
-            toks, k, v, pm = fs.decode_only(
+            out = self._ops.decode_only(
                 self.cfg, self.params, *self.kv.slabs(), *dec_args)
-            self.kv.swap(k, v, pm)
-            groups.append(([], toks))
+            self.kv.swap(*out[1:])
+            groups.append(([], out[0]))
         return PendingStep(list(decode_rids), groups, spec=spec_arr,
                            decode_in_group0=dec_args is not None)
 
@@ -493,29 +509,36 @@ class EngineInstance:
         return None
 
     # --------------------------------------------------------- transfer
+    def export_state(self, rid: int):
+        """Family-agnostic migration export: (payload host arrays, context
+        length, last token, generated tokens). ``sum(p.nbytes)`` over the
+        payload is the real wire size — O(L) for dense, O(1) for ssm/hybrid
+        (DESIGN.md §13)."""
+        payload, L = self.kv.extract_state(rid)
+        return payload, L, self.last_token[rid], self.generated[rid]
+
+    def import_state(self, rid: int, payload, L: int, last_token: int,
+                     generated: List[int], sampling=None) -> bool:
+        if self.kv.alloc(rid) is None:
+            return False
+        if sampling is not None:
+            # the source slot's sampling state rides along with the state,
+            # so a migrated stream keeps its key derivation (DESIGN.md §12)
+            self.kv.samp_of[rid] = tuple(sampling)
+        self.kv.place_state(rid, payload, L)
+        self.last_token[rid] = last_token
+        self.generated[rid] = list(generated)
+        return True
+
     def export_kv(self, rid: int):
+        """Dense-layout export kept for compatibility (tests, tools)."""
         k, v, L = self.kv.extract(rid)
         return k, v, L, self.last_token[rid], self.generated[rid]
 
     def import_kv(self, rid: int, k, v, L: int, last_token: int,
                   generated: List[int], sampling=None) -> bool:
-        if self.kv.alloc(rid) is None:
-            return False
-        if sampling is not None:
-            # the source slot's sampling state rides along with the KV,
-            # so a migrated stream keeps its key derivation (DESIGN.md §12)
-            self.kv.samp_of[rid] = tuple(sampling)
-        # bucket-pad the context so the jitted place sees few shapes
-        k = np.asarray(k)
-        v = np.asarray(v)
-        S_pad = _bucket32(k.shape[1], self.capacity)
-        if k.shape[1] < S_pad:
-            pad = [(0, 0), (0, S_pad - k.shape[1]), (0, 0), (0, 0)]
-            k, v = np.pad(k, pad), np.pad(v, pad)
-        self.kv.place(rid, jnp.asarray(k), jnp.asarray(v), L)
-        self.last_token[rid] = last_token
-        self.generated[rid] = list(generated)
-        return True
+        return self.import_state(rid, [k, v], L, last_token, generated,
+                                 sampling=sampling)
 
     def drop(self, rid: int) -> None:
         if rid in self.kv.slot_of:

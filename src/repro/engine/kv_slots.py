@@ -16,12 +16,13 @@ device array so a KV export costs a single blocking transfer.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+
+from repro.engine.state_slots import StateSlotsBase
 
 
 @partial(jax.jit, donate_argnums=(0, 1, 2))
@@ -65,36 +66,27 @@ def _kv_extract_stack(k, v, slot):
                       lax.dynamic_index_in_dim(v, slot, 1, keepdims=False)])
 
 
-class SlotKVCache:
+class SlotKVCache(StateSlotsBase):
+    """Dense-family decode state: per-token KV rings. State grows O(L) with
+    context, so block-granular prefix reuse and token-proportional migration
+    sizing both apply (capability flags below)."""
+
+    prefix_reuse = "block"
+    needs_active_mask = False
+    supports_speculation = True
+
     def __init__(self, n_layers: int, n_slots: int, capacity: int,
                  n_kv_heads: int, head_dim: int, dtype=jnp.float32):
-        self.n_slots = n_slots
-        self.capacity = capacity
+        super().__init__(n_slots, capacity)
         self.k = jnp.zeros((n_layers, n_slots, capacity, n_kv_heads, head_dim), dtype)
         self.v = jnp.zeros_like(self.k)
         self.pos_map = jnp.full((n_slots, capacity), -1, jnp.int32)
-        self.free = list(range(n_slots))
-        self.slot_of: Dict[int, int] = {}       # rid -> slot
-        self.len_of: Dict[int, int] = {}        # rid -> context length
-        # rid -> (temperature, top_p, seed): sampling state is part of the
-        # slot's serving state so it travels with the KV on migration and
-        # crash recovery (DESIGN.md §12); absent rid ≡ greedy
-        self.samp_of: Dict[int, Tuple[float, float, int]] = {}
 
-    # ------------------------------------------------------------- alloc
-    def alloc(self, rid: int) -> Optional[int]:
-        if not self.free:
-            return None
-        s = self.free.pop()
-        self.slot_of[rid] = s
-        return s
-
-    def release(self, rid: int) -> None:
-        s = self.slot_of.pop(rid)
-        self.len_of.pop(rid, None)
-        self.samp_of.pop(rid, None)
-        self.pos_map = _kv_clear_row(self.pos_map, s)
-        self.free.append(s)
+    def _clear_slot(self, slot: int) -> None:
+        # invalidating the pos_map row is enough — the k/v bytes are never
+        # attended without a valid position, and the next occupant's
+        # prefill overwrites them wholesale
+        self.pos_map = _kv_clear_row(self.pos_map, slot)
 
     # -------------------------------------------------------------- slabs
     def slabs(self):
@@ -135,6 +127,26 @@ class SlotKVCache:
         kv = np.asarray(_kv_extract_stack(self.k, self.v, s))
         return kv[0, :, :L], kv[1, :, :L], L
 
+    # ---------------------------------------- family-agnostic migration
+    def extract_state(self, rid: int):
+        k, v, L = self.extract(rid)
+        return [k, v], L
+
+    def place_state(self, rid: int, payload, length: int) -> None:
+        k, v = np.asarray(payload[0]), np.asarray(payload[1])
+        # bucket-pad the context so the jitted place sees few shapes
+        S_pad = min(-(-k.shape[1] // 32) * 32, self.capacity)
+        if k.shape[1] < S_pad:
+            pad = [(0, 0), (0, S_pad - k.shape[1]), (0, 0), (0, 0)]
+            k, v = np.pad(k, pad), np.pad(v, pad)
+        self.place(rid, jnp.asarray(k), jnp.asarray(v), length)
+
+    def state_bytes(self, rid: int) -> int:
+        # O(L) in context: tokens × per-token KV bytes (k and v rows)
+        n_layers, _, _, hk, d = self.k.shape
+        per_token = 2 * n_layers * hk * d * self.k.dtype.itemsize
+        return per_token * self.len_of[rid]
+
     def as_model_cache(self):
         return {"k": self.k, "v": self.v, "pos_map": self.pos_map}
 
@@ -142,6 +154,3 @@ class SlotKVCache:
         self.k, self.v, self.pos_map = cache["k"], cache["v"], cache["pos_map"]
         for rid in self.len_of:
             self.len_of[rid] += 0  # lengths advance via advance()
-
-    def advance(self, rid: int, n: int = 1) -> None:
-        self.len_of[rid] += n

@@ -1,0 +1,287 @@
+"""Per-architecture decode-state slots: the engine's cache contract.
+
+The engine's unit of admission is a *slot*; what a slot holds depends on the
+model family (DESIGN.md §13):
+
+  dense   — per-token KV rings (``SlotKVCache``): state grows O(L) with
+            context, prefix reuse works at block granularity, migration
+            moves tokens × per-token-KV bytes.
+  ssm     — Mamba-2 ``{"conv", "ssm"}`` slabs (``SSMStateSlots``): state is
+            O(1) in context, so migration is constant-cost and "prefix"
+            reuse only makes sense for an exact full-length match (the
+            recurrent state is a lossy summary — there is no per-position
+            KV to truncate).
+  hybrid  — RecurrentGemma conv/h recurrences plus fixed local-attention
+            rings (``RecurrentStateSlots``): same O(1) economics as ssm.
+
+Every implementation keeps the host bookkeeping (free list, rid -> slot /
+context length / sampling params) and the device invariants the fused step
+relies on: mutating slot ops are jitted with **donated** slabs, a released
+slot's recurrent state is zeroed (so the next occupant chunks from a zero
+state), and ``extract_state``/``place_state`` give the cluster a
+family-agnostic migration transfer (the payload's ``nbytes`` is the real
+wire cost that ``RuntimeCore`` records).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+# ------------------------------------------------- per-leaf slot ops (jitted)
+
+
+@partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+def _zero_slot(a, slot, axis):
+    shape = list(a.shape)
+    shape[axis] = 1
+    return lax.dynamic_update_slice_in_dim(a, jnp.zeros(shape, a.dtype),
+                                           slot, axis)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def _take_slot(a, slot, axis):
+    return lax.dynamic_index_in_dim(a, slot, axis, keepdims=False)
+
+
+@partial(jax.jit, static_argnums=(3,), donate_argnums=(0,))
+def _put_slot(a, row, slot, axis):
+    return lax.dynamic_update_slice_in_dim(a, jnp.expand_dims(row, axis),
+                                           slot, axis)
+
+
+@partial(jax.jit, static_argnums=(3,), donate_argnums=(0,))
+def _copy_slot(a, src, dst, axis):
+    return lax.dynamic_update_slice_in_dim(
+        a, lax.dynamic_slice_in_dim(a, src, 1, axis), dst, axis)
+
+
+# ---------------------------------------------------------------------- base
+
+
+class StateSlotsBase:
+    """Host bookkeeping shared by every decode-state implementation, plus
+    the per-architecture capability flags the scheduling layer reads."""
+
+    #: "block" — per-token KV, any block-aligned prefix is reusable;
+    #: "exact" — constant-size recurrent state, only a full-length match.
+    prefix_reuse: str = "exact"
+    #: recurrent updates are irreversible, so parked slots must be masked
+    #: out of the fused decode instead of receiving dummy writes, and
+    #: rejected speculation cannot roll the state back.
+    needs_active_mask: bool = True
+    supports_speculation: bool = False
+
+    def __init__(self, n_slots: int, capacity: int):
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.free = list(range(n_slots))
+        self.slot_of: Dict[int, int] = {}       # rid -> slot
+        self.len_of: Dict[int, int] = {}        # rid -> context length
+        # rid -> (temperature, top_p, seed): sampling state is part of the
+        # slot's serving state so it travels with the state on migration and
+        # crash recovery (DESIGN.md §12); absent rid ≡ greedy
+        self.samp_of: Dict[int, Tuple[float, float, int]] = {}
+
+    # ------------------------------------------------------------- alloc
+    def alloc(self, rid: int) -> Optional[int]:
+        if not self.free:
+            return None
+        s = self.free.pop()
+        self.slot_of[rid] = s
+        return s
+
+    def release(self, rid: int) -> None:
+        s = self.slot_of.pop(rid)
+        self.len_of.pop(rid, None)
+        self.samp_of.pop(rid, None)
+        self._clear_slot(s)
+        self.free.append(s)
+
+    def advance(self, rid: int, n: int = 1) -> None:
+        self.len_of[rid] += n
+
+    # ----------------------------------------------------- device contract
+    def slabs(self) -> tuple:
+        """The donated arguments of a fused step, in the order the family's
+        fused-step entry points expect them. The caller owns putting the
+        returned slabs back via :meth:`swap` — after a donating call the
+        previous buffers are dead."""
+        raise NotImplementedError
+
+    def swap(self, *slabs) -> None:
+        raise NotImplementedError
+
+    def _clear_slot(self, slot: int) -> None:
+        """Restore the released slot to the freshly-initialized state (zero
+        recurrent state / invalid positions) so the next occupant's chunked
+        prefill starts clean."""
+        raise NotImplementedError
+
+    # --------------------------------------------------------- migration
+    def extract_state(self, rid: int) -> Tuple[List[np.ndarray], int]:
+        """(payload host arrays, context length) — the family-agnostic
+        migration export; ``sum(p.nbytes for p in payload)`` is the real
+        transfer size."""
+        raise NotImplementedError
+
+    def place_state(self, rid: int, payload: List[np.ndarray],
+                    length: int) -> None:
+        """Inverse of :meth:`extract_state` into ``rid``'s allocated slot."""
+        raise NotImplementedError
+
+    def state_bytes(self, rid: int) -> int:
+        """Bytes a migration of ``rid`` moves right now."""
+        raise NotImplementedError
+
+    def copy_prefix(self, src_rid: int, dst_rid: int, length: int) -> None:
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------ ssm (Mamba-2)
+
+
+class SSMStateSlots(StateSlotsBase):
+    """Fixed-size ``{"conv": (L, B, W-1, Ch), "ssm": (L, B, H, P, N)}``
+    slabs — O(1) bytes per slot regardless of context length."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, capacity: int):
+        super().__init__(n_slots, capacity)
+        from repro.models import ssm as ssm_mod
+        cache = ssm_mod.init_cache(cfg, n_slots)
+        self.conv = cache["conv"]
+        self.ssm = cache["ssm"]
+
+    def slabs(self):
+        return self.conv, self.ssm
+
+    def swap(self, conv, ssm) -> None:
+        self.conv, self.ssm = conv, ssm
+
+    def _clear_slot(self, slot: int) -> None:
+        self.conv = _zero_slot(self.conv, slot, 1)
+        self.ssm = _zero_slot(self.ssm, slot, 1)
+
+    def extract_state(self, rid: int):
+        s = self.slot_of[rid]
+        payload = [np.asarray(_take_slot(self.conv, s, 1)),
+                   np.asarray(_take_slot(self.ssm, s, 1))]
+        return payload, self.len_of[rid]
+
+    def place_state(self, rid: int, payload, length: int) -> None:
+        s = self.slot_of[rid]
+        conv_row, ssm_row = payload
+        self.conv = _put_slot(self.conv, jnp.asarray(conv_row, self.conv.dtype),
+                              s, 1)
+        self.ssm = _put_slot(self.ssm, jnp.asarray(ssm_row, self.ssm.dtype),
+                             s, 1)
+        self.len_of[rid] = length
+
+    def state_bytes(self, rid: int) -> int:
+        return (self.conv.nbytes + self.ssm.nbytes) // self.n_slots
+
+    def copy_prefix(self, src_rid: int, dst_rid: int, length: int) -> None:
+        # exact-prefix only: the recurrent state *is* the whole context
+        assert length == self.len_of[src_rid], (length, self.len_of[src_rid])
+        s, d = self.slot_of[src_rid], self.slot_of[dst_rid]
+        self.conv = _copy_slot(self.conv, s, d, 1)
+        self.ssm = _copy_slot(self.ssm, s, d, 1)
+        self.len_of[dst_rid] = length
+
+
+# ------------------------------------------- hybrid (RecurrentGemma/Griffin)
+
+
+class RecurrentStateSlots(StateSlotsBase):
+    """The whole hybrid decode cache with batch == ``n_slots``: conv/h
+    recurrences plus the fixed-size local-attention k/v rings and their
+    ``pos_map``. Rings are bounded by the local window, so state is O(1) in
+    context length, same as ssm."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, capacity: int):
+        super().__init__(n_slots, capacity)
+        from repro.models import hybrid as hyb_mod
+        self.cache = hyb_mod.init_cache(cfg, n_slots, capacity)
+
+    def slabs(self):
+        return (self.cache,)
+
+    def swap(self, cache) -> None:
+        self.cache = cache
+
+    def _leaves(self):
+        """Deterministic (section, key, axis-of-slot) walk of the cache."""
+        for k in sorted(self.cache["groups"]):
+            yield "groups", k, 1
+        yield None, "pos_map", 0
+        if "tail" in self.cache:
+            for k in sorted(self.cache["tail"]):
+                yield "tail", k, 1
+
+    def _get(self, sec, key):
+        return self.cache[key] if sec is None else self.cache[sec][key]
+
+    def _set(self, sec, key, value) -> None:
+        if sec is None:
+            self.cache[key] = value
+        else:
+            self.cache[sec][key] = value
+
+    def _clear_slot(self, slot: int) -> None:
+        for sec, key, axis in self._leaves():
+            a = self._get(sec, key)
+            if key == "pos_map":
+                row = jnp.full((a.shape[1],), -1, jnp.int32)
+                a = _put_slot(a, row, slot, axis)
+            else:
+                a = _zero_slot(a, slot, axis)
+            self._set(sec, key, a)
+
+    def extract_state(self, rid: int):
+        s = self.slot_of[rid]
+        payload = [np.asarray(_take_slot(self._get(sec, key), s, axis))
+                   for sec, key, axis in self._leaves()]
+        return payload, self.len_of[rid]
+
+    def place_state(self, rid: int, payload, length: int) -> None:
+        s = self.slot_of[rid]
+        for (sec, key, axis), row in zip(self._leaves(), payload):
+            a = self._get(sec, key)
+            self._set(sec, key, _put_slot(a, jnp.asarray(row, a.dtype), s,
+                                          axis))
+        self.len_of[rid] = length
+
+    def state_bytes(self, rid: int) -> int:
+        return sum(self._get(sec, key).nbytes
+                   for sec, key, _ in self._leaves()) // self.n_slots
+
+    def copy_prefix(self, src_rid: int, dst_rid: int, length: int) -> None:
+        assert length == self.len_of[src_rid], (length, self.len_of[src_rid])
+        s, d = self.slot_of[src_rid], self.slot_of[dst_rid]
+        for sec, key, axis in self._leaves():
+            self._set(sec, key, _copy_slot(self._get(sec, key), s, d, axis))
+        self.len_of[dst_rid] = length
+
+
+# ------------------------------------------------------------------ factory
+
+
+def make_state_slots(cfg: ModelConfig, n_slots: int, capacity: int
+                     ) -> StateSlotsBase:
+    """Decode-state slots for ``cfg.family`` (the engine's cache seam)."""
+    if cfg.family == "dense":
+        from repro.engine.kv_slots import SlotKVCache
+        return SlotKVCache(cfg.n_layers, n_slots, capacity, cfg.n_kv_heads,
+                           cfg.head_dim_, jnp.dtype(cfg.dtype))
+    if cfg.family == "ssm":
+        return SSMStateSlots(cfg, n_slots, capacity)
+    if cfg.family == "hybrid":
+        return RecurrentStateSlots(cfg, n_slots, capacity)
+    raise NotImplementedError(f"no decode-state slots for family "
+                              f"{cfg.family!r}")

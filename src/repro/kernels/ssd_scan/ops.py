@@ -9,8 +9,10 @@ import jax.numpy as jnp
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan
 
 
-def ssd_scan_op(x, la, Bm, Cm, chunk: int, *, interpret: Optional[bool] = None):
-    """x (B,S,H,P) already dt-scaled; la (B,S,H); Bm/Cm (B,S,H,N) per-head.
+def ssd_scan_op(x, la, Bm, Cm, chunk: int, *, h0=None,
+                interpret: Optional[bool] = None):
+    """x (B,S,H,P) already dt-scaled; la (B,S,H); Bm/Cm (B,S,H,N) per-head;
+    h0 (B,H,P,N) optional initial state (zeros when omitted).
     Returns (y (B,S,H,P), h_final (B,H,P,N))."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -23,8 +25,10 @@ def ssd_scan_op(x, la, Bm, Cm, chunk: int, *, interpret: Optional[bool] = None):
         a = jnp.moveaxis(a, 2, 1)
         return a.reshape((B, H, nc, chunk) + a.shape[3:])
 
+    if h0 is not None:
+        h0 = h0.astype(jnp.float32)
     y, h = ssd_scan(blk(x).astype(jnp.float32), blk(la).astype(jnp.float32),
                     blk(Bm).astype(jnp.float32), blk(Cm).astype(jnp.float32),
-                    interpret=interpret)
+                    h0, interpret=interpret)
     y = jnp.moveaxis(y.reshape(B, H, S, P), 1, 2)
     return y, h

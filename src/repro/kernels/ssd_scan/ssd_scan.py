@@ -11,8 +11,13 @@ grid = (B, H, num_chunks)   (last axis sequential)
   la (B,H,nc,Q,1)  log decay per step           block (1,1,1,Q,1)
   Bm (B,H,nc,Q,N)  input projection             block (1,1,1,Q,N)
   Cm (B,H,nc,Q,N)  output projection            block (1,1,1,Q,N)
+  h0 (B,H,P,N)     initial state                block (1,1,P,N)
 outputs:
   y  (B,H,nc,Q,P), h_final (B,H,P,N) (written on the last chunk)
+
+``h0`` seeds the VMEM state scratch on the first chunk, so the serving
+engine's chunked prefill can resume a sequence mid-stream (decode-state
+slots, DESIGN.md §13) instead of always scanning from zeros.
 """
 from __future__ import annotations
 
@@ -24,13 +29,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, la_ref, b_ref, c_ref, y_ref, hout_ref, state_scr, *,
+def _kernel(x_ref, la_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, state_scr, *,
             num_chunks: int, Q: int):
     c = pl.program_id(2)
 
     @pl.when(c == 0)
     def _init():
-        state_scr[...] = jnp.zeros_like(state_scr)
+        state_scr[...] = h0_ref[0, 0].astype(state_scr.dtype)
 
     la = la_ref[0, 0, 0, :, 0].astype(jnp.float32)     # (Q,)
     cum = jnp.cumsum(la)                               # (Q,)
@@ -67,11 +72,14 @@ def _kernel(x_ref, la_ref, b_ref, c_ref, y_ref, hout_ref, state_scr, *,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ssd_scan(x, la, Bm, Cm, *, interpret: bool = False):
-    """x (B,H,nc,Q,P); la (B,H,nc,Q); Bm/Cm (B,H,nc,Q,N).
+def ssd_scan(x, la, Bm, Cm, h0=None, *, interpret: bool = False):
+    """x (B,H,nc,Q,P); la (B,H,nc,Q); Bm/Cm (B,H,nc,Q,N); h0 (B,H,P,N)
+    optional initial state (zeros when omitted).
     Returns (y (B,H,nc,Q,P), h_final (B,H,P,N))."""
     B, H, nc, Q, P = x.shape
     N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
     grid = (B, H, nc)
     kernel = functools.partial(_kernel, num_chunks=nc, Q=Q)
     y, hout = pl.pallas_call(
@@ -82,6 +90,7 @@ def ssd_scan(x, la, Bm, Cm, *, interpret: bool = False):
             pl.BlockSpec((1, 1, 1, Q, 1), lambda b, h, c: (b, h, c, 0, 0)),
             pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
             pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
@@ -93,5 +102,5 @@ def ssd_scan(x, la, Bm, Cm, *, interpret: bool = False):
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         interpret=interpret,
-    )(x, la[..., None], Bm, Cm)
+    )(x, la[..., None], Bm, Cm, h0.astype(jnp.float32))
     return y, hout

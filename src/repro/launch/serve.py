@@ -108,9 +108,9 @@ def list_policies() -> None:
 def run_engine(args) -> ServeReport:
     from repro.engine import ArrowEngineCluster
     cfg = get_smoke_config(args.arch).replace(attn_impl=args.attn_impl)
-    if cfg.family != "dense":
-        raise SystemExit("--mode engine supports dense-family archs; use "
-                         "--mode sim for the rest (DESIGN.md §2)")
+    if cfg.family not in ("dense", "ssm", "hybrid"):
+        raise SystemExit("--mode engine supports dense/ssm/hybrid archs; use "
+                         "--mode sim for the rest (DESIGN.md §2, §13)")
     cluster = ArrowEngineCluster(cfg, n_instances=args.instances,
                                  n_prefill=max(args.instances // 2, 1),
                                  n_slots=8, capacity=256,
@@ -215,7 +215,13 @@ def build_parser() -> argparse.ArgumentParser:
     operator guide's flag table (drift fails the docs CI job)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=("engine", "sim"), default="engine")
-    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-1.7b")
+    ap.add_argument("--arch", "--model-arch", choices=ARCH_IDS,
+                    default="qwen3-1.7b",
+                    help="architecture preset (--model-arch is an alias). "
+                         "Engine mode serves dense, ssm (mamba2-370m) and "
+                         "hybrid (recurrentgemma-9b) families on their "
+                         "per-architecture decode state (DESIGN.md §13); "
+                         "sim mode models any preset")
     ap.add_argument("--instances", type=int, default=2)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--gap", type=float, default=0.05)

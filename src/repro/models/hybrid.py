@@ -20,9 +20,19 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.kernels.rglru_scan import rglru_scan_op
 from repro.models import common as cm
 
 _RGLRU_C = 8.0
+
+
+def _use_pallas(cfg: ModelConfig) -> bool:
+    """Gate the Pallas RG-LRU scan onto the serving path (mirrors dense)."""
+    if cfg.attn_impl == "reference":
+        return False
+    if cfg.attn_impl != "pallas":
+        raise NotImplementedError(f"attn_impl={cfg.attn_impl!r}")
+    return True
 
 
 def _pattern(cfg: ModelConfig):
@@ -132,6 +142,35 @@ def _rglru_seq(cfg, p, x, conv_state=None, h0=None):
     h = _rglru_scan(log_a, gated, h0)
     out = (y.astype(jnp.float32) * h).astype(x.dtype) @ p["w_o"]
     return out, new_conv, h[:, -1]
+
+
+def _rglru_chunk(cfg, p, x, conv_state, h0, valid_len, use_pallas):
+    """Valid-length-masked recurrent mixer for one prefill chunk.
+
+    Pad positions (index >= valid_len) get log_a = 0 (a = 1) and gated = 0, so
+    the hidden state passes through them unchanged: h[:, -1] equals the state
+    after the last *valid* token regardless of padding, and the conv tail is
+    sliced at ``valid_len`` rather than at the padded end.
+    """
+    S = x.shape[1]
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    cw = cfg.hybrid.conv_width
+    full = jnp.concatenate([conv_state, u], axis=1)
+    conv = sum(full[:, i:i + S] * p["conv_w"][i] for i in range(cw))
+    conv = conv + p["conv_b"]
+    new_conv = lax.dynamic_slice_in_dim(full, valid_len, cw - 1, axis=1)
+    log_a, gated = _rglru_gates(p, conv, u)
+    valid = (jnp.arange(S) < valid_len)[None, :, None]
+    log_a = jnp.where(valid, log_a, 0.0)
+    gated = gated * valid
+    if use_pallas:
+        h, h_last = rglru_scan_op(log_a, gated, h0)
+    else:
+        h = _rglru_scan(log_a, gated, h0)
+        h_last = h[:, -1]
+    out = (y.astype(jnp.float32) * h).astype(x.dtype) @ p["w_o"]
+    return out, new_conv, h_last
 
 
 def _rglru_step(cfg, p, x, conv_state, h):
@@ -294,6 +333,136 @@ def decode_step(cfg: ModelConfig, params, cache, x, pos, *, window=None):
             return x, {"conv0": extra[0], "h0": extra[1]}
         x, new_tail = lax.scan(tbody, x, (params["tail"], cache["tail"]),
                                 unroll=cfg.scan_unroll)
+        new_cache["tail"] = new_tail
+
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    """Empty decode cache for ``batch`` fresh streams: zero k/v rings with
+    pos_map -1 (no valid slots) and zero recurrent (conv, h) state."""
+    dtype = jnp.dtype(cfg.dtype)
+    pat, n_groups, tail = _pattern(cfg)
+    W = cfg.sliding_window or cfg.hybrid.local_window
+    C = min(capacity, W)
+    lw = _lru_width(cfg)
+    cw = cfg.hybrid.conv_width
+    hd = cfg.head_dim_
+    g = {}
+    for i, kind in enumerate(pat):
+        if kind == "attn":
+            g[f"k{i}"] = jnp.zeros((n_groups, batch, C, cfg.n_kv_heads, hd),
+                                   dtype)
+            g[f"v{i}"] = jnp.zeros((n_groups, batch, C, cfg.n_kv_heads, hd),
+                                   dtype)
+        else:
+            g[f"conv{i}"] = jnp.zeros((n_groups, batch, cw - 1, lw), dtype)
+            g[f"h{i}"] = jnp.zeros((n_groups, batch, lw), jnp.float32)
+    cache = {"groups": g, "pos_map": jnp.full((batch, C), -1, jnp.int32)}
+    if tail:
+        cache["tail"] = {"conv0": jnp.zeros((tail, batch, cw - 1, lw), dtype),
+                         "h0": jnp.zeros((tail, batch, lw), jnp.float32)}
+    return cache
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache, x, offset, *, valid_len,
+                  window=None):
+    """One chunk of incremental prefill against a live decode cache.
+
+    x (B,Sq,d): embedded chunk covering absolute positions
+    offset..offset+Sq-1, of which the first ``valid_len`` are real tokens and
+    the rest padding. Attention layers attend over the concatenation
+    [ring cache | chunk] under a combined validity/causal/sliding-window mask,
+    then commit the last min(valid_len, C) valid keys into the ring (write
+    *after* attend, so in-chunk attention never sees overwritten slots).
+    Recurrent layers run the valid-length-masked scan (``_rglru_chunk``), with
+    the Pallas kernel on the path when ``attn_impl == "pallas"``. Returns
+    (logits, new_cache) with the same pytree structure as ``forward_seq``'s
+    cache; decoding can resume from it exactly as from a whole-sequence
+    prefill.
+    """
+    del window
+    B, Sq, _ = x.shape
+    x = cm.constrain_batch(cfg, x)
+    pat, n_groups, tail = _pattern(cfg)
+    use_pallas = _use_pallas(cfg)
+    W = cfg.sliding_window or cfg.hybrid.local_window
+    attn_idx = [i for i, k in enumerate(pat) if k == "attn"]
+    C = cache["groups"][f"k{attn_idx[0]}"].shape[2] if attn_idx else 0
+
+    positions = offset + jnp.arange(Sq)
+    cos, sin, rope_dim = cm.rope_for(cfg, positions)
+
+    # Additive mask over concat([ring (C) | chunk (Sq)]) keys. Ring entries
+    # hold absolute positions < offset, chunk keys sit at offset + j.
+    idx = jnp.arange(Sq)
+    ok = (idx[None, :] <= idx[:, None]) & (idx[None, :] < valid_len)
+    ok = ok & (idx[None, :] > idx[:, None] - W)
+    chunk_m = jnp.where(ok, 0.0, cm.NEG_INF)[None, None, None]
+    chunk_m = jnp.broadcast_to(chunk_m, (B, 1, 1, Sq, Sq)).astype(jnp.float32)
+    if attn_idx:
+        ring_m = cm.chunk_mask(cache["pos_map"], positions, window=W)
+        mask = jnp.concatenate([ring_m, chunk_m], axis=-1)
+        # Ring commit plan, shared by every attention layer: slot c takes the
+        # last valid chunk index congruent to it mod C (handles Sq > C wrap).
+        cidx = jnp.arange(C, dtype=jnp.int32)
+        r = (cidx - jnp.int32(offset)) % C
+        has = r < valid_len
+        last_rel = jnp.clip(r + C * ((valid_len - 1 - r) // C), 0, Sq - 1)
+        pos_map = jnp.where(has[None, :],
+                            (offset + last_rel)[None, :].astype(jnp.int32),
+                            cache["pos_map"])
+        has_kv = has[None, :, None, None]
+    else:
+        mask = chunk_m
+        pos_map = cache["pos_map"]
+        last_rel = has_kv = None
+
+    def body(x, xs):
+        gp, states = xs
+        new_states = {}
+        for i, kind in enumerate(pat):
+            p = gp[f"sub{i}_{kind}"]
+            h_in = cm.apply_norm(cfg, p["ln1"], x)
+            if kind == "attn":
+                q, k, v = cm.attention_qkv(cfg, p["attn"], h_in, cos, sin,
+                                           rope_dim)
+                keys = jnp.concatenate([states[f"k{i}"], k], axis=1)
+                vals = jnp.concatenate([states[f"v{i}"], v], axis=1)
+                o = cm.sdpa(q, keys, vals, mask, cfg.logit_softcap)
+                x = x + o @ p["attn"]["wo"]
+                new_states[f"k{i}"] = jnp.where(has_kv, k[:, last_rel],
+                                                states[f"k{i}"])
+                new_states[f"v{i}"] = jnp.where(has_kv, v[:, last_rel],
+                                                states[f"v{i}"])
+            else:
+                o, conv, h = _rglru_chunk(cfg, p["rglru"], h_in,
+                                          states[f"conv{i}"], states[f"h{i}"],
+                                          valid_len, use_pallas)
+                x = x + o
+                new_states[f"conv{i}"], new_states[f"h{i}"] = conv, h
+            x = x + cm.mlp(cfg, p["mlp"], cm.apply_norm(cfg, p["ln2"], x))
+        return cm.constrain_batch(cfg, x), new_states
+
+    x, new_g = lax.scan(body, x, (params["groups"], cache["groups"]),
+                        unroll=cfg.scan_unroll)
+    new_cache = {"groups": new_g, "pos_map": pos_map}
+    if tail:
+        # Tail stacks are homogeneous rglru (enforced in init_params; mirrors
+        # the (conv0, h0)-only state decode_step threads through its tail).
+        def tbody(x, xs):
+            tp, st = xs
+            p = tp[f"sub0_{pat[0]}"]
+            h_in = cm.apply_norm(cfg, p["ln1"], x)
+            o, conv, h = _rglru_chunk(cfg, p["rglru"], h_in, st["conv0"],
+                                      st["h0"], valid_len, use_pallas)
+            x = x + o
+            x = x + cm.mlp(cfg, p["mlp"], cm.apply_norm(cfg, p["ln2"], x))
+            return x, {"conv0": conv, "h0": h}
+        x, new_tail = lax.scan(tbody, x, (params["tail"], cache["tail"]),
+                               unroll=cfg.scan_unroll)
         new_cache["tail"] = new_tail
 
     x = cm.apply_norm(cfg, params["final_norm"], x)

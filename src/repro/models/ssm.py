@@ -18,6 +18,15 @@ from repro.configs.base import ModelConfig
 from repro.models import common as cm
 
 
+def _use_pallas(cfg: ModelConfig) -> bool:
+    """Gate the Pallas SSD kernel onto the serving path (mirrors dense)."""
+    if cfg.attn_impl == "reference":
+        return False
+    if cfg.attn_impl != "pallas":
+        raise NotImplementedError(f"attn_impl={cfg.attn_impl!r}")
+    return True
+
+
 def _dims(cfg: ModelConfig):
     s = cfg.ssm
     di = s.d_inner(cfg.d_model)
@@ -174,6 +183,92 @@ def _block_step(cfg, lp, u, conv_state, h):
     y = y.reshape(B, 1, di).astype(u.dtype)
     y = cm.apply_norm(cfg, lp["out_norm"], y * jax.nn.silu(z))
     return u + y @ lp["w_out"], new_conv, h
+
+
+def _block_chunk(cfg, lp, u, conv_state, h0, valid_len):
+    """Mamba2 block over one serving chunk with carried state.
+
+    u (B,S,d) where positions >= ``valid_len`` are padding; conv_state
+    (B,W-1,Ch); h0 (B,H,P,N). dt is zeroed at pad positions, so their decay
+    is exp(0)=1 and their input contribution dt*x is 0 — the recurrent state
+    passes through padding exactly, making the returned state the state
+    after ``valid_len`` real tokens. Pad outputs are garbage and must be
+    ignored by the caller. Returns (out, new_conv, h_final)."""
+    s, di, H, P, G, N = _dims(cfg)
+    B, S, _ = u.shape
+    W = s.d_conv
+    x_in = cm.apply_norm(cfg, lp["ln"], u)
+    zxbcdt = x_in @ lp["w_in"]
+    z, xBC, dt = _split_in(cfg, zxbcdt)
+    full = jnp.concatenate([conv_state, xBC], axis=1)          # (B,S+W-1,Ch)
+    out = sum(full[:, i:i + S] * lp["conv_w"][i] for i in range(W)) + lp["conv_b"]
+    xBC = jax.nn.silu(out)
+    # last W-1 *valid* inputs (reaching into the old state when valid_len<W-1)
+    new_conv = lax.dynamic_slice_in_dim(full, valid_len, W - 1, axis=1)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, S, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, S, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    valid = (jnp.arange(S) < valid_len).astype(jnp.float32)
+    dt = dt * valid[None, :, None]
+    A = -jnp.exp(lp["A_log"])
+    Q = cfg.ssm.chunk
+    pad = (-S) % Q                    # static: chunk widths need not align
+    if pad:
+        zeros = lambda a: jnp.pad(a, [(0, pad if ax == 1 else 0)
+                                      for ax in range(a.ndim)])
+        xs, Bm, Cm, dt = zeros(xs), zeros(Bm), zeros(Cm), zeros(dt)
+    if _use_pallas(cfg):
+        from repro.kernels.ssd_scan import ssd_scan_op
+        rep = H // G
+        la = dt * A                                            # (B,Sp,H)
+        y, h_final = ssd_scan_op(
+            xs * dt[..., None], la, jnp.repeat(Bm, rep, axis=2),
+            jnp.repeat(Cm, rep, axis=2), Q, h0=h0)
+        y = y + lp["D"][None, None, :, None] * xs              # skip term
+    else:
+        y, h_final = ssd_chunked(xs, dt, A, Bm, Cm, lp["D"], Q, h0)
+    y = y[:, :S].reshape(B, S, di).astype(u.dtype)
+    y = cm.apply_norm(cfg, lp["out_norm"], y * jax.nn.silu(z))
+    return u + y @ lp["w_out"], new_conv, h_final
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity=None):
+    """Zero decode state for ``batch`` fresh streams — O(1) in context length.
+    ``capacity`` is accepted for interface parity with attention caches."""
+    del capacity
+    s, di, H, P, G, N = _dims(cfg)
+    conv_ch = di + 2 * G * N
+    L = cfg.n_layers
+    return {"conv": jnp.zeros((L, batch, s.d_conv - 1, conv_ch),
+                              jnp.dtype(cfg.dtype)),
+            "ssm": jnp.zeros((L, batch, H, P, N), jnp.float32)}
+
+
+def prefill_chunk(cfg: ModelConfig, params, cache, x, offset=None, *,
+                  valid_len, window=None):
+    """Serving chunked prefill: advance the decode state by one chunk.
+
+    x (B,S,d) with positions >= ``valid_len`` padding; cache is the decode
+    state {"conv": (L,B,W-1,Ch), "ssm": (L,B,H,P,N)} and is returned
+    advanced past the chunk's ``valid_len`` real tokens. ``offset`` is
+    accepted for interface parity with the attention families but unused —
+    the recurrent state carries all positional context."""
+    del offset, window
+    x = cm.constrain_batch(cfg, x)
+
+    def body(xc, xs):
+        lp, conv, h = xs
+        out, conv, h = _block_chunk(cfg, lp, xc, conv, h, valid_len)
+        return cm.constrain_batch(cfg, out), (conv, h)
+
+    x, (convs, hs) = lax.scan(body, x,
+                              (params["layers"], cache["conv"], cache["ssm"]),
+                              unroll=cfg.scan_unroll)
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    logits = cm.unembed(cfg, params["tok"], x)
+    return logits, {"conv": convs, "ssm": hs}
 
 
 def forward_seq(cfg: ModelConfig, params, x, positions=None, *, window=None,

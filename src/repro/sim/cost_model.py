@@ -189,9 +189,19 @@ class CostModel:
             per = 64.0  # nominal bookkeeping unit; state is per-seq not per-token
         return max(int(free / per), 1024)
 
-    def transfer_time(self, kv_tokens: int, ici_links: int = 1) -> float:
-        bytes_ = self.kv_bytes_per_token * kv_tokens + self.state_bytes_per_seq
+    def migration_bytes(self, kv_tokens: int) -> float:
+        """Wire size of migrating a request holding ``kv_tokens`` of context
+        (DESIGN.md §13): per-token KV for the attention layers plus the
+        constant per-sequence recurrent state — O(1) in context length for
+        ssm, window-bounded-plus-constant for hybrid."""
+        return self.kv_bytes_per_token * kv_tokens + self.state_bytes_per_seq
+
+    def transfer_time_bytes(self, bytes_: float, ici_links: int = 1) -> float:
         return 50e-6 + bytes_ / (ICI_BW * ici_links)
+
+    def transfer_time(self, kv_tokens: int, ici_links: int = 1) -> float:
+        return self.transfer_time_bytes(self.migration_bytes(kv_tokens),
+                                        ici_links)
 
     def max_running_tokens(self, tpot: float, batch_hint: int = 64) -> int:
         """Profile Max Running Tokens (§5.3): largest total context such that

@@ -123,7 +123,9 @@ class Simulator(RuntimeCore):
                            clock=VirtualClock(), autoscaler_cfg=autoscaler_cfg,
                            prefix_cache=prefix_cache, fault_plan=fault_plan,
                            tenants=tenants, admission=admission,
-                           deflection=deflection, run_seed=seed)
+                           deflection=deflection, run_seed=seed,
+                           prefix_reuse=("block" if cfg.family == "dense"
+                                         else "exact"))
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
@@ -173,7 +175,8 @@ class Simulator(RuntimeCore):
         # reserve memory now; data lands after the (async DMA) transfer delay
         loc = self.locals[dst]
         loc.kv_used += kv
-        dur = self.costs[dst].transfer_time(kv)
+        dur = self.costs[dst].transfer_time_bytes(
+            self.costs[dst].migration_bytes(kv))
         seq = next(self._xfer_seq)
         self._live_xfer[rid] = seq
         self._push(self._now + dur, self._on_migration_done,
@@ -411,6 +414,8 @@ class Simulator(RuntimeCore):
             return
         self._live_xfer.pop(rid, None)
         self.locals[dst].kv_used -= kv       # admit_migrated re-adds
+        self._record_migration(rid, kv,
+                               int(self.costs[dst].migration_bytes(kv)))
         self.complete_migration(rid, dst, kv, rem, self._now)
 
     def _on_monitor_tick(self) -> None:

@@ -139,7 +139,8 @@ def test_cluster_chunked_end_to_end(setup):
     reqs = [ServeRequest(
         rid=i, prompt=rng.integers(1, cfg.vocab_size, size=50).astype(np.int32),
         max_new_tokens=3) for i in range(4)]
-    out = cluster.serve(reqs, timeout=DRAIN_TIMEOUT)
+    with pytest.deprecated_call():     # legacy batch shim, kept on purpose
+        out = cluster.serve(reqs, timeout=DRAIN_TIMEOUT)
     for sr in out:
         assert sr.req.finish_time is not None
         ref = greedy_reference(cfg, model, params, sr.prompt, sr.max_new_tokens)
@@ -156,7 +157,8 @@ def test_cluster_end_to_end_all_finish(setup):
                          prompt=rng.integers(1, cfg.vocab_size, size=rng.integers(4, 20)).astype(np.int32),
                          max_new_tokens=int(rng.integers(1, 6)))
             for i in range(8)]
-    out = cluster.serve(reqs, timeout=DRAIN_TIMEOUT)
+    with pytest.deprecated_call():     # legacy batch shim, kept on purpose
+        out = cluster.serve(reqs, timeout=DRAIN_TIMEOUT)
     for sr in out:
         assert sr.req is not None and sr.req.finish_time is not None, sr.rid
         assert len(sr.output_tokens) == sr.max_new_tokens

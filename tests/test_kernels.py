@@ -96,6 +96,35 @@ def test_ssd_scan(B, S, H, P, N, Q):
     np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=2e-4, atol=2e-4)
 
 
+def test_ssd_scan_chunk_resume_matches_full():
+    """Engine chunked prefill (DESIGN.md §13): the second chunk resumes the
+    scan from the carried h0. Two chained kernel calls must equal one full
+    call — under the mamba2-370m engine shapes (P=32, N=16, chunk=16)."""
+    B, S, H, P, N, Q = 2, 64, 2, 32, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    la = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.5
+    Bm = jax.random.normal(ks[2], (B, S, H, N)) * 0.3
+    Cm = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+    y_full, h_full = ssd_scan_op(x, la, Bm, Cm, chunk=Q, interpret=True)
+    cut = S // 2
+    y1, h1 = ssd_scan_op(x[:, :cut], la[:, :cut], Bm[:, :cut], Cm[:, :cut],
+                         chunk=Q, interpret=True)
+    y2, h2 = ssd_scan_op(x[:, cut:], la[:, cut:], Bm[:, cut:], Cm[:, cut:],
+                         chunk=Q, h0=h1, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=2e-4, atol=2e-4)
+    # and the resumed half agrees with the oracle seeded the same way
+    yr, hr = ssd_scan_ref(x[:, cut:], la[:, cut:], Bm[:, cut:], Cm[:, cut:],
+                          h0=h1)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(hr),
+                               rtol=2e-4, atol=2e-4)
+
+
 # --------------------------------------------------------------- rglru_scan
 
 
@@ -114,6 +143,25 @@ def test_rglru_scan(B, S, W, bs, bw, with_h0):
     yr, hr = rglru_scan_ref(la, b, h0)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-5, atol=1e-5)
+
+
+def test_rglru_scan_chunk_resume_matches_full():
+    """Chained chunks with carried h0 equal one full scan — the hybrid
+    engine's chunked-prefill resume path (DESIGN.md §13)."""
+    B, S, W, bs, bw = 2, 64, 256, 16, 128
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    la = -jnp.abs(jax.random.normal(ks[0], (B, S, W))) * 0.3
+    b = jax.random.normal(ks[1], (B, S, W))
+    y_full, h_full = rglru_scan_op(la, b, None, bs=bs, bw=bw, interpret=True)
+    cut = S // 2
+    y1, h1 = rglru_scan_op(la[:, :cut], b[:, :cut], None,
+                           bs=bs, bw=bw, interpret=True)
+    y2, h2 = rglru_scan_op(la[:, cut:], b[:, cut:], h1,
+                           bs=bs, bw=bw, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], axis=1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-5, atol=1e-5)
 
 
 # ----------------------------------------------- model-path ⇄ kernel parity

@@ -81,6 +81,48 @@ def test_predictor_linear_workload_degrades_gracefully():
     assert pred.predict(8000) == pytest.approx(0.17, rel=1e-2)
 
 
+def test_predictor_concave_samples_refit_linear():
+    """Regression: concave profiling data (saturating runtime, e.g. a
+    memory-bound short-context sweep) used to fit a < 0, whose quadratic
+    peaks *inside* the profiled range — suffix chunks beyond the peak
+    clamped to 0 and silently corrupted chunked-prefill cost accounting.
+    ``fit`` must refit linear with a = 0 instead."""
+    samples = [(1024, 1.0), (2048, 1.4), (4096, 1.75),
+               (8192, 1.95), (16384, 2.0)]
+    # the raw quadratic really is adversarial: its apex sits inside the range
+    import numpy as np
+    L = np.asarray([s[0] for s in samples], float)
+    t = np.asarray([s[1] for s in samples], float)
+    A = np.stack([L * L, L, np.ones_like(L)], axis=1)
+    (a_raw, b_raw, _), *_ = np.linalg.lstsq(A, t, rcond=None)
+    assert a_raw < 0 and 0 < -b_raw / (2 * a_raw) < 16384
+
+    pred = TTFTPredictor.fit(samples)
+    a, b, c = pred.coeffs
+    assert a == 0.0 and b > 0.0
+    # monotone: every suffix chunk costs > 0 (the old clamp returned 0.0
+    # for chunks past the apex), and predictions never decrease in L
+    assert pred.predict_chunk(12288, 4096) > 0.0
+    prev = 0.0
+    for L in (1024, 4096, 16384, 65536):
+        cur = pred.predict(L)
+        assert cur >= prev >= 0.0
+        prev = cur
+
+
+def test_fit_per_instance_rejects_empty_mapping():
+    """Regression: an empty profiling mapping used to crash deep inside
+    ``next(iter(...))`` with a bare StopIteration; it must fail fast with
+    an actionable message."""
+    from repro.core.ttft_predictor import PerInstancePredictor
+    with pytest.raises(ValueError, match="empty samples_by_iid"):
+        PerInstancePredictor.fit_per_instance({})
+    # the non-empty path still works and keys per-instance predictors
+    p = PerInstancePredictor.fit_per_instance(
+        {7: [(0, 0.0), (1000, 0.1), (2000, 0.3), (4000, 1.0)]})
+    assert p.for_instance(7).predict(2000) > 0.0
+
+
 # -------------------------------------------------------------- algorithm 1
 
 

@@ -4,11 +4,22 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.serving import replay_trace
 from repro.core.slo import SLO
 from repro.sim import Simulator
+from repro.sim.simulator import SimResult
 from repro.traces import TRACE_PRESETS, load_trace, trace_stats
 
 CFG = get_config("gemma-2b")
+
+
+def drain_result(sim) -> SimResult:
+    """Drain through the ServingSystem API and snapshot the legacy
+    SimResult view (per-request records + attainment/flips) the assertions
+    below read — the deprecated ``Simulator.run`` shim returned the same."""
+    sim.drain()
+    return SimResult(list(sim.requests.values()), sim.slo,
+                     flips=sim.pools.flips, sim_time=sim.clock.now())
 
 
 def run(policy, rate, trace_name="azure_code", duration=90, **kw):
@@ -16,7 +27,8 @@ def run(policy, rate, trace_name="azure_code", duration=90, **kw):
     p = TRACE_PRESETS[trace_name]
     sim = Simulator(CFG, n_instances=8, n_prefill=4, policy=policy,
                     slo=SLO(p.slo_ttft, p.slo_tpot), **kw)
-    return sim.run(trace), trace
+    replay_trace(sim, trace)
+    return drain_result(sim), trace
 
 
 @pytest.mark.parametrize("policy", ["arrow", "minimal_load", "round_robin",
@@ -100,7 +112,8 @@ def test_prefill_load_leads_decode_load():
         decode_hist.append((now, d))
 
     sim.policy.on_monitor_tick = tick
-    sim.run(burst)
+    replay_trace(sim, burst)
+    sim.drain()
     tp = max(prefill_hist, key=lambda x: x[1])[0]
     td = max(decode_hist, key=lambda x: x[1])[0]
     assert tp < td    # prefill peak strictly earlier
@@ -113,7 +126,8 @@ def test_flip_latency_degrades_attainment():
     trace = load_trace("azure_code", rate_scale=16.0, seed=0, duration=90)
     sim = Simulator(CFG, n_instances=8, n_prefill=4, policy="arrow",
                     slo=SLO(3.0, 0.1), flip_latency=30.0)
-    res_slow = sim.run(trace)
+    replay_trace(sim, trace)
+    res_slow = drain_result(sim)
     assert res_free.attainment >= res_slow.attainment
 
 
@@ -131,7 +145,8 @@ def test_heterogeneous_cluster_prefers_fast_instances():
     trace = load_trace("azure_code", rate_scale=8.0, seed=0, duration=60)
     sim = Simulator(CFG, n_instances=8, n_prefill=4, policy="arrow",
                     slo=SLO(3.0, 0.1), profiles=profiles)
-    res = sim.run(trace)
+    replay_trace(sim, trace)
+    res = drain_result(sim)
     assert all(r.finish_time is not None for r in res.requests)
     counts = {i: 0 for i in range(8)}
     for r in res.requests:
@@ -152,6 +167,7 @@ def test_scalability_more_instances_help():
     for n in (4, 8, 16):
         sim = Simulator(CFG, n_instances=n, n_prefill=n // 2, policy="arrow",
                         slo=SLO(3.0, 0.1))
-        outs.append(sim.run(trace).attainment)
+        replay_trace(sim, trace)
+        outs.append(drain_result(sim).attainment)
     assert outs[0] <= outs[1] + 0.02 and outs[1] <= outs[2] + 0.02
     assert outs[2] > outs[0]
