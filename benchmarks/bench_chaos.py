@@ -1,0 +1,214 @@
+"""Self-healing chaos study (DESIGN.md §14): goodput under a combined
+slowdown + dropped-transfer + crash storm, with the health layer on versus a
+detection-off control.
+
+Two deterministic simulator runs per rate point on the spike trace, both
+under ``arrow_elastic`` with the *same* fault plan:
+
+  * healing  — ``--health`` on: the straggler is quarantined and drained
+               after ``sustain_s``, dropped transfers climb the retry
+               ladder, and the memory gate may preempt (§14)
+  * control  — detection off: the straggler keeps its residents for the
+               whole slow window and every dropped transfer falls straight
+               through to re-prefill recovery
+
+Reported per point: attainment, goodput, quarantine/restore/retry counts,
+and the healing:control goodput ratio. The headline asserts healing goodput
+strictly above the control at every point, that at least one quarantine
+fired and every quarantined instance returned to ACTIVE — the §14
+self-healing loop, end to end, or the bench fails.
+
+The engine leg replays a small chaos plan (transfer drops + netslow + a
+crash) on the real cluster and asserts every stream — greedy *and*
+seeded-sampled — is bit-identical to the fault-free sequential reference:
+recovery and retries may change *when* tokens appear, never *which* tokens
+(the §12 replay guarantee extended across §14 healing).
+
+CSV contract: name,us_per_call,derived. Full curves go to
+results/chaos.json.
+
+  PYTHONPATH=src python benchmarks/bench_chaos.py
+  PYTHONPATH=src python benchmarks/bench_chaos.py --smoke   # CI docs job
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+if __package__ in (None, ""):       # `python benchmarks/bench_chaos.py`
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, save_json
+from repro.configs import get_config
+from repro.core import HealthConfig
+from repro.core.autoscaler import AutoScalerConfig
+from repro.core.faults import FaultPlan
+from repro.core.serving import replay_trace
+from repro.core.slo import SLO
+from repro.sim import Simulator
+from repro.traces import TRACE_PRESETS, load_trace
+
+RATES = [4.0, 5.0]
+# instance 4 sits in the decode pool (prefill is 0..2): the slowdown is
+# pinned there so the straggler is always detectable from decode intervals
+PLAN = ("slow@10:factor=8,duration=20,target=4;"
+        "droptransfer@15:p=0.6,duration=10;"
+        "crash@30")
+HEALTH = HealthConfig(sustain_s=1.0, probation_s=2.0,
+                      xfer_backoff_s=0.05, preemption=True)
+
+
+def run_point(cfg, rate: float, healing: bool, duration: float):
+    p = TRACE_PRESETS["spike"]
+    trace = load_trace("spike", rate_scale=rate, seed=0, duration=duration)
+    sim = Simulator(cfg, n_instances=6, n_prefill=3, policy="arrow_elastic",
+                    slo=SLO(p.slo_ttft, p.slo_tpot),
+                    autoscaler_cfg=AutoScalerConfig(min_instances=2,
+                                                    max_instances=12),
+                    fault_plan=FaultPlan.parse(PLAN),
+                    health=HEALTH if healing else False)
+    replay_trace(sim, trace)
+    report = sim.drain()
+    assert not sim.pools.degraded_ids(), \
+        "an instance was left quarantined after drain"
+    span = max(report.duration, 1e-9)
+    good = sum(1 for h in report.handles if h.meets_slo())
+    h = report.health
+    return {
+        "rate_scale": rate,
+        "n_requests": len(trace),
+        "n_finished": report.n_finished,
+        "attainment": report.attainment,
+        "goodput_req_s": good / span,
+        "quarantines": h.get("quarantines", 0),
+        "restores": h.get("restores", 0),
+        "xfer_retries": h.get("xfer_retries", 0),
+        "xfer_failures": h.get("xfer_failures", 0),
+        "preemptions": h.get("preemptions", 0),
+        "recovered": report.faults.get("requests_recovered", 0),
+    }
+
+
+def run_engine_leg():
+    """Real-cluster chaos replay: transfer drops + netslow + a crash under
+    the health layer, every stream (greedy and seeded-sampled) bit-identical
+    to the fault-free sequential reference."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import Request, SamplingParams
+    from repro.engine import ArrowEngineCluster, EngineInstance
+    from repro.models import build_model
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    run_seed, n, out_len = 3, 6, 12
+    rng = np.random.default_rng(5)
+    prompts = {i: rng.integers(1, cfg.vocab_size, size=16).astype(np.int32)
+               for i in range(n)}
+    sp = SamplingParams(temperature=0.8, top_p=0.9)
+
+    eng = ArrowEngineCluster(
+        cfg, n_instances=3, n_prefill=1, n_slots=4, capacity=128,
+        slo=SLO(5.0, 2.0), params=params, seed=run_seed,
+        health=HealthConfig(xfer_backoff_s=0.01),
+        fault_plan=FaultPlan.parse("droptransfer@0.05:p=0.7,duration=1;"
+                                   "netslow@0.2:factor=3,duration=1;"
+                                   "crash@1.0:target=2"))
+    handles = [eng.submit(Request(rid=i, arrival=0.0, input_len=16,
+                                  output_len=out_len,
+                                  sampling=sp if i % 2 else None),
+                          prompt=prompts[i]) for i in range(n)]
+    report = eng.drain(timeout=300.0)
+    assert report.n_finished == n, "engine chaos leg lost requests"
+
+    ref = EngineInstance(99, cfg, params, n_slots=4, capacity=128,
+                         run_seed=run_seed)
+    mismatches = 0
+    for h in handles:
+        if h.rid % 2:
+            ref.set_sampling(h.rid, sp)
+        got = [ref.run_prefill(h.rid, prompts[h.rid])]
+        ref.local.start_local_decode(h.rid, len(prompts[h.rid]), out_len - 1)
+        for _ in range(out_len - 1):
+            got.append(ref.run_decode_iteration([h.rid])[h.rid])
+        if [int(t) for t in h.tokens] != got:
+            mismatches += 1
+        ref.drop(h.rid)
+    hd = report.health
+    return {
+        "n_requests": n,
+        "n_sampled": n // 2,
+        "mismatched_streams": mismatches,
+        "xfer_drops": hd.get("xfer_drops", 0),
+        "xfer_retries": hd.get("xfer_retries", 0),
+        "crashes": report.faults.get("crashes", 0),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--rates", nargs="*", type=float, default=RATES)
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="trace duration (seconds at scale 1.0)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single fast point (CI docs job)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.rates = [4.0]
+
+    cfg = get_config(args.arch)
+    out = {}
+    for mode, healing in (("healing", True), ("control", False)):
+        curve = []
+        with Timer() as t:
+            for rate in args.rates:
+                curve.append(run_point(cfg, rate, healing, args.duration))
+        out[mode] = curve
+        for pt in curve:
+            emit(f"chaos.spike.{mode}.x{pt['rate_scale']:g}",
+                 t.us / len(curve),
+                 f"attainment={pt['attainment']:.3f};"
+                 f"goodput={pt['goodput_req_s']:.2f}req/s;"
+                 f"finished={pt['n_finished']}/{pt['n_requests']};"
+                 f"quarantines={pt['quarantines']:.0f};"
+                 f"retries={pt['xfer_retries']:.0f}")
+    # headline: the self-healing loop must pay for itself at every point
+    for heal, ctl in zip(out["healing"], out["control"]):
+        assert heal["n_finished"] == heal["n_requests"], \
+            "healing run lost requests"
+        assert heal["quarantines"] >= 1, "no quarantine fired — plan is stale"
+        assert heal["restores"] >= heal["quarantines"], \
+            "a quarantined instance never returned to ACTIVE"
+        assert heal["goodput_req_s"] > ctl["goodput_req_s"], (
+            f"healing did not beat detection-off control at "
+            f"x{heal['rate_scale']:g}: {heal['goodput_req_s']:.3f} <= "
+            f"{ctl['goodput_req_s']:.3f}")
+        ratio = heal["goodput_req_s"] / max(ctl["goodput_req_s"], 1e-9)
+        emit(f"chaos.spike.headline.x{heal['rate_scale']:g}", 0.0,
+             f"goodput_gain={ratio:.2f}x;"
+             f"quarantines={heal['quarantines']:.0f};"
+             f"restores={heal['restores']:.0f};"
+             f"retries={heal['xfer_retries']:.0f};"
+             f"preemptions={heal['preemptions']:.0f}")
+
+    with Timer() as t:
+        eng = run_engine_leg()
+    out["engine"] = eng
+    assert eng["mismatched_streams"] == 0, \
+        "a healed engine stream diverged from the fault-free reference"
+    emit("chaos.engine.identity", t.us,
+         f"streams={eng['n_requests']}({eng['n_sampled']}sampled);"
+         f"mismatched={eng['mismatched_streams']};"
+         f"drops={eng['xfer_drops']:.0f};retries={eng['xfer_retries']:.0f};"
+         f"crashes={eng['crashes']:.0f}")
+    if not args.smoke:
+        save_json("chaos", out)
+
+
+if __name__ == "__main__":
+    main()

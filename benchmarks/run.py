@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   (ours)   bench_deflection        cross-pool prefill deflection vs flip-only (DESIGN §11)
   (ours)   bench_prefix            prefix-aware KV reuse on multi-turn (DESIGN §7)
   (ours)   bench_faults            goodput under crashes vs no-recovery (DESIGN §8)
+  (ours)   bench_chaos             self-healing vs detection-off under chaos (DESIGN §14)
   (ours)   bench_engine_step       fused+donated engine step vs per-rid path (DESIGN §9)
   (ours)   bench_speculative       self-speculative decode vs sequential (DESIGN §12)
   (ours)   bench_ssm               SSM/recurrent decode-state serving economics (DESIGN §13)
@@ -27,9 +28,9 @@ def main() -> None:
     fast = os.environ.get("BENCH_FAST", "")
     duration = "60" if fast else "120"
 
-    from benchmarks import (bench_ablation, bench_deflection, bench_e2e,
-                            bench_elastic, bench_engine_step, bench_faults,
-                            bench_flip_latency, bench_kernels,
+    from benchmarks import (bench_ablation, bench_chaos, bench_deflection,
+                            bench_e2e, bench_elastic, bench_engine_step,
+                            bench_faults, bench_flip_latency, bench_kernels,
                             bench_load_difference, bench_prefix,
                             bench_scalability, bench_speculative,
                             bench_ssm, bench_tenants, bench_trace_stats)
@@ -44,6 +45,7 @@ def main() -> None:
     bench_deflection.main(["--duration", duration])
     bench_prefix.main(["--duration", duration])
     bench_faults.main([])
+    bench_chaos.main(["--smoke"] if fast else [])
     # needs its full 120 s window: the FIFO collapse the headline asserts
     # takes that long to build, so BENCH_FAST does not shorten it
     bench_tenants.main([])

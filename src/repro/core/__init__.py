@@ -10,6 +10,7 @@ from repro.core.global_scheduler import (DeflectionConfig,  # noqa: F401
                                          DeflectionPolicy, GlobalScheduler,
                                          NoSchedulableInstance,
                                          ScheduleOutcome)
+from repro.core.health import HealthConfig, HealthMonitor  # noqa: F401
 from repro.core.local_scheduler import IterationPlan, LocalScheduler  # noqa: F401
 from repro.core.monitor import InstanceMonitor, InstanceStats  # noqa: F401
 from repro.core.policies import POLICIES  # noqa: F401

@@ -166,8 +166,12 @@ class AutoScaler:
             return
         # n_live counts warming instances: capacity already on its way up
         # must damp further scale-ups (classic thundering-herd guard).
+        # Quarantined (DEGRADED, §14) instances are not serving capacity —
+        # provisioning around a sick instance must not be blocked by its
+        # headcount.
         if self._up_streak >= cfg.up_patience and \
-                sig.n_live - len(self.runtime.pools.retiring_ids()) < \
+                sig.n_live - len(self.runtime.pools.retiring_ids()) \
+                - len(self.runtime.pools.degraded_ids()) < \
                 cfg.max_instances:
             self._scale_up(now, sig)
         elif self._down_streak >= cfg.down_patience and \

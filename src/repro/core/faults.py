@@ -15,11 +15,17 @@ Event grammar (``--fault-plan``, ``FaultPlan.parse``)::
     crash@20                    crash a seed-chosen ACTIVE instance at t=20
     crash@45:target=3           crash instance 3 at t=45
     slow@60:factor=4,duration=5 run 4x slower for 5 s from t=60
+    droptransfer@30:p=0.5,duration=10   each transfer attempt started in
+                                the window fails with probability p (§14)
+    netslow@30:factor=8,duration=10     transfers run 8x slower (§14)
 
 Events are separated by ``;``. Target selection without an explicit
 ``target=`` draws from the sorted ACTIVE set with the plan's seeded RNG, so
 the same plan picks the same victims given the same membership history —
-deterministic on the simulator, reproducible on the engine.
+deterministic on the simulator, reproducible on the engine. The transfer
+faults (droptransfer/netslow) are cluster-wide interconnect windows — no
+victim is drawn, so adding them to a plan never perturbs the RNG stream of
+its targeted events.
 
 ``recovery=False`` turns the plan into the no-recovery strawman
 (``benchmarks/bench_faults.py``): crashed instances still tear down, but
@@ -34,7 +40,8 @@ import numpy as np
 
 from repro.core.pools import Lifecycle
 
-KINDS = ("crash", "slow")
+KINDS = ("crash", "slow", "droptransfer", "netslow")
+CLUSTER_KINDS = ("droptransfer", "netslow")   # interconnect-wide: no victim
 
 
 @dataclass(frozen=True)
@@ -42,15 +49,25 @@ class FaultEvent:
     """One scripted fault."""
 
     t: float                       # system-clock seconds
-    kind: str = "crash"            # "crash" | "slow"
+    kind: str = "crash"            # "crash"|"slow"|"droptransfer"|"netslow"
     target: Optional[int] = None   # iid; None = seed-deterministic pick
-    factor: float = 4.0            # slow: iteration-time multiplier
-    duration: float = 5.0          # slow: seconds the slowdown lasts
+    factor: float = 4.0            # slow/netslow: time multiplier
+    duration: float = 5.0          # slow/droptransfer/netslow: window length
+    p: float = 0.5                 # droptransfer: per-attempt drop probability
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"choose from {KINDS}")
+        if self.t < 0:
+            raise ValueError(f"fault event at t={self.t}: time must be >= 0")
+        for name, v in (("factor", self.factor), ("duration", self.duration),
+                        ("p", self.p)):
+            if v <= 0:
+                raise ValueError(
+                    f"fault event {self.kind}@{self.t:g}: {name}={v} must "
+                    f"be > 0 (a non-positive {name} would never fire or "
+                    f"divide by zero downstream)")
 
 
 @dataclass(frozen=True)
@@ -76,7 +93,7 @@ class FaultPlan:
                 k, _, v = opt.partition("=")
                 if k == "target":
                     kw["target"] = int(v)
-                elif k in ("factor", "duration"):
+                elif k in ("factor", "duration", "p"):
                     kw[k] = float(v)
                 else:
                     raise ValueError(f"fault event {part!r}: unknown "
@@ -143,6 +160,13 @@ class FaultInjector:
 
     def _fire(self, ev: FaultEvent, now: float) -> None:
         rt = self.runtime
+        if ev.kind in CLUSTER_KINDS:          # interconnect-wide: no victim
+            if ev.kind == "droptransfer":
+                rt.apply_transfer_drop(ev.p, now + ev.duration)
+            else:
+                rt.apply_netslow(ev.factor, now + ev.duration)
+            self.fired.append((now, ev, None))
+            return
         iid = self._pick_target(ev)
         if iid is None:                       # victim gone / nothing ACTIVE
             rt.fault_stats["skipped_events"] += 1

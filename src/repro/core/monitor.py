@@ -64,13 +64,18 @@ class InstanceMonitor:
         tokens. The token-generation interval sample is the *iteration
         duration* (each running request got one token per iteration); gaps
         while an instance sits idle are not decode slowness and must not
-        poison the TPOT signal."""
-        if tokens_emitted > 0:
+        poison the TPOT signal. A straggling record for an instance already
+        removed/failed is dropped silently — the async engine step can
+        finalize an iteration after the crash teardown popped the monitor
+        entry, and a KeyError there would take the whole step loop down."""
+        if tokens_emitted > 0 and iid in self._intervals:
             self._intervals[iid].append(duration)
             self._last_token_at[iid] = now
 
     def update_stats(self, s: InstanceStats) -> None:
-        iv = self._intervals[s.instance_id]
+        iv = self._intervals.get(s.instance_id)
+        if iv is None:          # scrape raced instance removal: drop it
+            return
         s.avg_token_interval = (sum(iv) / len(iv)) if iv else 0.0
         self.stats[s.instance_id] = s
 

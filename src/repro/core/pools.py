@@ -5,8 +5,10 @@ Beyond the paper (DESIGN.md §6): the instance *set* itself is elastic. Each
 instance carries a lifecycle state
 
     WARMING ──activate──▶ ACTIVE ──begin_retire──▶ RETIRING ──remove──▶ (gone)
-       │                    │                         │
-       └────────────────────┴───────fail──────────────┘──remove──▶ (gone)
+       │                    │  ▲                      │
+       │                    │  └─restore─ DEGRADED    │
+       │                    │  ──degrade──▶ │         │
+       └────────────────────┴───────fail────┴─────────┘──remove──▶ (gone)
 
 Only ACTIVE instances are schedulable: ``members``/``prefill_capable``/
 ``decode_capable``/``count`` all restrict themselves to ACTIVE, so the
@@ -21,6 +23,14 @@ AutoScaler's pool accounting. Unlike RETIRING nothing drains — the substrate
 and its resident KV are already gone; the runtime recovers the lost work
 (core/runtime.py ``fail_instance``) and removes the corpse on the next
 monitor tick.
+
+DEGRADED (DESIGN.md §14) is the straggler-quarantine state: the substrate is
+alive but sustained-slow, so it takes no new placements while its decode
+residents are drained away through the migration manager. Unlike RETIRING it
+is reversible — ``restore`` puts a recovered instance back in service — and
+unlike FAILED its KV is intact, so nothing is lost while it sits in
+quarantine. The HealthMonitor (core/health.py) drives both transitions and
+escalates to ``fail`` when quarantine exceeds its deadline.
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ class Lifecycle(enum.Enum):
     WARMING = "warming"    # provisioning/loading weights; not schedulable yet
     ACTIVE = "active"      # schedulable member of its pool
     RETIRING = "retiring"  # draining; accepts no new work, no flips
+    DEGRADED = "degraded"  # quarantined straggler; reversible (§14)
     FAILED = "failed"      # crashed: substrate + resident KV gone (§8)
 
 
@@ -85,6 +96,9 @@ class InstancePools:
 
     def retiring_ids(self) -> List[int]:
         return [i for i, s in self._life.items() if s is Lifecycle.RETIRING]
+
+    def degraded_ids(self) -> List[int]:
+        return [i for i, s in self._life.items() if s is Lifecycle.DEGRADED]
 
     def failed_ids(self) -> List[int]:
         return [i for i, s in self._life.items() if s is Lifecycle.FAILED]
@@ -164,6 +178,22 @@ class InstancePools:
             raise ValueError(f"cannot retire instance {iid}: "
                              f"{self._life[iid].value}")
         self._life[iid] = Lifecycle.RETIRING
+
+    def degrade(self, iid: int) -> None:
+        """ACTIVE → DEGRADED (quarantine, DESIGN.md §14): the instance stops
+        being schedulable while its decode residents drain; reversible via
+        ``restore`` once the straggler signal clears."""
+        if self._life[iid] is not Lifecycle.ACTIVE:
+            raise ValueError(f"cannot quarantine instance {iid}: "
+                             f"{self._life[iid].value}")
+        self._life[iid] = Lifecycle.DEGRADED
+
+    def restore(self, iid: int) -> None:
+        """DEGRADED → ACTIVE: probation passed, back in service."""
+        if self._life[iid] is not Lifecycle.DEGRADED:
+            raise ValueError(f"cannot restore instance {iid}: "
+                             f"{self._life[iid].value}")
+        self._life[iid] = Lifecycle.ACTIVE
 
     def fail(self, iid: int) -> None:
         """Fail-stop crash (DESIGN.md §8): reachable from any live state.

@@ -40,12 +40,14 @@ the AutoScaler spawns replacements when the policy is elastic.
 from __future__ import annotations
 
 import enum
+import random
 from collections import Counter, deque
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.autoscaler import AutoScaler, AutoScalerConfig
 from repro.core.clock import Clock
 from repro.core.faults import FaultInjector, FaultPlan
+from repro.core.health import HealthConfig, HealthMonitor
 from repro.core.global_scheduler import (DeflectionConfig, DeflectionPolicy,
                                          NoSchedulableInstance)
 from repro.core.local_scheduler import LocalScheduler
@@ -87,6 +89,7 @@ class RuntimeCore(ServingSystem):
                       deflection: Optional[DeflectionConfig] = None,
                       run_seed: int = 0,
                       prefix_reuse: str = "block",
+                      health=False,
                       ) -> None:
         ids = list(ids)
         if policy not in POLICIES:
@@ -146,6 +149,26 @@ class RuntimeCore(ServingSystem):
             # backends arm the firing (sim: exact virtual-clock events;
             # engine: polled every cooperative pass)
             self.fault_injector = FaultInjector(fault_plan, self)
+        # ---- self-healing layer (DESIGN.md §14)
+        self.health_cfg: Optional[HealthConfig] = None
+        self.health_monitor: Optional[HealthMonitor] = None
+        if health:
+            self.health_cfg = health if isinstance(health, HealthConfig) \
+                else HealthConfig()
+            self.health_monitor = HealthMonitor(self, self.health_cfg)
+        self.health_stats: Dict[str, float] = {
+            "quarantines": 0, "restores": 0, "escalations": 0,
+            "xfer_retries": 0, "xfer_drops": 0, "xfer_corrupt": 0,
+            "xfer_failures": 0, "preemptions": 0, "preempt_refused": 0}
+        # transient transfer-fault windows (droptransfer/netslow, §14) —
+        # cluster-wide, self-expiring like _slowdowns
+        self._xfer_drop: Optional[Tuple[float, float]] = None  # (p, until)
+        self._netslow: Optional[Tuple[float, float]] = None    # (f, until)
+        # dedicated RNG for drop decisions: drawn only while a window is
+        # active, so fault-free runs never consume it (replayability)
+        self._xfer_rng = random.Random(run_seed + 0x7EA1)
+        self._xfer_attempts: Dict[int, int] = {}   # rid -> failed attempts
+        self._preempt_log: Dict[int, deque] = {}   # iid -> recent preempt ts
         # ---- deferred dispatch: multi-turn parent gating + the no-ACTIVE-
         # instance queue (both retried through the backend's _arrival_due)
         self._gated: Dict[int, list] = {}       # parent rid -> waiting rids
@@ -608,6 +631,10 @@ class RuntimeCore(ServingSystem):
                     if need > 0 and \
                             self.prefix_mgr.make_room(iid, need) > 0:
                         continue
+                # still blocked and no eviction helped: SLO-aware preemption
+                # (§14) releases the lowest-value decode resident
+                if loc.migration_queue and self._maybe_preempt(iid, loc):
+                    continue
                 return
             rid, kv, rem = item
             if rid not in self.handles:        # stale entry: drop it
@@ -649,6 +676,7 @@ class RuntimeCore(ServingSystem):
         self._migrating_from.pop(rid, None)
         self._transfers.pop(rid, None)
         self._migration_kv.pop(rid, None)
+        self._xfer_attempts.pop(rid, None)
         if src is not None and src != dst:
             self._release_source_kv(src, rid, kv)
         if src is not None and self._kv_outbound[src] > 0:
@@ -703,14 +731,21 @@ class RuntimeCore(ServingSystem):
             # than migrate — pinned entries (a copy-on-extend in flight on
             # this very instance) are doomed and freed on the last unpin
             self.prefix_mgr.invalidate_instance(iid)
+        self._evacuate_residents(iid)
+
+    def _evacuate_residents(self, iid: int) -> None:
+        """Drain ``iid``'s migratable state through the FCFS migration
+        manager: re-dispatch its queued (never-admitted) inbound migrations —
+        their KV is still elsewhere, only the queue entry moves — and migrate
+        its KV-resident decode requests away (source KV stays resident until
+        the transfer lands, exactly like a post-prefill migration). Shared by
+        retirement (§6) and straggler quarantine (§14); prefill work drains
+        in place either way."""
+        self._quiesce_for_evacuation(iid)
         loc = self.local_of(iid)
-        # queued (never-admitted) inbound migrations: KV is still elsewhere,
-        # only the queue entry moves to a new destination.
         redispatch = []
         while loc.migration_queue:
             redispatch.append(loc.migration_queue.popleft())
-        # KV-resident decode requests: migrate away (source KV stays resident
-        # until the transfer lands, exactly like a post-prefill migration).
         for rid in list(loc.decode_running):
             w = loc.decode_running.pop(rid)
             req = self.handles[rid].req
@@ -726,6 +761,11 @@ class RuntimeCore(ServingSystem):
             self._route_evacuation(rid, kv, rem, evac_load, targets)
         for dst in targets:
             self.admit_migrations(dst)
+
+    def _quiesce_for_evacuation(self, iid: int) -> None:
+        """Backend hook: settle any in-flight iteration on ``iid`` before its
+        decode set is popped for evacuation (the engine force-finalizes the
+        pending fused step; the sim's event loop needs nothing)."""
 
     def _route_evacuation(self, rid: int, kv: int, rem: int,
                           evac_load: Counter, targets: set) -> None:
@@ -797,6 +837,9 @@ class RuntimeCore(ServingSystem):
         self._instance_seconds_closed += now - self._spawned_at.pop(iid)
         self._kv_outbound.pop(iid, None)
         self._kv_inbound.pop(iid, None)
+        self._preempt_log.pop(iid, None)
+        if self.health_monitor is not None:
+            self.health_monitor.forget(iid)
         self._destroy_instance(iid)
 
     def _arm_deflect(self, iid: int) -> None:
@@ -847,6 +890,9 @@ class RuntimeCore(ServingSystem):
         self.fault_stats["crashes"] += 1
         self._retire_started.pop(iid, None)    # a retiring instance may crash
         self._slowdowns.pop(iid, None)
+        self._preempt_log.pop(iid, None)
+        if self.health_monitor is not None:    # quarantine state dies with it
+            self.health_monitor.forget(iid)
         loc = self.local_of(iid)
         self._harvest_deflect(loc)   # bank before the substrate is torn down
         # ---- 0. sever historical prefill pointers: a request whose KV
@@ -994,6 +1040,7 @@ class RuntimeCore(ServingSystem):
         req.cached_len = 0
         req.prefill_done_tokens = 0
         self._migrating_from.pop(rid, None)
+        self._xfer_attempts.pop(rid, None)
         src = self._prefix_src.pop(rid, None)
         if src is not None and self.prefix_mgr is not None:
             self.prefix_mgr.unpin(src[0], src[1])   # frees a doomed source
@@ -1016,12 +1063,169 @@ class RuntimeCore(ServingSystem):
             return 1.0
         return factor
 
+    # ------------------------------------- self-healing layer (DESIGN.md §14)
+    def quarantine_instance(self, iid: int, now: float) -> None:
+        """ACTIVE → DEGRADED: the HealthMonitor flagged ``iid`` as a
+        sustained straggler. No new work lands on it; its decode residents
+        are drained away through the FCFS migration manager (their KV is
+        intact — this is a planned move, not a crash); prefill it already
+        holds drains in place. The interval window is cleared so the stale
+        slow samples cannot re-trip detection right after probation."""
+        self.pools.degrade(iid)
+        self.health_stats["quarantines"] += 1
+        self.monitor.reset_intervals(iid)
+        self._evacuate_residents(iid)
+
+    def restore_instance(self, iid: int, now: float) -> None:
+        """DEGRADED → ACTIVE (probation passed): back in the schedulable
+        set. Requests parked while nothing was ACTIVE retry now, mirroring
+        ``activate_instance``."""
+        self.pools.restore(iid)
+        self.health_stats["restores"] += 1
+        self.monitor.reset_intervals(iid)
+        self._instance_ready(iid)
+        while self._unplaced:
+            self._arrival_due(self._unplaced.popleft())
+
+    def escalate_unhealthy(self, iid: int, now: float) -> None:
+        """Quarantine deadline expired — the instance kept relapsing: treat
+        it as a hard fault (teardown + recovery + replacement, §8)."""
+        self.health_stats["escalations"] += 1
+        if self.health_monitor is not None:
+            self.health_monitor.forget(iid)
+        self.fail_instance(iid, now)
+
+    def apply_transfer_drop(self, p: float, until: float) -> None:
+        """Transient network fault window (§14): each migration transfer
+        attempt started before ``until`` fails with probability ``p``."""
+        self._xfer_drop = (p, until)
+
+    def apply_netslow(self, factor: float, until: float) -> None:
+        """Degraded interconnect window (§14): transfer durations are
+        multiplied by ``factor`` until the clock passes ``until``."""
+        self._netslow = (factor, until)
+
+    def xfer_should_drop(self, now: float) -> bool:
+        """Decide one transfer attempt's fate under the drop window. The RNG
+        is only consumed while a window is active and 0 < p < 1, so runs
+        without droptransfer events never draw from it."""
+        if self._xfer_drop is None:
+            return False
+        p, until = self._xfer_drop
+        if now >= until:
+            self._xfer_drop = None
+            return False
+        if p >= 1.0:
+            return True
+        return self._xfer_rng.random() < p
+
+    def netslow_factor(self, now: float) -> float:
+        if self._netslow is None:
+            return 1.0
+        factor, until = self._netslow
+        if now >= until:
+            self._netslow = None
+            return 1.0
+        return factor
+
+    def xfer_retry_budget(self) -> int:
+        """Bounded retry attempts per transfer; 0 without ``--health`` (a
+        dropped transfer then falls straight through to re-prefill recovery —
+        the detection-off baseline bench_chaos measures against)."""
+        return self.health_cfg.xfer_retries if self.health_cfg else 0
+
+    def xfer_backoff(self, attempt: int) -> float:
+        """Exponential backoff before retry ``attempt`` (1-based)."""
+        base = self.health_cfg.xfer_backoff_s if self.health_cfg else 0.25
+        return base * (2.0 ** (attempt - 1))
+
+    def note_xfer_drop(self, rid: int) -> int:
+        """One transfer attempt failed (dropped/timed out/corrupt): returns
+        the attempt count so far for backoff computation."""
+        self.health_stats["xfer_drops"] += 1
+        self._xfer_attempts[rid] = self._xfer_attempts.get(rid, 0) + 1
+        return self._xfer_attempts[rid]
+
+    def fail_transfer(self, rid: int, dst: int, kv: int, now: float) -> None:
+        """Retry budget exhausted for ``rid``'s transfer toward ``dst``: give
+        up the move. The surviving source copy is released and the request
+        falls through to the §8 re-prefill recovery path (streams stay
+        token-identical — recovery re-computes prompt ‖ streamed[:-1])."""
+        self._transfers.pop(rid, None)
+        self._xfer_attempts.pop(rid, None)
+        if self._kv_inbound[dst] > 0:
+            self._kv_inbound[dst] -= 1
+        src = self._kv_source(rid)
+        if src is not None:
+            self._release_source_kv(src, rid, kv)
+            if self._kv_outbound[src] > 0:
+                self._kv_outbound[src] -= 1
+        self._migration_kv.pop(rid, None)
+        self.health_stats["xfer_failures"] += 1
+        self._recover_request(rid, now)
+
+    def _maybe_preempt(self, iid: int, loc: LocalScheduler) -> bool:
+        """SLO-aware preemption at the §5.4 memory gate: the head migration
+        is blocked and eviction freed nothing, so release the lowest-value
+        decode resident — ordered by tenant credit balance, SLO tier (batch
+        first), then remaining-length estimate (longest remaining = least
+        sunk progress) — and re-dispatch it through the §8 recovery path
+        (streams stay bit-identical). A per-instance rate limiter keeps
+        degradation graceful rather than thrashing."""
+        cfg = self.health_cfg
+        if cfg is None or not cfg.preemption or not loc.decode_running:
+            return False
+        now = self.clock.now()
+        log = self._preempt_log.setdefault(iid, deque())
+        while log and now - log[0] > cfg.preempt_window_s:
+            log.popleft()
+        if len(log) >= cfg.preempt_limit:
+            self.health_stats["preempt_refused"] += 1
+            return False
+        victim = min(loc.decode_running,
+                     key=lambda rid: self._preemption_key(rid, loc))
+        self._quiesce_for_evacuation(iid)
+        if victim not in loc.decode_running:
+            # the settling step just finished it — its KV is free, retry
+            # the gate without charging the limiter
+            return True
+        w = loc.decode_running.pop(victim)
+        loc.kv_used -= w.context_len
+        self._preempt_release(iid, victim)
+        log.append(now)
+        self.health_stats["preemptions"] += 1
+        self._recover_request(victim, now)
+        return True
+
+    def _preemption_key(self, rid: int, loc: LocalScheduler):
+        handle = self.handles[rid]
+        credits = 0.0
+        if self.tenants is not None and handle.req.tenant_id is not None:
+            credits = self.tenants.credits(handle.req.tenant_id)
+        tier_rank = {"batch": 0, "standard": 1, "interactive": 2}[handle.tier]
+        remaining = loc.decode_running[rid].remaining_out
+        return (credits, tier_rank, -remaining, rid)
+
+    def _preempt_release(self, iid: int, rid: int) -> None:
+        """Backend hook: free the physical decode state of a preempted
+        resident (the engine drops the real slot; the sim holds nothing
+        beyond the LocalScheduler bookkeeping already undone)."""
+
+    def health_detail(self) -> Dict[str, float]:
+        """Self-healing accounting (§14); empty when the layer never acted
+        (so health-off reports stay byte-identical to pre-§14 builds)."""
+        if not any(self.health_stats.values()):
+            return {}
+        return dict(self.health_stats)
+
     def _check_undispatchable(self) -> None:
         """Raise UndispatchableError when queued requests can never dispatch:
-        nothing ACTIVE, nothing WARMING (drain would otherwise hang)."""
+        nothing ACTIVE, nothing WARMING, nothing DEGRADED awaiting probation
+        (drain would otherwise hang)."""
         if not self._unplaced:
             return
-        if self.pools.active_ids() or self.pools.warming_ids():
+        if self.pools.active_ids() or self.pools.warming_ids() or \
+                self.pools.degraded_ids():
             return
         raise UndispatchableError(self._unplaced, self.pools)
 
@@ -1042,6 +1246,10 @@ class RuntimeCore(ServingSystem):
                 kv_tokens_used=loc.kv_used,
                 kv_tokens_capacity=loc.kv_capacity,
             ))
+        if self.health_monitor is not None:
+            # right after the scrape, before scheduling reacts: both
+            # backends see identical post-scrape signals at a barrier (§14)
+            self.health_monitor.tick(now)
         self.policy.on_monitor_tick(now)
         if self.tenants is not None:
             self.tenants.on_tick(now)        # credit accrual (§10)
@@ -1170,6 +1378,7 @@ class RuntimeCore(ServingSystem):
                            scaling=self.scaling_detail(),
                            prefix=self.prefix_detail(),
                            faults=self.fault_detail(),
+                           health=self.health_detail(),
                            admission=self.admission_detail(),
                            deflection=self.deflection_detail(),
                            per_tenant=self.tenant_detail(),

@@ -133,6 +133,11 @@ class ServeReport:
     # recovered/lost, kv_tokens_lost, re_prefill_tokens, migrations_aborted,
     # replacements. Empty when no fault ever fired.
     faults: Dict[str, float] = field(default_factory=dict)
+    # self-healing accounting (DESIGN.md §14): quarantines, restores,
+    # escalations, xfer_retries/drops/corrupt/failures, preemptions,
+    # preempt_refused. Empty when the health layer is off or never acted —
+    # default reports stay byte-identical to pre-health builds.
+    health: Dict[str, float] = field(default_factory=dict)
     # admission accounting (DESIGN.md §10): admitted, deferred, retries,
     # rejected, shed. Empty when admission control is off.
     admission: Dict[str, float] = field(default_factory=dict)
@@ -163,6 +168,7 @@ class ServeReport:
                       "attainment", "flips", "scale_ups", "scale_downs",
                       "instance_s", "prefix_hits", "saved_prefill",
                       "crashes", "recovered", "re_prefill_toks",
+                      "quarantines", "restores", "xfer_retries", "preempted",
                       "admitted", "rejected", "shed", "deflected",
                       "refused", "seed", "sampled", "spec_emitted",
                       "spec_accept", "tenants")
@@ -236,6 +242,11 @@ class ServeReport:
             s += (f" crashes={self.faults['crashes']:.0f}"
                   f" recovered={self.faults['requests_recovered']:.0f}"
                   f" re_prefill_toks={self.faults['re_prefill_tokens']:.0f}")
+        if self.health:
+            s += (f" quarantines={self.health.get('quarantines', 0):.0f}"
+                  f" restores={self.health.get('restores', 0):.0f}"
+                  f" xfer_retries={self.health.get('xfer_retries', 0):.0f}"
+                  f" preempted={self.health.get('preemptions', 0):.0f}")
         if self.admission:
             s += (f" admitted={self.admission.get('admitted', 0):.0f}"
                   f" rejected={self.admission.get('rejected', 0):.0f}"

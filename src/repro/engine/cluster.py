@@ -38,7 +38,8 @@ from repro.core.prefix_index import content_keys, lineage_keys
 from repro.core.runtime import DecodePlacement, RuntimeCore
 from repro.core.serving import (FinishCallback, RequestHandle, ServeReport,
                                 TokenCallback)
-from repro.engine.instance import ChunkWork, EngineInstance, NoFreeSlots
+from repro.engine.instance import (ChunkWork, CorruptPayload, EngineInstance,
+                                   NoFreeSlots, state_checksum)
 from repro.models import build_model
 
 
@@ -65,7 +66,7 @@ class ArrowEngineCluster(RuntimeCore):
                  prefix_cache: bool = False, fault_plan=None,
                  step_mode: str = "fused", tenants=None, admission=False,
                  deflection=None, speculate: int = 0,
-                 draft_layers: Optional[int] = None):
+                 draft_layers: Optional[int] = None, health=False):
         import jax
         self.cfg = cfg
         self.capacity = capacity
@@ -93,6 +94,7 @@ class ArrowEngineCluster(RuntimeCore):
                            prefix_cache=prefix_cache, fault_plan=fault_plan,
                            tenants=tenants, admission=admission,
                            deflection=deflection, run_seed=seed,
+                           health=health,
                            prefix_reuse=next(iter(
                                self.instances.values())).kv.prefix_reuse)
         for i in self.instances:
@@ -143,8 +145,39 @@ class ArrowEngineCluster(RuntimeCore):
         self._finalize_now(dst)
         samp = self.instances[src].kv.samp_of.get(rid)
         payload, L, last, gen = self.instances[src].export_state(rid)
-        if not self.instances[dst].import_state(rid, payload, L, last, gen,
-                                                sampling=samp):
+        # end-to-end integrity (§14): checksum at export, verify at import.
+        # The source slot is retained until complete_migration acknowledges,
+        # so every retry re-sends pristine state.
+        checksum = state_checksum(payload)
+        while True:
+            nf = self.netslow_factor(self.clock.now())
+            if nf > 1.0:                  # degraded interconnect window (§14)
+                time.sleep(min((nf - 1.0) * 1e-3, 0.05))
+            wire = payload
+            if self.xfer_should_drop(self.clock.now()):
+                # a dropped attempt materializes as a corrupt wire image;
+                # corrupt a *copy* so the source arrays stay pristine
+                wire = [np.array(p, copy=True) for p in payload]
+                for p in wire:
+                    if p.size:
+                        p.view(np.uint8).reshape(-1)[0] ^= 0xFF
+                        break
+                self.health_stats["xfer_corrupt"] += 1
+            try:
+                ok = self.instances[dst].import_state(
+                    rid, wire, L, last, gen, sampling=samp, checksum=checksum)
+            except CorruptPayload:
+                attempt = self.note_xfer_drop(rid)
+                if attempt <= self.xfer_retry_budget():
+                    self.health_stats["xfer_retries"] += 1
+                    time.sleep(min(self.xfer_backoff(attempt), 0.05))
+                    continue
+                # retries exhausted: fall through to re-prefill recovery
+                # (§8); the transfer item is consumed, not requeued
+                self.fail_transfer(rid, dst, kv, self.clock.now())
+                return True
+            break
+        if not ok:
             # no free slot: cached prefixes are reclaimable capacity (§7)
             if not (self.prefix_mgr is not None
                     and self.prefix_mgr.evict_one(dst) is not None
@@ -301,12 +334,19 @@ class ArrowEngineCluster(RuntimeCore):
         self._prompts.pop(handle.req.rid, None)   # keys computed; free it
 
     # ------------------------------------- elastic lifecycle hooks (§6)
-    def begin_retire(self, iid: int, now: float) -> None:
+    def _quiesce_for_evacuation(self, iid: int) -> None:
         # land any inflight async step first: its decode tokens belong to
-        # requests that retirement is about to flip to MIGRATING (and pop
-        # from the local scheduler) — emit them before the state moves
+        # requests that evacuation (retirement or quarantine, §14) is about
+        # to flip to MIGRATING (and pop from the local scheduler) — emit
+        # them before the state moves
         self._finalize_now(iid)
-        super().begin_retire(iid, now)
+
+    def _preempt_release(self, iid: int, rid: int) -> None:
+        # SLO-aware preemption (§14): the victim's real slot is freed; its
+        # stream resumes through the re-prefill recovery path
+        inst = self.instances.get(iid)
+        if inst is not None:
+            inst.drop(rid)
 
     def _create_instance(self, iid: int) -> float:
         """Spawn a real EngineInstance; params are shared by reference and

@@ -17,6 +17,7 @@ baseline (benchmarks/bench_engine_step.py).
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -29,6 +30,30 @@ from repro.core.local_scheduler import LocalScheduler
 from repro.engine import fused_step as fs
 from repro.engine.state_slots import make_state_slots
 from repro.models import build_model
+
+
+class CorruptPayload(RuntimeError):
+    """Typed transfer-integrity failure (DESIGN.md §14): the migration
+    payload's checksum does not match what the exporter computed. Raised by
+    ``import_state`` *before* any slot is allocated, so the importer's state
+    is untouched; the cluster treats it as a failed transfer attempt and
+    retries (source KV is retained until acknowledged)."""
+
+    def __init__(self, iid: int, rid: int):
+        super().__init__(f"instance {iid}: corrupt migration payload for "
+                         f"rid {rid}")
+        self.iid = iid
+        self.rid = rid
+
+
+def state_checksum(payload) -> int:
+    """CRC32 over the migration payload's raw bytes, chained across arrays.
+    Computed at ``export_state`` time and verified at ``import_state`` time —
+    the end-to-end integrity check the §14 retry ladder keys off."""
+    crc = 0
+    for p in payload:
+        crc = zlib.crc32(np.asarray(p).tobytes(), crc)
+    return crc
 
 
 class NoFreeSlots(RuntimeError):
@@ -518,7 +543,12 @@ class EngineInstance:
         return payload, L, self.last_token[rid], self.generated[rid]
 
     def import_state(self, rid: int, payload, L: int, last_token: int,
-                     generated: List[int], sampling=None) -> bool:
+                     generated: List[int], sampling=None,
+                     checksum: Optional[int] = None) -> bool:
+        # Verify before alloc so a corrupt payload leaves the importer's
+        # state untouched and the sender can simply retry (DESIGN.md §14).
+        if checksum is not None and state_checksum(payload) != checksum:
+            raise CorruptPayload(self.iid, rid)
         if self.kv.alloc(rid) is None:
             return False
         if sampling is not None:

@@ -122,7 +122,8 @@ def run_engine(args) -> ServeReport:
                                  fault_plan=fault_plan(args),
                                  tenants=tenant_registry(args),
                                  admission=args.admission == "on",
-                                 deflection=deflection_cfg(args))
+                                 deflection=deflection_cfg(args),
+                                 health=health_cfg(args))
     if args.trace:
         from repro.traces import load_trace
         trace = load_trace(args.trace, rate_scale=args.rate, seed=0,
@@ -152,7 +153,8 @@ def run_sim(args) -> ServeReport:
                     fault_plan=fault_plan(args),
                     tenants=tenant_registry(args),
                     admission=args.admission == "on",
-                    deflection=deflection_cfg(args))
+                    deflection=deflection_cfg(args),
+                    health=health_cfg(args))
     trace = apply_sampling(trace, args)
     # no timeout: --timeout is wall-clock; the sim's drain limit is virtual
     # time and must cover the whole trace
@@ -191,6 +193,24 @@ def deflection_cfg(args):
         **base.__dict__,
         "ratio": base.ratio if args.deflect_ratio is None
         else args.deflect_ratio,
+    })
+
+
+def health_cfg(args):
+    """Build the self-healing layer's config (DESIGN.md §14); None/False
+    keeps the layer off — byte-identical to pre-health builds. ``--preemption
+    on`` implies ``--health on`` (preemption rides the health config)."""
+    if args.health != "on" and args.preemption != "on":
+        return False
+    from repro.core.health import HealthConfig
+    base = HealthConfig()
+    return HealthConfig(**{
+        **base.__dict__,
+        "straggler_factor": base.straggler_factor
+        if args.quarantine_factor is None else args.quarantine_factor,
+        "sustain_s": base.sustain_s
+        if args.quarantine_sustain is None else args.quarantine_sustain,
+        "preemption": args.preemption == "on",
     })
 
 
@@ -285,6 +305,33 @@ def build_parser() -> argparse.ArgumentParser:
                          "victim's mixed-chunk budget (default 0.25; 0 "
                          "disables deflection — byte-identical to "
                          "arrow_elastic). Implies --deflection on")
+    ap.add_argument("--health", choices=("on", "off"), default="off",
+                    help="self-healing layer (DESIGN.md §14): straggler "
+                         "detection against the fleet-median TPOT, "
+                         "quarantine (DEGRADED — never schedulable, decode "
+                         "residents drained), probation back to ACTIVE when "
+                         "the signal clears, escalation to a crash after "
+                         "the quarantine deadline; also arms the transfer "
+                         "retry ladder (checksummed migrations, bounded "
+                         "exponential backoff). Off = byte-identical to "
+                         "pre-health builds")
+    ap.add_argument("--quarantine-factor", type=float, default=None,
+                    help="§14 straggler threshold: quarantine when an "
+                         "instance's recent token interval sustains above "
+                         "this multiple of the fleet median (default 3.0; "
+                         "hysteresis clears at 1.5x)")
+    ap.add_argument("--quarantine-sustain", type=float, default=None,
+                    help="§14 sustain window: seconds the straggler signal "
+                         "must persist before quarantine (default 2.0; "
+                         "transients shorter than this never quarantine)")
+    ap.add_argument("--preemption", choices=("on", "off"), default="off",
+                    help="SLO-aware preemption (DESIGN.md §14): when the "
+                         "§5.4 memory gate refuses a migration and eviction "
+                         "cannot free enough KV, preempt the lowest-value "
+                         "decode resident (by tenant credits, then tier, "
+                         "then remaining length) and re-dispatch it through "
+                         "crash recovery — streams stay bit-identical. "
+                         "Rate-limited per instance; implies --health on")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (DESIGN.md §12); 0 = exact "
                          "greedy argmax (the default). Sampled streams are "

@@ -70,7 +70,7 @@ class Simulator(RuntimeCore):
                  fault_plan=None, tenants=None, admission=False,
                  deflection=None, speculate: int = 0,
                  spec_accept: float = 0.8, spec_draft_frac: float = 0.5,
-                 seed: int = 0):
+                 seed: int = 0, health=False):
         """``profiles`` (iid -> InstanceProfile) enables heterogeneous
         clusters (paper §8): per-instance cost models + a per-instance-fitted
         TTFT predictor; ``profile`` is the homogeneous default (elastic
@@ -85,7 +85,10 @@ class Simulator(RuntimeCore):
         (``arrow_deflect``, DESIGN.md §11). ``speculate=k`` models
         self-speculative decoding (DESIGN.md §12): decode iterations cost
         ``CostModel.spec_iteration_time`` and emit multiple tokens per
-        round with per-draft acceptance ``spec_accept``."""
+        round with per-draft acceptance ``spec_accept``. ``health`` (bool or
+        a ``HealthConfig``) arms the self-healing layer (DESIGN.md §14):
+        straggler quarantine, the transfer retry ladder and SLO-aware
+        preemption."""
         self.cfg = cfg
         self._spawn_profile = profile
         self._token_budget = token_budget
@@ -125,7 +128,8 @@ class Simulator(RuntimeCore):
                            tenants=tenants, admission=admission,
                            deflection=deflection, run_seed=seed,
                            prefix_reuse=("block" if cfg.family == "dense"
-                                         else "exact"))
+                                         else "exact"),
+                           health=health)
         self.locals: Dict[int, LocalScheduler] = {
             i: LocalScheduler(i, token_budget=token_budget,
                               kv_capacity_tokens=self.costs[i].kv_capacity_tokens())
@@ -173,15 +177,30 @@ class Simulator(RuntimeCore):
 
     def _begin_transfer(self, rid: int, dst: int, kv: int, rem: int) -> bool:
         # reserve memory now; data lands after the (async DMA) transfer delay
-        loc = self.locals[dst]
-        loc.kv_used += kv
+        self.locals[dst].kv_used += kv
+        self._launch_transfer(rid, dst, kv, rem, delay=0.0)
+        return True
+
+    def _launch_transfer(self, rid: int, dst: int, kv: int, rem: int,
+                         delay: float) -> None:
+        """Schedule one transfer attempt (§14 retry ladder: ``delay`` is the
+        backoff before a retry). The attempt's fate is decided now — dropped
+        under an active droptransfer window, or timed out when the (possibly
+        netslow-inflated) duration exceeds the per-transfer timeout — and a
+        failed attempt surfaces at the moment the failure would be noticed:
+        the timeout, or the would-be landing time."""
         dur = self.costs[dst].transfer_time_bytes(
             self.costs[dst].migration_bytes(kv))
+        dur *= self.netslow_factor(self._now)        # degraded interconnect
+        failed = self.xfer_should_drop(self._now)
+        if self.health_cfg is not None and \
+                dur > self.health_cfg.xfer_timeout_s:
+            failed = True
+            dur = self.health_cfg.xfer_timeout_s
         seq = next(self._xfer_seq)
         self._live_xfer[rid] = seq
-        self._push(self._now + dur, self._on_migration_done,
-                   dst, rid, kv, rem, seq)
-        return True
+        self._push(self._now + delay + dur, self._on_migration_done,
+                   dst, rid, kv, rem, seq, failed)
 
     def _abort_transfer(self, rid: int, dst: int, kv: int) -> None:
         # crash abort (§8): undo the destination reservation; the pending
@@ -409,10 +428,22 @@ class Simulator(RuntimeCore):
             self.admit_migrations(target)
 
     def _on_migration_done(self, dst: int, rid: int, kv: int, rem: int,
-                           seq: int = 0) -> None:
+                           seq: int = 0, failed: bool = False) -> None:
         if self._live_xfer.get(rid) != seq:  # aborted by a crash (§8)
             return
         self._live_xfer.pop(rid, None)
+        if failed:                           # dropped/timed out attempt (§14)
+            attempt = self.note_xfer_drop(rid)
+            if attempt <= self.xfer_retry_budget():
+                # source KV is retained until acknowledged, so retry is
+                # always safe; bounded exponential backoff between attempts
+                self.health_stats["xfer_retries"] += 1
+                self._launch_transfer(rid, dst, kv, rem,
+                                      delay=self.xfer_backoff(attempt))
+            else:
+                self.locals[dst].kv_used -= kv   # undo the reservation
+                self.fail_transfer(rid, dst, kv, self._now)
+            return
         self.locals[dst].kv_used -= kv       # admit_migrated re-adds
         self._record_migration(rid, kv,
                                int(self.costs[dst].migration_bytes(kv)))
@@ -421,7 +452,10 @@ class Simulator(RuntimeCore):
     def _on_monitor_tick(self) -> None:
         now = self._now
         self.collect_stats(now)
-        if self._heap:                     # keep ticking while events remain
+        # keep ticking while events remain — or while a quarantined
+        # instance awaits its probation/escalation decision (§14), which
+        # only the tick can deliver
+        if self._heap or self.pools.degraded_ids():
             self._push(now + self.sched_cfg.monitor_interval,
                        self._on_monitor_tick)
         else:

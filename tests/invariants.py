@@ -10,9 +10,11 @@ fault/chaos tests (tests/test_faults.py) assert it after *every* step:
      footprints + decode contexts + retained prefixes + KV parked for
      outbound migrations + reservations for transfers in flight toward it.
   2. **Never schedule on non-ACTIVE** — WARMING instances hold no work at
-     all; FAILED corpses are empty and hold no KV; RETIRING instances have
-     an empty migration queue (evacuated at begin_retire, nothing new may
-     be enqueued); no live request points at a WARMING/FAILED instance.
+     all; FAILED corpses are empty and hold no KV; RETIRING and DEGRADED
+     (quarantined, DESIGN.md §14) instances have an empty migration queue
+     (evacuated at begin_retire/quarantine, nothing new may be enqueued);
+     no live request points at a WARMING/FAILED instance (pointing at a
+     DEGRADED one is legal — pre-quarantine prefill drains in place).
   3. **Prefix-pin refcounts sane** — pins are never negative, entries
      doomed by invalidation are pinned (else they would have been freed),
      and every live entry matches the owning scheduler's ``retained``
@@ -71,8 +73,10 @@ def check_invariants(runtime, *, streams: bool = True) -> None:
         if life is Lifecycle.WARMING:
             if loc.prefill_queue or loc.decode_running or loc.migration_queue:
                 _fail(runtime, iid, "WARMING instance holds work")
-        if life is Lifecycle.RETIRING and loc.migration_queue:
-            _fail(runtime, iid, "RETIRING instance has queued migrations")
+        if life in (Lifecycle.RETIRING, Lifecycle.DEGRADED) and \
+                loc.migration_queue:
+            _fail(runtime, iid,
+                  f"{life.value} instance has queued migrations")
         if loc.kv_used < 0:
             _fail(runtime, iid, f"negative kv_used {loc.kv_used}")
         exp = _expected_kv(runtime, iid, loc)

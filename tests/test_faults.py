@@ -36,6 +36,49 @@ def test_fault_plan_parse_grammar():
         FaultPlan.parse("crash@3:sev=9")
 
 
+def test_fault_plan_parse_transfer_fault_grammar():
+    """§14 transient-fault events ride the same grammar: droptransfer
+    windows (probability + duration) and netslow windows (factor +
+    duration)."""
+    p = FaultPlan.parse("droptransfer@5:p=0.5,duration=3;"
+                        "netslow@8:factor=4,duration=2")
+    assert [e.kind for e in p.events] == ["droptransfer", "netslow"]
+    assert p.events[0].p == 0.5 and p.events[0].duration == 3.0
+    assert p.events[1].factor == 4.0 and p.events[1].duration == 2.0
+
+
+def test_fault_plan_rejects_invalid_values():
+    """ISSUE 10 satellite: negative times and non-positive factor/duration/p
+    are configuration bugs — rejected with descriptive errors at parse time,
+    not silently scheduled as events that never fire (or divide by zero)."""
+    with pytest.raises(ValueError, match="time must be >= 0"):
+        FaultPlan.parse("crash@-1")
+    with pytest.raises(ValueError, match="factor=0.0 must be > 0"):
+        FaultPlan.parse("slow@3:factor=0")
+    with pytest.raises(ValueError, match="duration=-2.0 must be > 0"):
+        FaultPlan.parse("slow@3:duration=-2")
+    with pytest.raises(ValueError, match="p=0.0 must be > 0"):
+        FaultPlan.parse("droptransfer@3:p=0")
+    with pytest.raises(ValueError, match="factor=-4.0 must be > 0"):
+        FaultPlan.parse("netslow@3:factor=-4,duration=2")
+
+
+def test_monitor_drops_samples_for_removed_instances():
+    """ISSUE 10 satellite: a straggling ``record_iteration``/``update_stats``
+    for an instance already removed (the async engine step can finalize an
+    iteration after crash teardown) is dropped silently, never a KeyError."""
+    from repro.core.monitor import InstanceMonitor, InstanceStats
+    m = InstanceMonitor([0, 1])
+    m.record_iteration(0, 1.0, 2, 0.01)
+    m.remove_instance(1)
+    m.record_iteration(1, 1.0, 2, 0.01)       # removed: dropped
+    m.record_iteration(7, 1.0, 2, 0.01)       # never known: dropped
+    m.update_stats(InstanceStats(1))          # scrape raced removal: dropped
+    m.update_stats(InstanceStats(7))
+    assert 1 not in m.stats and 7 not in m.stats
+    assert m.avg_token_interval(0) == pytest.approx(0.01)
+
+
 def test_fault_plan_random_is_seed_deterministic():
     a = FaultPlan.random_crashes(3, 100.0, seed=7)
     b = FaultPlan.random_crashes(3, 100.0, seed=7)

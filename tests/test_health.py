@@ -1,0 +1,724 @@
+"""Self-healing layer (ISSUE 10, DESIGN.md §14): DEGRADED lifecycle guards,
+peer-median straggler detection with hysteresis/probation/escalation, the
+bounded transfer retry ladder on both backends (including checksum corruption
+on the engine), SLO-aware preemption at the §5.4 memory gate, sim/engine
+parity at state barriers, and the health-off byte-identity guarantee."""
+import numpy as np
+import pytest
+from invariants import check_invariants
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import (FaultPlan, HealthConfig, InstancePools, Lifecycle,
+                        Pool, Request, SLO)
+from repro.core.request import RequestState
+from repro.core.serving import replay_trace
+from repro.sim import Simulator
+
+CFG = get_config("gemma-2b")
+
+
+# --------------------------------------------------------------- helpers
+
+
+def barrier_sim(n_instances=2, n_prefill=1, n_requests=4, output_lens=None,
+                **kw):
+    """Arrow sim driven until every request decodes on instance 1 (decode
+    placement deterministically concentrates there: scraped running-tokens
+    are all zero between ticks, so ties break to the lowest decode id) with
+    >= 2 tokens streamed and none finished — the deterministic state barrier
+    the health tests fire quarantine/retire/faults from."""
+    sim = Simulator(CFG, n_instances=n_instances, n_prefill=n_prefill,
+                    policy="arrow", slo=SLO(5.0, 2.0), **kw)
+    lens = output_lens or [8] * n_requests
+    trace = [Request(rid=i, arrival=0.0, input_len=24, output_len=lens[i])
+             for i in range(n_requests)]
+    handles = replay_trace(sim, trace)
+    for _ in range(100000):
+        if all(h.req.state is RequestState.DECODING
+               and h.req.decode_instance == 1
+               and 2 <= len(h.tokens) < h.req.output_len for h in handles):
+            break
+        assert sim.step(), "sim drained before the mid-decode barrier"
+    return sim, handles
+
+
+def feed_intervals(system, t, victim, slow=0.060, fast=0.006, band=None):
+    """Inject one synthetic TPOT sample per ACTIVE instance and tick the
+    monitor (collect_stats runs the HealthMonitor right after the scrape).
+    ``band`` overrides the victim's interval (hysteresis-band probing)."""
+    for iid in system.pools.active_ids():
+        iv = (band if band is not None else slow) if iid == victim else fast
+        system.monitor.record_iteration(iid, t, 1, iv)
+    system.collect_stats(t)
+
+
+# --------------------------------------- DEGRADED lifecycle (core/pools)
+
+
+def test_degraded_lifecycle_guards():
+    pools = InstancePools(range(4), n_prefill=2)
+    pools.degrade(2)                                 # ACTIVE -> DEGRADED
+    assert pools.lifecycle_of(2) is Lifecycle.DEGRADED
+    assert pools.degraded_ids() == [2]
+    # never schedulable, but still a live member of the cluster
+    assert 2 not in pools.prefill_capable() + pools.decode_capable()
+    assert 2 not in pools.active_ids() and 2 in pools.all_ids()
+    with pytest.raises(ValueError, match="cannot quarantine instance 2"):
+        pools.degrade(2)                             # already DEGRADED
+    pools.restore(2)                                 # probation passed
+    assert pools.lifecycle_of(2) is Lifecycle.ACTIVE
+    assert 2 in pools.decode_capable()
+    with pytest.raises(ValueError, match="cannot restore instance 2"):
+        pools.restore(2)                             # not DEGRADED anymore
+    pools.begin_retire(3)
+    with pytest.raises(ValueError, match="cannot quarantine instance 3"):
+        pools.degrade(3)                             # RETIRING is terminal
+    # escalation path: a DEGRADED instance may hard-fail and be removed
+    pools.degrade(2)
+    pools.fail(2)
+    assert pools.lifecycle_of(2) is Lifecycle.FAILED
+    pools.remove_instance(2)
+    assert pools.degraded_ids() == [] and 2 not in pools.all_ids()
+
+
+# ------------------------------- straggler detection / quarantine (sim)
+
+
+def test_straggler_quarantined_evacuated_and_restored():
+    """End-to-end §14 loop on the simulator: a sustained straggler is
+    quarantined after ``sustain_s``, its decode residents are drained away
+    through the migration manager, and probation re-admits it to ACTIVE —
+    with every stream completing untouched."""
+    sim, handles = barrier_sim(n_instances=4, n_prefill=1, health=True)
+    for i in sim.pools.all_ids():
+        sim.monitor.reset_intervals(i)      # synthetic samples only
+    t0 = sim.clock.now()
+    quarantined_at = None
+    for k in range(1, 60):
+        t = t0 + 0.1 * k
+        feed_intervals(sim, t, victim=1)
+        if sim.pools.lifecycle_of(1) is Lifecycle.DEGRADED:
+            quarantined_at = t
+            break
+    assert quarantined_at is not None, "straggler never quarantined"
+    # the sustain clock armed on the first slow sample: quarantine fires on
+    # the first tick >= sustain_s later
+    assert quarantined_at - (t0 + 0.1) == pytest.approx(
+        sim.health_cfg.sustain_s, abs=0.1001)
+    assert 1 not in sim.pools.decode_capable()
+    assert not sim.locals[1].decode_running, "residents not evacuated"
+    for h in handles:                        # planned move, not a crash
+        assert h.req.state in (RequestState.MIGRATING, RequestState.DECODING)
+    check_invariants(sim)
+    rep = sim.drain()                        # ticks re-arm while DEGRADED
+    assert rep.n_finished == len(handles)
+    for h in handles:
+        assert len(h.tokens) == h.req.output_len
+        assert h.req.recoveries == 0         # KV moved intact, never lost
+    assert sim.pools.lifecycle_of(1) is Lifecycle.ACTIVE  # probation passed
+    assert rep.health["quarantines"] == 1
+    assert rep.health["restores"] == 1
+    assert rep.health.get("escalations", 0) == 0
+    check_invariants(sim)
+
+
+def test_transient_slowdown_never_quarantines():
+    """A blip shorter than ``sustain_s`` clears the sustain clock (the score
+    drops below ``clear_factor`` x median) and must not quarantine."""
+    sim, _ = barrier_sim(n_instances=4, n_prefill=1, health=True)
+    for i in sim.pools.all_ids():
+        sim.monitor.reset_intervals(i)
+    t0 = sim.clock.now()
+    for k in range(1, 50):
+        t = t0 + 0.1 * k
+        # 0.3s at 3.3x the peer median: the windowed average decays below
+        # clear_factor x median well before sustain_s elapses
+        feed_intervals(sim, t, victim=1, band=0.020 if k <= 3 else 0.006)
+    assert sim.pools.degraded_ids() == []
+    assert sim.health_stats["quarantines"] == 0
+
+
+def test_hysteresis_band_keeps_sustain_clock_running():
+    """Once armed at >= ``straggler_factor`` x median, a score lingering in
+    the hysteresis band (between ``clear_factor`` and ``straggler_factor``
+    x median) keeps the sustain clock running — flapping just under the arm
+    threshold cannot dodge quarantine."""
+    sim, _ = barrier_sim(n_instances=4, n_prefill=1, health=True)
+    for i in sim.pools.all_ids():
+        sim.monitor.reset_intervals(i)
+    t0 = sim.clock.now()
+    for k in range(1, 60):
+        t = t0 + 0.1 * k
+        # two samples above 3x median arm the clock; then the windowed score
+        # settles at ~2.5x median — inside the 1.5x..3x band, never clearing
+        feed_intervals(sim, t, victim=1, band=0.020 if k <= 2 else 0.015)
+        if sim.pools.lifecycle_of(1) is Lifecycle.DEGRADED:
+            break
+    assert sim.pools.lifecycle_of(1) is Lifecycle.DEGRADED
+
+    # complement: dipping below clear_factor x median resets the clock, and
+    # band-level samples alone never re-arm it
+    sim2, _ = barrier_sim(n_instances=4, n_prefill=1, health=True)
+    for i in sim2.pools.all_ids():
+        sim2.monitor.reset_intervals(i)
+    t0 = sim2.clock.now()
+    for k in range(1, 60):
+        t = t0 + 0.1 * k
+        # arm briefly, clear with fast samples, then sit at 2x median
+        band = 0.020 if k <= 2 else (0.006 if k <= 10 else 0.012)
+        feed_intervals(sim2, t, victim=1, band=band)
+    assert sim2.pools.degraded_ids() == []
+    assert sim2.health_stats["quarantines"] == 0
+
+
+def test_median_baseline_needs_peers_and_resists_self_drag():
+    """Below ``min_peers`` baselines the detector stays silent; and with the
+    straggler itself dominating the sample set, the *median* baseline keeps
+    its own slowness from reading as peer-relative deviation."""
+    # two instances with data < min_peers=3: never quarantines
+    sim, _ = barrier_sim(n_instances=2, n_prefill=1, health=True)
+    for i in sim.pools.all_ids():
+        sim.monitor.reset_intervals(i)
+    t0 = sim.clock.now()
+    for k in range(1, 40):
+        feed_intervals(sim, t0 + 0.1 * k, victim=1)
+    assert sim.health_stats["quarantines"] == 0
+
+    # min_peers=1, only the victim has samples: the median IS its own
+    # interval, so it can never be straggler_factor x above it
+    sim2, _ = barrier_sim(n_instances=4, n_prefill=1,
+                          health=HealthConfig(min_peers=1))
+    for i in sim2.pools.all_ids():
+        sim2.monitor.reset_intervals(i)
+    t0 = sim2.clock.now()
+    for k in range(1, 40):
+        t = t0 + 0.1 * k
+        sim2.monitor.record_iteration(1, t, 1, 0.060)   # victim only
+        sim2.collect_stats(t)
+    assert sim2.health_stats["quarantines"] == 0
+
+
+def test_relapsing_straggler_escalates_to_failure():
+    """An instance that keeps re-tripping detection after each probation
+    re-admission stays inside one episode; past ``deadline_s`` the monitor
+    gives up and hard-fails it (§8 teardown)."""
+    hc = HealthConfig(sustain_s=0.5, probation_s=0.5, deadline_s=3.0)
+    sim = Simulator(CFG, n_instances=4, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), health=hc)
+    t0 = 0.0
+    for k in range(1, 200):
+        t = t0 + 0.1 * k
+        # escalation hard-fails the instance; the corpse is finalized (and
+        # removed from the pools entirely) by the same tick
+        if 1 not in sim.pools.all_ids() or \
+                sim.pools.lifecycle_of(1) is Lifecycle.FAILED:
+            break
+        feed_intervals(sim, t, victim=1)     # active_ids skips it while DEGRADED
+    assert sim.health_stats["escalations"] == 1
+    assert sim.health_stats["quarantines"] >= 2      # it relapsed
+    assert sim.health_stats["restores"] >= 1
+    sim.collect_stats(sim.clock.now())               # bury the corpse
+    assert 1 not in sim.pools.all_ids()
+
+
+def test_episode_closes_after_clean_probation():
+    """One quarantine, then clean behaviour after re-admission: the episode
+    closes after ``sustain_s`` clean and the deadline never fires."""
+    hc = HealthConfig(sustain_s=0.5, probation_s=0.5, deadline_s=3.0)
+    sim = Simulator(CFG, n_instances=4, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), health=hc)
+    relapsed = False
+    for k in range(1, 100):
+        t = 0.1 * k
+        if sim.health_stats["restores"] >= 1:
+            relapsed = True                  # healthy from here on
+        feed_intervals(sim, t, victim=1, band=0.006 if relapsed else None)
+    assert sim.health_stats["quarantines"] == 1
+    assert sim.health_stats["restores"] == 1
+    assert sim.health_stats["escalations"] == 0
+    assert sim.pools.lifecycle_of(1) is Lifecycle.ACTIVE
+    assert sim.health_monitor._episode_start == {}   # episode closed
+
+
+# ----------------------------------- transfer retry ladder (sim backend)
+
+
+def test_sim_retry_ladder_recovers_within_budget():
+    """A short droptransfer window fails the first attempt of each
+    evacuation transfer; bounded backoff retries land after the window —
+    no transfer exhausts its budget and no request pays a re-prefill."""
+    sim, handles = barrier_sim(n_instances=4, n_prefill=1, health=True)
+    now = sim.clock.now()
+    sim.apply_transfer_drop(1.0, now + 1e-9)   # only launches at `now` drop
+    sim.begin_retire(1, now)
+    rep = sim.drain()
+    n = len(handles)
+    assert rep.health["xfer_drops"] >= n                 # first attempts
+    assert rep.health["xfer_retries"] == rep.health["xfer_drops"]
+    assert rep.health["xfer_failures"] == 0
+    assert rep.n_finished == n
+    for h in handles:
+        assert len(h.tokens) == h.req.output_len
+        assert h.req.recoveries == 0           # the ladder saved the KV move
+    check_invariants(sim)
+
+
+def test_sim_retry_ladder_exhausts_to_reprefill_recovery():
+    """Every attempt drops (window outlives the whole ladder): after
+    ``xfer_retries`` retries the source copy is released and the request
+    falls through to §8 re-prefill recovery — streams stay token-exact."""
+    sim, handles = barrier_sim(n_instances=2, n_prefill=1, health=True)
+    now = sim.clock.now()
+    sim.apply_transfer_drop(1.0, now + 9999.0)
+    sim.begin_retire(1, now)
+    rep = sim.drain()
+    n = len(handles)
+    budget = sim.health_cfg.xfer_retries
+    assert rep.health["xfer_drops"] == n * (budget + 1)
+    assert rep.health["xfer_retries"] == n * budget
+    assert rep.health["xfer_failures"] == n
+    assert rep.n_finished == n
+    for h in handles:
+        assert len(h.tokens) == h.req.output_len
+        assert h.req.recoveries == 1
+    assert 1 not in sim.pools.all_ids()        # retire finalized regardless
+    check_invariants(sim)
+
+
+def test_sim_netslow_timeout_fails_transfer():
+    """A degraded interconnect inflates transfer durations past the
+    per-transfer timeout: each attempt times out, the ladder exhausts, and
+    re-prefill recovery completes the streams."""
+    hc = HealthConfig(xfer_timeout_s=0.001)
+    sim, handles = barrier_sim(n_instances=2, n_prefill=1, health=hc)
+    now = sim.clock.now()
+    sim.apply_netslow(1e6, now + 9999.0)
+    sim.begin_retire(1, now)
+    rep = sim.drain()
+    n = len(handles)
+    assert rep.health["xfer_drops"] == n * (hc.xfer_retries + 1)
+    assert rep.health["xfer_failures"] == n
+    assert rep.n_finished == n
+    assert all(h.req.recoveries == 1 for h in handles)
+    check_invariants(sim)
+
+
+def test_health_off_drop_falls_straight_to_recovery():
+    """Without ``--health`` the retry budget is zero: a dropped transfer is
+    not retried — it falls straight through to re-prefill recovery (the
+    detection-off baseline bench_chaos measures against). The droptransfer
+    window arrives through the FaultPlan grammar and the real FaultInjector
+    here, fired at the state barrier (timed windows during placement would
+    make every initial decode migration loop through recovery instead)."""
+    from repro.core import FaultInjector
+    plan = FaultPlan.parse("droptransfer@0:p=1,duration=9999")
+    sim, handles = barrier_sim(n_instances=2, n_prefill=1, health=False)
+    FaultInjector(plan, sim).poll(sim.clock.now())
+    sim.begin_retire(1, sim.clock.now())
+    rep = sim.drain()
+    n = len(handles)
+    assert rep.health["xfer_drops"] == n == rep.health["xfer_failures"]
+    assert rep.health["xfer_retries"] == 0
+    assert rep.n_finished == n
+    assert all(h.req.recoveries == 1 for h in handles)
+    assert all(len(h.tokens) == h.req.output_len for h in handles)
+    check_invariants(sim)
+
+
+# ------------------------------------ SLO-aware preemption (§5.4 gate)
+
+
+def preemption_blocked_gate(system, collect_now, unclamp=True):
+    """Shared driver: two residents on instance 1 (rid 0 short, rid 1 long),
+    one on instance 2 (rid 2); clamp instance 1's KV capacity so rid 2's
+    evacuation migration blocks the §5.4 gate, then retire instance 2.
+    ``unclamp`` restores the real capacity afterwards so the preempted
+    victim's re-admission can't re-block the gate (keeps the victim set a
+    single deterministic request)."""
+    lens = {0: 8, 1: 32, 2: 8}
+    handles = [system.submit(Request(rid=i, arrival=0.0, input_len=24,
+                                     output_len=lens[i]))
+               for i in (0, 1)]
+    for _ in range(100000):
+        if all(h.req.state is RequestState.DECODING
+               and h.req.decode_instance == 1
+               and 2 <= len(h.tokens) < h.req.output_len for h in handles):
+            break
+        assert system.step(), "drained before the two-resident barrier"
+    # scrape now so decode placement sees instance 1 loaded -> rid 2 lands
+    # on instance 2 (stale all-zero stats would tie-break back onto 1)
+    system.collect_stats(collect_now())
+    handles.append(system.submit(Request(rid=2, arrival=0.0, input_len=24,
+                                         output_len=8)))
+    for _ in range(100000):
+        h = handles[2]
+        if h.req.state is RequestState.DECODING \
+                and h.req.decode_instance == 2 and len(h.tokens) >= 2:
+            break
+        assert system.step(), "rid 2 never decoded on instance 2"
+    loc1 = system.local_of(1)
+    kv2 = system.local_of(2).decode_running[2].context_len
+    # blocked by exactly one token: any preempted resident frees enough
+    real_capacity = loc1.kv_capacity
+    loc1.kv_capacity = loc1.kv_used + kv2 - 1
+    system.begin_retire(2, system.clock.now())   # evacuation targets only 1
+    if unclamp:
+        loc1.kv_capacity = real_capacity
+    return handles
+
+
+def test_preemption_frees_blocked_memory_gate_sim():
+    """The §5.4 gate refuses rid 2's evacuation migration and eviction can't
+    help (no prefix cache): preemption releases the lowest-value resident —
+    rid 1, the one with the most remaining output (least sunk progress) —
+    and re-dispatches it through §8 recovery. Streams stay token-exact."""
+    sim = Simulator(CFG, n_instances=3, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0),
+                    health=HealthConfig(preemption=True))
+    handles = preemption_blocked_gate(sim, lambda: sim.clock.now())
+    assert sim.health_stats["preemptions"] == 1
+    assert handles[1].req.recoveries == 1      # the long-remaining victim
+    assert handles[0].req.recoveries == 0
+    assert handles[2].req.recoveries == 0      # the migration was admitted
+    rep = sim.drain()
+    assert rep.n_finished == 3
+    assert all(len(h.tokens) == h.req.output_len for h in handles)
+    assert rep.health["preemptions"] == 1
+    check_invariants(sim)
+
+
+def test_preemption_disabled_gate_stays_blocked():
+    """health on but preemption off (the default): the blocked gate refuses
+    the migration and nothing is preempted — the §5.4 behaviour of PR 9."""
+    sim = Simulator(CFG, n_instances=3, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), health=True)
+    handles = preemption_blocked_gate(sim, lambda: sim.clock.now(),
+                                      unclamp=False)
+    assert sim.health_stats["preemptions"] == 0
+    assert all(h.req.recoveries == 0 for h in handles)
+    assert sim.locals[1].migration_queue       # still parked at the gate
+    # rids 0/1 finishing frees KV; the FCFS gate then admits rid 2
+    rep = sim.drain()
+    assert rep.n_finished == 3
+    assert all(len(h.tokens) == h.req.output_len for h in handles)
+    check_invariants(sim)
+
+
+def test_preemption_victim_ordering():
+    """Victim selection is (tenant credits asc, tier batch-first, remaining
+    desc, rid): broke tenants before funded ones, batch before interactive,
+    longest-remaining (least sunk progress) first."""
+    from repro.core.tenants import TenantRegistry
+    reg = TenantRegistry()
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), tenants=reg,
+                    health=HealthConfig(preemption=True))
+    loc = sim.locals[1]
+    tiers = {0: "interactive", 1: "standard", 2: "batch", 3: "batch"}
+    for rid in range(4):
+        sim.submit(Request(rid=rid, arrival=1e9, input_len=8, output_len=4),
+                   tier=tiers[rid], tenant_id=f"t{rid}")
+        loc.start_local_decode(rid, 100, 50 if rid == 3 else 10)
+    key = lambda rid: sim._preemption_key(rid, loc)  # noqa: E731
+    # equal credits: batch tier first, longest remaining breaks the tie
+    assert min(loc.decode_running, key=key) == 3
+    # a broke tenant outranks tier: its interactive request goes first
+    reg.ledger._balance["t0"] = -50.0
+    assert min(loc.decode_running, key=key) == 0
+
+
+def test_preemption_rate_limiter_refuses_thrash():
+    """At most ``preempt_limit`` preemptions per instance per window: a full
+    window refuses further preemptions (counted, no side effects) until
+    entries age out."""
+    from collections import deque
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0),
+                    health=HealthConfig(preemption=True, preempt_limit=1,
+                                        preempt_window_s=10.0))
+    loc = sim.locals[1]
+    sim.submit(Request(rid=0, arrival=1e9, input_len=8, output_len=4))
+    loc.start_local_decode(0, 100, 4)
+    sim._preempt_log[1] = deque([sim.clock.now()])   # window already full
+    assert sim._maybe_preempt(1, loc) is False
+    assert sim.health_stats["preempt_refused"] == 1
+    assert sim.health_stats["preemptions"] == 0
+    assert 0 in loc.decode_running                   # resident untouched
+
+
+# ------------------------------------------------ engine + parity tests
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.models import build_model
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = build_model(cfg).init(jax.random.PRNGKey(7))
+    return cfg, params
+
+
+def greedy_reference(cfg, model, params, prompt, n_new):
+    import jax
+    import jax.numpy as jnp
+    batch = {"tokens": jnp.asarray(prompt, jnp.int32)[None]}
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_capacity=128))(params, batch)
+    toks = [int(jnp.argmax(logits[0, len(prompt) - 1, :cfg.vocab_size]))]
+    step = jax.jit(model.decode)
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        db = {"token": jnp.asarray([[toks[-1]]], jnp.int32),
+              "pos": jnp.asarray([pos], jnp.int32)}
+        logits, cache = step(params, cache, db)
+        toks.append(int(jnp.argmax(logits[0, 0, :cfg.vocab_size])))
+        pos += 1
+    return toks
+
+
+def test_state_checksum_detects_corruption():
+    from repro.engine.instance import state_checksum
+    payload = [np.arange(64, dtype=np.float32).reshape(8, 8),
+               np.arange(16, dtype=np.int32)]
+    ref = state_checksum(payload)
+    assert ref == state_checksum([np.array(p, copy=True) for p in payload])
+    flipped = [np.array(p, copy=True) for p in payload]
+    flipped[0].view(np.uint8).reshape(-1)[0] ^= 0xFF
+    assert state_checksum(flipped) != ref
+
+
+def test_engine_import_rejects_corrupt_payload_pre_alloc(engine_setup):
+    """A checksum mismatch raises before slot allocation: the importer's
+    slot set and KV books are untouched, so the sender can simply retry."""
+    from repro.engine.instance import (CorruptPayload, EngineInstance,
+                                       state_checksum)
+    cfg, params = engine_setup
+    a = EngineInstance(0, cfg, params, n_slots=2, capacity=128)
+    b = EngineInstance(1, cfg, params, n_slots=2, capacity=128)
+    prompt = np.arange(1, 25, dtype=np.int32)
+    a.run_prefill(7, prompt)
+    a.local.start_local_decode(7, len(prompt), 4)
+    a.run_decode_iteration([7])
+    payload, L, last, gen = a.export_state(7)
+    good = state_checksum(payload)
+    wire = [np.array(np.asarray(p), copy=True) for p in payload]
+    wire[0].view(np.uint8).reshape(-1)[0] ^= 0xFF
+    with pytest.raises(CorruptPayload):
+        b.import_state(7, wire, L, last, list(gen), checksum=good)
+    assert 7 not in b.kv.slot_of                  # nothing allocated
+    assert b.import_state(7, payload, L, last, list(gen), checksum=good)
+    assert 7 in b.kv.slot_of                      # clean retry lands
+
+
+def engine_barrier(eng, handles):
+    for _ in range(100000):
+        if all(h.req.state is RequestState.DECODING
+               and h.req.decode_instance == 1
+               and 2 <= len(h.tokens) < h.req.output_len for h in handles):
+            break
+        assert eng.step(), "engine drained before the mid-decode barrier"
+
+
+def test_sim_engine_quarantine_parity(engine_setup):
+    """Acceptance (ISSUE 10): identical synthetic TPOT samples at a state
+    barrier produce the *same quarantine decision on the same tick* on both
+    backends, and the engine's evacuated streams match the unfaulted greedy
+    reference after restore."""
+    from repro.engine import ArrowEngineCluster
+    from repro.models import build_model
+    cfg, params = engine_setup
+    hc = HealthConfig(probation_s=0.2, deadline_s=1e9)
+    trace = [Request(rid=i, arrival=0.0, input_len=24, output_len=8)
+             for i in range(3)]
+    rng = np.random.default_rng(3)
+    prompts = {r.rid: rng.integers(1, cfg.vocab_size, size=24).astype(
+        np.int32) for r in trace}
+
+    def quarantine_tick(system):
+        # absolute synthetic tick times on both backends: the HealthMonitor
+        # only compares injected times against each other, and anchoring at
+        # the engine's (large) wall clock would round the sustain comparison
+        # differently than the sim's small virtual clock
+        for i in system.pools.all_ids():
+            system.monitor.reset_intervals(i)
+        for k in range(1, 60):
+            feed_intervals(system, 0.1 * k, victim=1)
+            if system.pools.lifecycle_of(1) is Lifecycle.DEGRADED:
+                return k
+        return None
+
+    sim = Simulator(CFG, n_instances=4, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), health=hc)
+    h_sim = replay_trace(sim, trace)
+    engine_barrier(sim, h_sim)
+    k_sim = quarantine_tick(sim)
+
+    eng = ArrowEngineCluster(cfg, n_instances=4, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params,
+                             health=hc)
+    h_eng = [eng.submit(Request(rid=r.rid, arrival=0.0, input_len=24,
+                                output_len=8), prompt=prompts[r.rid])
+             for r in trace]
+    engine_barrier(eng, h_eng)
+    k_eng = quarantine_tick(eng)
+
+    assert k_sim is not None and k_sim == k_eng   # same decision, same tick
+    assert sim.pools.degraded_ids() == eng.pools.degraded_ids() == [1]
+
+    # the decision parity is established; drain records *real* engine
+    # iteration intervals (machine-load dependent), so raise the detection
+    # threshold out of reach on both backends — otherwise a loaded CI box
+    # can legitimately re-quarantine mid-drain and break quarantines == 1
+    proof = HealthConfig(straggler_factor=1e9, clear_factor=1e8,
+                         probation_s=0.2, deadline_s=1e9)
+    sim.health_monitor.cfg = proof
+    eng.health_monitor.cfg = proof
+
+    rep_sim = sim.drain()
+    rep_eng = eng.drain(timeout=300.0)
+    # re-admission: the sim's tick events re-arm while DEGRADED; drive the
+    # engine's monitor explicitly past probation. Continue the synthetic
+    # tick series — on a warm-cache machine the whole run can finish in
+    # under probation_s of *wall* time, so waiting on eng.clock.now() to
+    # pass the synthetic probation deadline would hang at DEGRADED forever
+    for k in range(200):
+        if eng.pools.lifecycle_of(1) is Lifecycle.ACTIVE:
+            break
+        eng.collect_stats(0.1 * (60 + k))
+    for system, rep in ((sim, rep_sim), (eng, rep_eng)):
+        assert rep.n_finished == len(trace)
+        assert system.health_stats["quarantines"] == 1
+        assert system.pools.lifecycle_of(1) is Lifecycle.ACTIVE
+        check_invariants(system)
+    model = build_model(cfg)
+    for h in h_eng:                 # evacuation is transparent to content
+        ref = greedy_reference(cfg, model, params, prompts[h.rid], 8)
+        assert [t for t in h.tokens] == ref, f"rid {h.rid} diverged"
+
+
+def test_sim_engine_retry_exhaustion_parity(engine_setup):
+    """Acceptance (ISSUE 10): under a total drop window the two backends
+    walk the identical retry ladder — equal drop/retry/failure counters and
+    the same recovered-rid set — and every engine stream (re-prefilled
+    through §8 recovery) equals the unfaulted greedy reference."""
+    from repro.engine import ArrowEngineCluster
+    from repro.models import build_model
+    cfg, params = engine_setup
+    trace = [Request(rid=i, arrival=0.0, input_len=24, output_len=8)
+             for i in range(3)]
+    rng = np.random.default_rng(5)
+    prompts = {r.rid: rng.integers(1, cfg.vocab_size, size=24).astype(
+        np.int32) for r in trace}
+
+    def drive(system, handles):
+        engine_barrier(system, handles)
+        now = system.clock.now()
+        system.apply_transfer_drop(1.0, now + 9999.0)
+        system.begin_retire(1, now)
+        return system.drain(timeout=300.0)
+
+    sim = Simulator(CFG, n_instances=2, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0), health=True)
+    rep_sim = drive(sim, replay_trace(sim, trace))
+
+    eng = ArrowEngineCluster(cfg, n_instances=2, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params,
+                             health=True)
+    h_eng = [eng.submit(Request(rid=r.rid, arrival=0.0, input_len=24,
+                                output_len=8), prompt=prompts[r.rid])
+             for r in trace]
+    rep_eng = drive(eng, h_eng)
+
+    n, budget = len(trace), 3
+    for rep in (rep_sim, rep_eng):
+        assert rep.n_finished == n
+        for key, want in (("xfer_drops", n * (budget + 1)),
+                          ("xfer_retries", n * budget),
+                          ("xfer_failures", n)):
+            assert rep.health[key] == want, (key, rep.health)
+    assert rep_eng.health["xfer_corrupt"] == n * (budget + 1)  # engine-only
+    recovered = sorted(h.rid for h in h_eng if h.req.recoveries == 1)
+    assert recovered == [r.rid for r in trace]
+    model = build_model(cfg)
+    for h in h_eng:
+        ref = greedy_reference(cfg, model, params, prompts[h.rid], 8)
+        assert [t for t in h.tokens] == ref, f"rid {h.rid} diverged"
+    check_invariants(eng)
+
+
+def test_sim_engine_preemption_victim_parity(engine_setup):
+    """Acceptance (ISSUE 10): the same blocked-gate state picks the same
+    preemption victim on both backends, and the engine's preempted stream
+    (recovered via re-prefill) stays greedy-identical."""
+    from repro.engine import ArrowEngineCluster
+    from repro.models import build_model
+    cfg, params = engine_setup
+    sim = Simulator(CFG, n_instances=3, n_prefill=1, policy="arrow",
+                    slo=SLO(5.0, 2.0),
+                    health=HealthConfig(preemption=True))
+    h_sim = preemption_blocked_gate(sim, lambda: sim.clock.now())
+    rep_sim = sim.drain()
+
+    eng = ArrowEngineCluster(cfg, n_instances=3, n_prefill=1, n_slots=4,
+                             capacity=128, slo=SLO(5.0, 2.0), params=params,
+                             health=HealthConfig(preemption=True))
+    # the engine path needs real prompts: mirror preemption_blocked_gate
+    rng = np.random.default_rng(11)
+    prompts = {i: rng.integers(1, cfg.vocab_size, size=24).astype(np.int32)
+               for i in range(3)}
+    lens = {0: 8, 1: 32, 2: 8}
+    h_eng = [eng.submit(Request(rid=i, arrival=0.0, input_len=24,
+                                output_len=lens[i]), prompt=prompts[i])
+             for i in (0, 1)]
+    engine_barrier(eng, h_eng)
+    eng.collect_stats(eng.clock.now())
+    h_eng.append(eng.submit(Request(rid=2, arrival=0.0, input_len=24,
+                                    output_len=8), prompt=prompts[2]))
+    for _ in range(100000):
+        h = h_eng[2]
+        if h.req.state is RequestState.DECODING \
+                and h.req.decode_instance == 2 and len(h.tokens) >= 2:
+            break
+        assert eng.step(), "rid 2 never decoded on instance 2"
+    loc1 = eng.local_of(1)
+    kv2 = eng.local_of(2).decode_running[2].context_len
+    real_capacity = loc1.kv_capacity
+    loc1.kv_capacity = loc1.kv_used + kv2 - 1
+    eng.begin_retire(2, eng.clock.now())
+    loc1.kv_capacity = real_capacity
+    rep_eng = eng.drain(timeout=300.0)
+
+    victims = lambda hs: sorted(h.rid for h in hs if h.req.recoveries)  # noqa: E731
+    assert victims(h_sim) == victims(h_eng) == [1]
+    for rep in (rep_sim, rep_eng):
+        assert rep.n_finished == 3
+        assert rep.health["preemptions"] == 1
+    model = build_model(cfg)
+    for h in h_eng:
+        ref = greedy_reference(cfg, model, params, prompts[h.rid],
+                               lens[h.rid])
+        assert [t for t in h.tokens] == ref, f"rid {h.rid} diverged"
+    check_invariants(eng)
+
+
+# ------------------------------------------- health-off byte identity
+
+
+def test_health_off_and_on_identical_without_faults():
+    """Arming the layer must not perturb a healthy run: identical streams
+    and summary either way, and the health section stays empty (so reports
+    from health-off runs are byte-identical to pre-§14 builds)."""
+    def run(health):
+        sim = Simulator(CFG, n_instances=4, n_prefill=2, policy="arrow",
+                        slo=SLO(5.0, 2.0), health=health)
+        trace = [Request(rid=i, arrival=0.05 * i, input_len=64, output_len=8)
+                 for i in range(12)]
+        handles = replay_trace(sim, trace)
+        rep = sim.drain()
+        return rep, [(h.rid, len(h.tokens), h.req.finish_time)
+                     for h in handles]
+    rep_off, streams_off = run(False)
+    rep_on, streams_on = run(True)
+    assert streams_off == streams_on
+    assert rep_off.summary() == rep_on.summary()
+    assert rep_off.health == {} and rep_on.health == {}
